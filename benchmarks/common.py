@@ -1,0 +1,75 @@
+"""Shared benchmark utilities: timing, op-density reporting, CSV rows."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import core as silvia
+from repro.core import opcount
+
+
+def time_fn(fn, *args, iters: int = 5) -> float:
+    """us per call, jit-compiled, synchronized."""
+    jfn = jax.jit(fn)
+    out = jfn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jfn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def assert_equal_outputs(fn, opt_fn, args, atol=0):
+    a = jax.tree_util.tree_leaves(fn(*args))
+    b = jax.tree_util.tree_leaves(opt_fn(*args))
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x, np.float64),
+                                   np.asarray(y, np.float64), atol=atol)
+
+
+def bench_case(name: str, fn, args, passes, kind: str = "mul"):
+    """Run one Table-1-style benchmark: returns the CSV row dict.
+
+    kind: which op class the benchmark stresses ("mul" | "add"), mirroring
+    the paper's two benchmark groups."""
+    before = opcount.count_ops(jax.make_jaxpr(fn)(*args))
+    stats: list = []
+    after_jaxpr = silvia.optimized_jaxpr(fn, *args, passes=passes,
+                                         stats=stats)
+    after = opcount.count_ops(after_jaxpr)
+    opt_fn = silvia.optimize(fn, passes)
+    assert_equal_outputs(fn, opt_fn, args)
+    us = time_fn(opt_fn, *args)
+    us_base = time_fn(fn, *args)
+    if kind == "mul":
+        density_b, density_s = before.mul_density, after.mul_density
+        units_b = before.mul_units + before.madd_units
+        units_s = after.mul_units + after.madd_units
+    else:
+        density_b, density_s = before.add_density, after.add_density
+        units_b, units_s = before.add_units, after.add_units
+    return {
+        "name": name,
+        "us_per_call": round(us, 1),
+        "us_baseline": round(us_base, 1),
+        "ops_per_unit_baseline": round(density_b, 2),
+        "ops_per_unit_silvia": round(density_s, 2),
+        "units_baseline": units_b,
+        "units_silvia": units_s,
+        "unit_reduction_pct": round(100 * (1 - units_s / units_b), 1)
+        if units_b else 0.0,
+        "packed_units": after.packed_units,
+    }
+
+
+def print_rows(rows, title):
+    print(f"# {title}")
+    print("name,us_per_call,derived")
+    for r in rows:
+        derived = (f"OpsPerUnit {r['ops_per_unit_baseline']}->"
+                   f"{r['ops_per_unit_silvia']}; units {r['units_baseline']}"
+                   f"->{r['units_silvia']} (-{r['unit_reduction_pct']}%)")
+        print(f"{r['name']},{r['us_per_call']},{derived}")

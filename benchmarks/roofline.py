@@ -1,0 +1,53 @@
+"""Roofline report generator: reads the dry-run JSON (launch/dryrun.py
+--out) and renders the EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import json
+import os
+
+HW_NOTE = ("v5e-class constants: 197 TFLOP/s bf16, 819 GB/s HBM, "
+           "~50 GB/s/link ICI; all terms are per-chip seconds per step")
+
+
+def load(path="results/dryrun_baseline.json"):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r) -> str:
+    if r.get("status") != "run":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"SKIP: {r['status'].split(':', 1)[1].strip()} |||||")
+    if not r.get("ok"):
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"FAIL: {r.get('error', '?')[:60]} |||||")
+    t = r["roofline"]
+    ratio = r.get("useful_flops_ratio")
+    return ("| {arch} | {shape} | {mesh} | {c:.2e} | {m:.2e} | {k:.2e} | "
+            "{dom} | {ratio} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        c=t["compute_s"], m=t["memory_s"], k=t["collective_s"],
+        dom=t["dominant"].replace("_s", ""),
+        ratio=f"{ratio:.3f}" if ratio else "-")
+
+
+def report(path="results/dryrun_baseline.json"):
+    rows = load(path)
+    print("# Roofline (", HW_NOTE, ")")
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+          "dominant | useful-FLOPs ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(fmt_row(r))
+    ok = sum(1 for r in rows if r.get("ok"))
+    skip = sum(1 for r in rows if r.get("status") != "run")
+    fail = sum(1 for r in rows
+               if r.get("status") == "run" and not r.get("ok"))
+    print(f"\ncells: {ok} ok, {skip} skipped (documented), {fail} failed")
+    return rows
+
+
+if __name__ == "__main__":
+    report()

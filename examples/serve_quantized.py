@@ -1,0 +1,35 @@
+"""Quantized serving example: batched greedy decoding with w4a8 packed
+weights (two int4 per int8 word -- the paper's packing insight applied to
+the HBM-bound decode path) and the SILVIA passes enabled on the decode
+step function.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+    PYTHONPATH=src python examples/serve_quantized.py --arch qwen1.5-0.5b
+"""
+import argparse
+import sys
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--quant", default="w4a8",
+                    choices=["bf16", "w8a8", "w4a8"])
+    ap.add_argument("--full", action="store_true",
+                    help="full config instead of the reduced smoke config")
+    ns = ap.parse_args()
+
+    sys.argv = ["serve",
+                "--arch", ns.arch,
+                "--quant", ns.quant,
+                "--silvia", "all",
+                "--batch", "4", "--prompt-len", "32", "--gen", "16"]
+    if not ns.full:
+        sys.argv.append("--reduced")
+    serve_mod.main()
+
+
+if __name__ == "__main__":
+    main()

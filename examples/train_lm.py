@@ -1,0 +1,40 @@
+"""End-to-end training example: SmolLM-135M (the full assigned config, a
+~135M-parameter llama-family model) for a few hundred steps on the synthetic
+pipeline, with checkpoint/restart and straggler telemetry enabled.
+
+    PYTHONPATH=src python examples/train_lm.py                # full 135M run
+    PYTHONPATH=src python examples/train_lm.py --smoke        # seconds-scale
+
+This is a thin veneer over the production driver (repro.launch.train); on a
+real TPU pod the same driver runs with --mesh 16x16.
+"""
+import argparse
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + few steps (CI-friendly)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ns = ap.parse_args()
+
+    args = argparse.Namespace(
+        arch="smollm-135m",
+        reduced=ns.smoke,
+        steps=ns.steps or (30 if ns.smoke else 300),
+        batch=2 if ns.smoke else 4,
+        seq=64 if ns.smoke else 256,
+        lr=3e-4, microbatches=1, mesh="1x1", seed=0,
+        ckpt_dir=ns.ckpt_dir,
+        ckpt_every=10 if ns.smoke else 50,
+        log_every=5 if ns.smoke else 10,
+        simulate_failures="", max_restarts=3, sim_hosts=4)
+    out = train_mod.run(args)
+    print("history:", [round(x, 3) for x in out["history"]])
+
+
+if __name__ == "__main__":
+    main()

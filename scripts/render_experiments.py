@@ -1,0 +1,114 @@
+"""Render dry-run/roofline/perf tables into EXPERIMENTS.md from the JSON
+results (idempotent: replaces the marker sections)."""
+import json
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(path):
+    p = os.path.join(ROOT, path)
+    return json.load(open(p)) if os.path.exists(p) else []
+
+
+def fmt_bytes_gb(x):
+    return f"{x:.2f}"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | compile s | args GB/chip | temp GB/chip "
+           "| HLO GFLOP/chip | coll GB/chip | while-trips |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r.get("variants") or r.get("quant"):
+            continue
+        if r.get("status") != "run":
+            reason = r["status"].split(":", 1)[1].strip()
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"SKIP — {reason} ||||||")
+            continue
+        m, h = r["memory"], r["hlo"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']} | {m['args_gb']:.2f} | {m['temp_gb']:.2f} | "
+            f"{h['dot_flops_per_chip'] / 1e9:.1f} | "
+            f"{h['coll_bytes_per_chip'] / 2**30:.2f} | "
+            f"{'×'.join(str(t) for t in h['trip_counts']) or '-'} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful-FLOPs ratio | what moves the dominant term |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    notes = {
+        ("moe", "train"): "grouped (shard-local) MoE dispatch kills the "
+                          "cross-shard sort/gather traffic (see §Perf A)",
+        ("moe", "prefill"): "grouped MoE dispatch (§Perf A applies equally)",
+        ("moe", "decode"): "KV-cache model-axis sharding + int8 KV (§Perf C)",
+        ("dense", "train"): "chunked attention bounds score traffic; FSDP "
+                            "prefetch overlap",
+        ("dense", "prefill"): "chunked attention (§Perf bonus: −75 % memory "
+                              "term on command-r)",
+        ("dense", "decode"): "KV model-axis sharding, int8 KV, w4a8 weights "
+                             "(§Perf C)",
+        ("ssm", "train"): "larger SSD chunk = fewer scan steps; state in "
+                          "VMEM via Pallas scan fusion",
+        ("ssm", "prefill"): "same as train; chunk 256→512 halves scan "
+                            "overhead",
+        ("ssm", "decode"): "state + weights are tiny: batch up decode "
+                           "requests",
+        ("hybrid", "train"): "grouped MoE dispatch + SSD chunk tuning",
+        ("hybrid", "prefill"): "grouped MoE dispatch",
+        ("hybrid", "decode"): "KV sharding for the 4 attention layers",
+        ("encdec", "train"): "chunked cross/self attention",
+        ("encdec", "prefill"): "chunked encoder attention",
+        ("encdec", "decode"): "cross-KV is static: precompute + int8",
+        ("vlm", "train"): "chunked attention + FSDP prefetch",
+        ("vlm", "prefill"): "chunked attention",
+        ("vlm", "decode"): "KV model-axis sharding + int8 KV",
+    }
+    fam = {r["arch"]: None for r in rows}
+    import importlib
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro import configs
+    for a in list(fam):
+        fam[a] = configs.get_config(a).family
+    kind = {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r.get("variants") or r.get("quant"):
+            continue
+        if r.get("status") != "run":
+            continue
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        f = fam[r["arch"]]
+        note = notes.get((f if f != "moe" else "moe", kind[r["shape"]]),
+                         notes.get((f, kind[r["shape"]]), ""))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{t['compute_s']:.2e} | {t['memory_s']:.2e} | "
+            f"{t['collective_s']:.2e} | {t['dominant'].replace('_s','')} | "
+            f"{ratio:.4f} | {note} |")
+    return "\n".join(out)
+
+
+def main():
+    base = load("results/dryrun_baseline.json")
+    md_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    md = open(md_path).read()
+    md = re.sub(r"<!-- DRYRUN_TABLE -->.*?(?=\n## |$)",
+                "<!-- DRYRUN_TABLE -->\n\n" + dryrun_table(base) + "\n\n",
+                md, flags=re.S)
+    md = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## |$)",
+                "<!-- ROOFLINE_TABLE -->\n\n" + roofline_table(base) + "\n\n",
+                md, flags=re.S)
+    open(md_path, "w").write(md)
+    print("rendered EXPERIMENTS.md tables")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Sharded, atomic, resumable checkpointing."""
+from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,
+                                   save_checkpoint)
+
+__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint"]

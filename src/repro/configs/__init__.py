@@ -1,0 +1,40 @@
+"""Assigned-architecture registry: one module per arch, exact public configs.
+
+Use `get_config(name)` / `get_reduced_config(name)` (smoke-test scale) and
+`ARCHS` for the full list.  Input-shape cells live in `shapes.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCHS = [
+    "arctic-480b",
+    "granite-moe-1b-a400m",
+    "mamba2-2.7b",
+    "command-r-35b",
+    "yi-6b",
+    "smollm-135m",
+    "qwen1.5-0.5b",
+    "jamba-v0.1-52b",
+    "whisper-small",
+    "qwen2-vl-72b",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_reduced_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.reduced()
+
+
+from repro.configs.shapes import SHAPES, cells_for_arch  # noqa: E402
+
+__all__ = ["ARCHS", "SHAPES", "cells_for_arch", "get_config",
+           "get_reduced_config"]

@@ -1,0 +1,43 @@
+"""Assigned input-shape cells (same 4 shapes for every LM arch).
+
+  train_4k     seq 4096,   global batch 256   -> train_step
+  prefill_32k  seq 32768,  global batch 32    -> prefill
+  decode_32k   KV 32768,   global batch 128   -> serve_step (1 new token)
+  long_500k    KV 524288,  global batch 1     -> serve_step; ONLY for
+               sub-quadratic archs (ssm/hybrid); skipped otherwise with the
+               reason recorded (see DESIGN.md sec. 5)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cells_for_arch(cfg) -> dict[str, str]:
+    """Return {shape_name: 'run' | skip-reason} for an arch config."""
+    out = {}
+    for name, cell in SHAPES.items():
+        if name == "long_500k" and not cfg.subquadratic:
+            if cfg.family == "encdec":
+                out[name] = ("skip: encoder-decoder; 500k tokens outside the "
+                             "model's positional domain")
+            else:
+                out[name] = "skip: full quadratic attention (per brief)"
+        else:
+            out[name] = "run"
+    return out

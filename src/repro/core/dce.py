@@ -1,0 +1,17 @@
+"""Standalone dead-code elimination over a ClosedJaxpr (paper sec. 3.4).
+
+The SILVIA pass runs DCE over its item schedule internally; this module
+exposes the same liveness logic as a jaxpr->jaxpr pass for reuse and tests.
+"""
+from __future__ import annotations
+
+from jax.extend import core as jex_core
+
+from repro.core import ir
+
+
+def dce_closed_jaxpr(closed: jex_core.ClosedJaxpr) -> jex_core.ClosedJaxpr:
+    items = ir.dce_items(ir.items_of(closed), closed.jaxpr.outvars)
+    if len(items) == len(closed.jaxpr.eqns):
+        return closed
+    return ir.emit_closed_jaxpr(closed, items)

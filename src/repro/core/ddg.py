@@ -1,0 +1,125 @@
+"""Data-dependence graph + initiation-interval analysis (paper sec. 3.5.1).
+
+    II_min = max over cycles theta of ceil(latency_theta / distance_theta)
+
+Intra-iteration edges have distance 0; loop-carried edges (scan carry
+outputs feeding carry inputs of the next iteration) have distance 1.
+Packing a tuple merges its candidates into one super-node, which can create
+a new critical cycle and raise II_min -- the paper's Fig. 5 edge case.  The
+paper leaves handling to future work; we provide the analyzer plus an
+optional conservative tuple filter (`would_increase_ii`), used by tests to
+reproduce Fig. 5 and available as a pass option (a beyond-paper feature).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+DEFAULT_LATENCY = 1
+
+
+@dataclasses.dataclass
+class DDG:
+    """Nodes 0..n-1 with latencies; edges (u, v, distance)."""
+    latencies: list[int]
+    edges: list[tuple[int, int, int]]
+
+    def with_merged(self, group: Sequence[int]) -> "DDG":
+        """Merge `group` nodes into one super-node (packed tuple): the merged
+        node's latency is the max member latency (they execute together) and
+        all member edges re-target the super-node."""
+        group_set = set(group)
+        rep = min(group_set)
+        remap = {}
+        new_lat = []
+        for i, lat in enumerate(self.latencies):
+            if i in group_set and i != rep:
+                continue
+            remap[i] = len(new_lat)
+            new_lat.append(max(self.latencies[g] for g in group_set)
+                           if i == rep else lat)
+        for g in group_set:
+            remap[g] = remap[rep]
+        new_edges = set()
+        for u, v, d in self.edges:
+            nu, nv = remap[u], remap[v]
+            if nu == nv and d == 0:
+                continue  # intra-super-node edge disappears
+            new_edges.add((nu, nv, d))
+        return DDG(new_lat, sorted(new_edges))
+
+    def ii_min(self, max_ii: int | None = None) -> int:
+        """Smallest II such that no cycle violates Eq. 5.
+
+        For candidate II, a cycle theta is violated iff
+        sum(latency) - II * sum(distance) > 0.  We detect a positive-weight
+        cycle with weights w(u->v) = latency(u) - II * distance(u,v) via
+        Bellman-Ford and increase II until feasible."""
+        n = len(self.latencies)
+        if n == 0:
+            return 1
+        cap = max_ii or (sum(self.latencies) + 1)
+        ii = 1
+        while ii <= cap:
+            if not self._has_positive_cycle(ii):
+                return ii
+            ii += 1
+        return cap
+
+    def _has_positive_cycle(self, ii: int) -> bool:
+        n = len(self.latencies)
+        dist = [0.0] * n     # longest-path relaxation from all sources
+        for it in range(n):
+            changed = False
+            for u, v, d in self.edges:
+                w = self.latencies[u] - ii * d
+                if dist[u] + w > dist[v] + 1e-9:
+                    dist[v] = dist[u] + w
+                    changed = True
+            if not changed:
+                return False
+        return True  # still relaxing after n iterations -> positive cycle
+
+
+def ddg_from_scan_body(closed, num_carry: int, num_consts: int = 0,
+                       latencies: Mapping[str, int] | None = None) -> DDG:
+    """Build the DDG of a scan body jaxpr: distance-0 def->use edges plus
+    distance-1 edges from the eqn defining carry output i to every eqn using
+    carry input i (the loop-carried dependencies).
+
+    Scan body convention: invars = [*consts, *carry, *xs],
+                          outvars = [*carry_out, *ys].
+    `num_carry`/`num_consts` come from the scan eqn's params."""
+    from repro.core import ir
+    jaxpr = closed.jaxpr
+    eqns = jaxpr.eqns
+    lat_map = latencies or {}
+    lats = [lat_map.get(e.primitive.name, DEFAULT_LATENCY) for e in eqns]
+    def_idx, use_idxs = ir.defs_uses(eqns, jaxpr.outvars)
+    edges = []
+    for i, eqn in enumerate(eqns):
+        for v in eqn.invars:
+            if not ir.is_literal(v) and v in def_idx:
+                edges.append((def_idx[v], i, 0))
+    for ci in range(num_carry):
+        v_out = jaxpr.outvars[ci]
+        if ir.is_literal(v_out):
+            continue
+        d = def_idx.get(v_out)
+        if d is None:
+            continue  # carry passes through an invar untouched
+        v_in = jaxpr.invars[num_consts + ci]
+        for u in use_idxs.get(v_in, []):
+            if u != ir.OUT_SENTINEL:
+                edges.append((d, u, 1))
+    return DDG(lats, sorted(set(edges)))
+
+
+def ddg_from_edges(latencies: Sequence[int],
+                   edges: Sequence[tuple[int, int, int]]) -> DDG:
+    return DDG(list(latencies), list(edges))
+
+
+def would_increase_ii(ddg: DDG, group: Sequence[int]) -> bool:
+    """True if merging `group` (packing the tuple) raises II_min (Fig. 5)."""
+    return ddg.with_merged(group).ii_min() > ddg.ii_min()

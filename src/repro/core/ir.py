@@ -1,0 +1,314 @@
+"""Basic-block model over jaxprs for the SILVIA passes.
+
+LLVM IR (the paper's substrate) and jaxprs line up closely: a jaxpr is
+straight-line SSA where control flow lives inside higher-order primitives
+(`scan`, `cond`, `while`, `pjit`), so a jaxpr body *is* a basic block.  This
+module provides what Algorithm 1 needs on that substrate:
+
+* def-use chains over the equation list (`defs_uses`),
+* ALAP scheduling (`alap_schedule`) -- the generalization of the paper's
+  `moveUsesALAP`: every equation is placed as late as its uses allow, which
+  maximizes the last-definition -> first-use interval of every candidate at
+  once,
+* width inference (`WidthAnalysis`) -- the analogue of relying on the HLS
+  frontend's width minimization: bit widths are traced through
+  `convert_element_type`, broadcasts and `silvia_width_hint` metadata,
+* the schedule-item representation used to splice packed calls in and
+  candidates out, plus `emit_closed_jaxpr` to rebuild a functionally
+  equivalent ClosedJaxpr (the paper's BB -> BB* rewrite), and
+* dead-code elimination over schedule items (paper sec. 3.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.extend import core as jex_core
+
+Literal = jex_core.Literal
+ClosedJaxpr = jex_core.ClosedJaxpr
+
+
+def is_literal(v) -> bool:
+    return isinstance(v, Literal)
+
+
+def is_drop_var(v) -> bool:
+    return type(v).__name__ == "DropVar"
+
+
+# ---------------------------------------------------------------------------
+# def-use chains
+# ---------------------------------------------------------------------------
+
+OUT_SENTINEL = 1 << 60  # "position" of the BB's outvars
+
+
+def defs_uses(eqns: Sequence, outvars: Sequence):
+    """Return (def_idx, use_idxs): var -> defining eqn index / list of using
+    eqn indices.  Uses by the BB outputs appear as OUT_SENTINEL."""
+    def_idx: dict[Any, int] = {}
+    use_idxs: dict[Any, list[int]] = {}
+    for i, eqn in enumerate(eqns):
+        for v in eqn.invars:
+            if not is_literal(v):
+                use_idxs.setdefault(v, []).append(i)
+        for v in eqn.outvars:
+            if not is_drop_var(v):
+                def_idx[v] = i
+    for v in outvars:
+        if not is_literal(v):
+            use_idxs.setdefault(v, []).append(OUT_SENTINEL)
+    return def_idx, use_idxs
+
+
+# ---------------------------------------------------------------------------
+# ALAP scheduling (generalized moveUsesALAP)
+# ---------------------------------------------------------------------------
+
+def alap_schedule(eqns: Sequence, outvars: Sequence) -> list:
+    """Reorder equations so each is placed as late as possible while
+    preserving data dependencies; equations with effects keep their relative
+    order (the analogue of the paper's conservative treatment of calls that
+    may alias memory).  Stable: ties resolve to original order."""
+    n = len(eqns)
+    if n == 0:
+        return list(eqns)
+    def_idx, _ = defs_uses(eqns, outvars)
+    # consumers[i] = eqn indices that must come after eqn i
+    consumers: list[set[int]] = [set() for _ in range(n)]
+    n_consumers_unplaced = [0] * n
+    prev_effectful = None
+    for i, eqn in enumerate(eqns):
+        for v in eqn.invars:
+            if not is_literal(v) and v in def_idx:
+                consumers[def_idx[v]].add(i)
+        if eqn.effects:
+            if prev_effectful is not None:
+                consumers[prev_effectful].add(i)
+            prev_effectful = i
+    # ALAP level: each eqn sits at min(consumer levels) - 1; eqns consumed
+    # only by the BB outputs sit at level n.  Stable sort by (level,
+    # original index) realizes the latest legal schedule.
+    level = [n] * n
+    order = _topo_order(consumers, n)
+    for i in reversed(order):
+        for j in consumers[i]:
+            level[i] = min(level[i], level[j] - 1)
+    idx = sorted(range(n), key=lambda i: (level[i], i))
+    return [eqns[i] for i in idx]
+
+
+def _topo_order(consumers, n):
+    indeg = [0] * n
+    for i in range(n):
+        for j in consumers[i]:
+            indeg[j] += 1
+    stack = [i for i in range(n) if indeg[i] == 0]
+    out = []
+    while stack:
+        i = stack.pop()
+        out.append(i)
+        for j in consumers[i]:
+            indeg[j] -= 1
+            if indeg[j] == 0:
+                stack.append(j)
+    assert len(out) == n, "dependency cycle in jaxpr (impossible)"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# width inference
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Width:
+    bits: int
+    signed: bool
+    value_src: Any   # var (or literal) holding the same VALUES, narrowest dtype
+    match_src: Any   # var for shared-operand identity (traces through broadcast)
+
+
+_INT_BITS = {"int4": 4, "uint4": 4, "int8": 8, "uint8": 8,
+             "int16": 16, "uint16": 16, "int32": 32, "uint32": 32,
+             "int64": 64, "uint64": 64, "bool": 1}
+
+
+def dtype_bits(dtype) -> int | None:
+    return _INT_BITS.get(np.dtype(dtype).name if np.dtype(dtype).name in _INT_BITS
+                         else str(dtype), None)
+
+
+def _literal_width(val) -> tuple[int, bool]:
+    if isinstance(val, (bool, np.bool_)):
+        return 1, False
+    if isinstance(val, (int, np.integer)):
+        v = int(val)
+        mag = v if v >= 0 else -v - 1
+        return mag.bit_length() + 1, True
+    if isinstance(val, np.ndarray) and val.dtype.kind in "iu":
+        b = dtype_bits(val.dtype)
+        return (b if b is not None else 64), val.dtype.kind == "i"
+    return 64, True
+
+
+class WidthAnalysis:
+    """Lazy width inference over a BB's equations."""
+
+    def __init__(self, eqns: Sequence, outvars: Sequence):
+        self.def_idx, _ = defs_uses(eqns, outvars)
+        self.eqns = eqns
+        self._memo: dict[Any, Width] = {}
+
+    def width_of(self, v) -> Width:
+        if is_literal(v):
+            bits, signed = _literal_width(v.val)
+            return Width(bits, signed, v, v)
+        if v in self._memo:
+            return self._memo[v]
+        w = self._compute(v)
+        self._memo[v] = w
+        return w
+
+    def _leaf(self, v) -> Width:
+        b = dtype_bits(v.aval.dtype)
+        signed = np.dtype(v.aval.dtype).kind != "u" if b is not None else True
+        return Width(b if b is not None else 999, signed, v, v)
+
+    def _compute(self, v) -> Width:
+        i = self.def_idx.get(v)
+        if i is None:
+            return self._leaf(v)
+        eqn = self.eqns[i]
+        name = eqn.primitive.name
+        if name == "convert_element_type":
+            inw = self.width_of(eqn.invars[0])
+            out_bits = dtype_bits(eqn.params["new_dtype"])
+            if out_bits is not None and out_bits >= inw.bits:
+                # widening conversion preserves values -> keep narrow source
+                return Width(inw.bits, inw.signed, inw.value_src, inw.match_src)
+            return self._leaf(v)
+        if name == "silvia_width_hint":
+            inw = self.width_of(eqn.invars[0])
+            return Width(min(eqn.params["width"], inw.bits),
+                         eqn.params["signed"], eqn.invars[0], inw.match_src)
+        if name == "broadcast_in_dim":
+            inw = self.width_of(eqn.invars[0])
+            # broadcast replicates values: identity for matching, but the
+            # VALUE source is the broadcasted var itself (shape matters).
+            return Width(inw.bits, inw.signed, v, inw.match_src)
+        if name == "and":
+            # masking with a constant bounds the width
+            for a, b in ((eqn.invars[0], eqn.invars[1]),
+                         (eqn.invars[1], eqn.invars[0])):
+                if is_literal(b) and isinstance(b.val, (int, np.integer)) and int(b.val) >= 0:
+                    inw = self.width_of(a)
+                    return Width(min(inw.bits, int(b.val).bit_length()),
+                                 False, v, v)
+            return self._leaf(v)
+        return self._leaf(v)
+
+
+# ---------------------------------------------------------------------------
+# schedule items + emit
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EqnItem:
+    eqn: Any
+
+    @property
+    def invars(self):
+        return self.eqn.invars
+
+    @property
+    def outvars(self):
+        return self.eqn.outvars
+
+    @property
+    def effects(self):
+        return self.eqn.effects
+
+
+@dataclasses.dataclass
+class PackedItem:
+    """A packed-operation call replacing a tuple of candidates.
+
+    build(invals) -> list of output values bound to `outvars` (the original
+    candidates' root output vars, so downstream uses are rewired for free).
+    """
+    build: Callable[[list], list]
+    in_vars: list           # Vars/Literals the packed call reads
+    out_vars: list          # original root vars its results replace
+    describe: str = "packed"
+
+    @property
+    def invars(self):
+        return self.in_vars
+
+    @property
+    def outvars(self):
+        return self.out_vars
+
+    @property
+    def effects(self):
+        return ()
+
+
+def dce_items(items: list, outvars: Sequence) -> list:
+    """Backward liveness over schedule items (paper sec. 3.4 DCE)."""
+    live = {v for v in outvars if not is_literal(v)}
+    keep = [False] * len(items)
+    for i in range(len(items) - 1, -1, -1):
+        it = items[i]
+        if it.effects or any((not is_drop_var(v)) and v in live for v in it.outvars):
+            keep[i] = True
+            for v in it.invars:
+                if not is_literal(v):
+                    live.add(v)
+    return [it for i, it in enumerate(items) if keep[i]]
+
+
+def emit_fn(closed: ClosedJaxpr, items: list):
+    """Build a python callable evaluating the item schedule (flat in/out)."""
+    jaxpr = closed.jaxpr
+
+    def read(env, v):
+        return v.val if is_literal(v) else env[v]
+
+    def fn(*flat_args):
+        env = {}
+        for v, c in zip(jaxpr.constvars, closed.consts):
+            env[v] = c
+        for v, a in zip(jaxpr.invars, flat_args):
+            env[v] = a
+        for it in items:
+            if isinstance(it, EqnItem):
+                eqn = it.eqn
+                outs = eqn.primitive.bind(
+                    *[read(env, v) for v in eqn.invars], **eqn.params)
+                if not eqn.primitive.multiple_results:
+                    outs = [outs]
+            else:
+                outs = it.build([read(env, v) for v in it.in_vars])
+            for ov, o in zip(it.outvars, outs):
+                if not is_drop_var(ov):
+                    env[ov] = o
+        return [read(env, v) for v in jaxpr.outvars]
+
+    return fn
+
+
+def emit_closed_jaxpr(closed: ClosedJaxpr, items: list) -> ClosedJaxpr:
+    """Rebuild a ClosedJaxpr from a transformed item schedule (BB -> BB*)."""
+    fn = emit_fn(closed, items)
+    return jax.make_jaxpr(fn)(*closed.in_avals)
+
+
+def items_of(closed: ClosedJaxpr) -> list:
+    return [EqnItem(e) for e in closed.jaxpr.eqns]

@@ -1,0 +1,109 @@
+"""Ops/Unit metric -- the paper's Table 1 headline metric.
+
+"The operation density (Ops/Unit) is defined as the ratio between the number
+of arithmetic operations and the number of functional units computing them,
+at the IR level."
+
+On our substrate an IR-level operation is a jaxpr equation; a packed
+primitive equation is ONE functional unit computing k logical narrow ops
+(its params record k).  Counting is recursive over sub-jaxprs (a rolled scan
+body counts once, like a rolled loop in LLVM IR; unrolled compute unrolls the
+count, exactly as HLS unrolling does in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from jax.extend import core as jex_core
+
+from repro.core import prims
+
+ClosedJaxpr = jex_core.ClosedJaxpr
+
+_MUL_PRIMS = {"mul"}
+_ADD_PRIMS = {"add", "sub"}
+
+
+@dataclasses.dataclass
+class OpCount:
+    mul_ops: int = 0        # logical multiplications
+    add_ops: int = 0        # logical additions/subtractions
+    mul_units: int = 0      # units computing multiplications
+    add_units: int = 0      # units computing additions
+    packed_units: int = 0   # packed units (the "DSP count" analogue)
+    madd_units: int = 0     # units computing both (packed MADs)
+
+    @property
+    def mul_density(self) -> float:
+        u = self.mul_units
+        return self.mul_ops / u if u else 0.0
+
+    @property
+    def add_density(self) -> float:
+        u = self.add_units
+        return self.add_ops / u if u else 0.0
+
+    def merged(self, other: "OpCount") -> "OpCount":
+        return OpCount(*[a + b for a, b in
+                         zip(dataclasses.astuple(self),
+                             dataclasses.astuple(other))])
+
+
+def _iter_subjaxprs(eqn) -> Iterable[ClosedJaxpr]:
+    for v in eqn.params.values():
+        if isinstance(v, ClosedJaxpr):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                if isinstance(x, ClosedJaxpr):
+                    yield x
+
+
+def count_ops(closed: ClosedJaxpr, int_only: bool = True) -> OpCount:
+    c = OpCount()
+    for eqn in closed.jaxpr.eqns:
+        name = eqn.primitive.name
+        if eqn.primitive in prims.PACKED_PRIMS:
+            k = prims.packed_op_counts(eqn)
+            c.packed_units += 1
+            c.mul_ops += k["mul"]
+            c.add_ops += k["add"]
+            if k["mul"]:
+                c.mul_units += 1
+            if k["add"] and not k["mul"]:
+                c.add_units += 1
+            if k["mul"] and k["add"]:
+                c.madd_units += 1
+            continue
+        if name in _MUL_PRIMS or name in _ADD_PRIMS:
+            import numpy as np
+            dt = np.dtype(eqn.outvars[0].aval.dtype)
+            if int_only and dt.kind not in "iu":
+                continue
+            if name in _MUL_PRIMS:
+                c.mul_ops += 1
+                c.mul_units += 1
+            else:
+                c.add_ops += 1
+                c.add_units += 1
+            continue
+        for sub in _iter_subjaxprs(eqn):
+            c = c.merged(count_ops(sub, int_only))
+    return c
+
+
+def density_report(before: OpCount, after: OpCount) -> dict:
+    """Paper Table 1 row: Ops/Unit and unit counts, baseline vs SILVIA."""
+    def units(c):
+        return c.mul_units + c.add_units + c.madd_units
+    return {
+        "ops_per_unit_mul_baseline": round(before.mul_density, 2),
+        "ops_per_unit_mul_silvia": round(after.mul_density, 2),
+        "ops_per_unit_add_baseline": round(before.add_density, 2),
+        "ops_per_unit_add_silvia": round(after.add_density, 2),
+        "units_baseline": units(before),
+        "units_silvia": units(after),
+        "unit_reduction": round(1 - units(after) / units(before), 3)
+        if units(before) else 0.0,
+    }

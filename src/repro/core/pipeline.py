@@ -1,0 +1,154 @@
+"""SILVIA pass manager -- the analogue of the paper's `SILVIA::csynth_design`
+Tcl drop-in (Fig. 6): an ordered list of pass configs applied between the
+"frontend" (jax.make_jaxpr) and the "backend" (jit/XLA), with recursion into
+higher-order primitives (each sub-jaxpr is its own basic block).
+
+    passes = [PassConfig(op="muladd"), PassConfig(op="add", op_size=8)]
+    fast_fn = silvia.optimize(fn, passes)          # same signature as fn
+
+mirrors the paper's
+
+    set SILVIA::PASSES [list [dict create OP "muladd"] \
+                             [dict create OP "add" OP_SIZE 12]]
+    SILVIA::csynth_design
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+from jax.extend import core as jex_core
+
+from repro.core.silvia import SILVIA
+from repro.core.silvia_add import SILVIAAdd
+from repro.core.silvia_muladd import SILVIAMul4, SILVIAMuladd
+
+ClosedJaxpr = jex_core.ClosedJaxpr
+
+
+@dataclasses.dataclass(frozen=True)
+class PassConfig:
+    """One entry of SILVIA::PASSES (paper Fig. 6)."""
+    op: str                       # "add" | "muladd" | "mul4"
+    op_size: int | None = None    # SILVIAAdd lane operand size (8 | 16)
+    inst: str = "both"            # SILVIAAdd: "add" | "sub" | "both"
+    max_chain_len: int | None = None   # SILVIAMuladd MAX_CHAIN_LEN
+    m_bits: int = 8
+    c_bits: int = 8
+    # paper 3.5.1 future work: drop tuples that raise II_min in loop bodies
+    filter_ii: bool = False
+
+    def instantiate(self) -> SILVIA:
+        if self.op == "add":
+            p = SILVIAAdd(op_size=self.op_size or 8, inst=self.inst)
+        elif self.op == "muladd":
+            p = SILVIAMuladd(m_bits=self.m_bits, c_bits=self.c_bits,
+                             max_chain_len=self.max_chain_len)
+        elif self.op == "mul4":
+            p = SILVIAMul4()
+        else:
+            raise ValueError(f"unknown SILVIA pass op: {self.op}")
+        p.filter_ii = self.filter_ii
+        return p
+
+
+DEFAULT_PASSES = (
+    PassConfig(op="muladd"),
+    PassConfig(op="mul4"),
+    PassConfig(op="add", op_size=8),
+    PassConfig(op="add", op_size=16),
+)
+
+# Higher-order primitives whose sub-jaxprs we optimize as separate BBs.
+_RECURSE_PRIMS = {"scan", "while", "cond", "pjit", "closed_call",
+                  "custom_vjp_call", "remat", "checkpoint"}
+
+
+def _map_subjaxprs(eqn, fn):
+    """Apply fn to every ClosedJaxpr in eqn.params (one level)."""
+    if eqn.primitive.name not in _RECURSE_PRIMS:
+        return eqn, False
+    new_params = dict(eqn.params)
+    changed = False
+    for k, v in eqn.params.items():
+        if isinstance(v, ClosedJaxpr):
+            nv = fn(v)
+            if nv is not v:
+                new_params[k] = nv
+                changed = True
+        elif isinstance(v, (tuple, list)) and v and all(
+                isinstance(x, ClosedJaxpr) for x in v):
+            nvs = type(v)(fn(x) for x in v)
+            if any(a is not b for a, b in zip(nvs, v)):
+                new_params[k] = nvs
+                changed = True
+    if not changed:
+        return eqn, False
+    return eqn.replace(params=new_params), True
+
+
+def optimize_closed_jaxpr(closed: ClosedJaxpr, passes: Sequence[SILVIA],
+                          stats: list | None = None,
+                          loop_info=None) -> ClosedJaxpr:
+    """Apply the pass list to a ClosedJaxpr, recursing into sub-jaxprs.
+
+    loop_info: (num_consts, num_carry) when `closed` is a scan body --
+    unlocks the II-aware tuple filter for passes with filter_ii=True."""
+    # 1. recurse into inner BBs first
+    new_eqns, changed = [], False
+    for eqn in closed.jaxpr.eqns:
+        inner_loop_info = None
+        if eqn.primitive.name == "scan":
+            inner_loop_info = (eqn.params.get("num_consts", 0),
+                               eqn.params.get("num_carry", 0))
+        rec = functools.partial(optimize_closed_jaxpr, passes=passes,
+                                stats=stats, loop_info=inner_loop_info)
+        ne, ch = _map_subjaxprs(eqn, rec)
+        new_eqns.append(ne)
+        changed |= ch
+    if changed:
+        jaxpr = closed.jaxpr.replace(eqns=new_eqns)
+        closed = ClosedJaxpr(jaxpr, closed.consts)
+    # 2. run each pass on this BB
+    for p in passes:
+        closed, st = p.run(closed, loop_info=loop_info)
+        if stats is not None:
+            st["pass"] = p.name
+            stats.append(st)
+    return closed
+
+
+def optimize(fn, passes: Sequence[PassConfig | SILVIA] = DEFAULT_PASSES,
+             collect_stats: list | None = None):
+    """Return a drop-in replacement for `fn` whose jaxpr has been rewritten
+    by the SILVIA passes.  Works under jit / grad / shard_map / scan."""
+    pass_objs = [p.instantiate() if isinstance(p, PassConfig) else p
+                 for p in passes]
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+
+        def flat_fn(*flat_args):
+            a, k = jax.tree_util.tree_unflatten(in_tree, flat_args)
+            return fn(*a, **k)
+
+        closed, out_shape = jax.make_jaxpr(flat_fn, return_shape=True)(*flat)
+        out_tree = jax.tree_util.tree_structure(out_shape)
+        closed = optimize_closed_jaxpr(closed, pass_objs, collect_stats)
+        outs = jex_core.jaxpr_as_fun(closed)(*flat)
+        return jax.tree_util.tree_unflatten(out_tree, outs)
+
+    return wrapped
+
+
+def optimized_jaxpr(fn, *example_args, passes=DEFAULT_PASSES,
+                    stats: list | None = None) -> ClosedJaxpr:
+    """Trace fn and return its SILVIA-optimized ClosedJaxpr (for inspection,
+    op counting and tests)."""
+    pass_objs = [p.instantiate() if isinstance(p, PassConfig) else p
+                 for p in passes]
+    closed = jax.make_jaxpr(fn)(*example_args)
+    return optimize_closed_jaxpr(closed, pass_objs, stats)

@@ -1,0 +1,193 @@
+"""JAX primitives for SILVIA packed operations.
+
+These play the role of the paper's `call @silvia_*` functions (Fig. 4c): a
+tuple of narrow scalar-per-lane operations is replaced by ONE call to a packed
+implementation.  Each primitive:
+
+* counts as a single "functional unit" for the Ops/Unit metric (its params
+  carry the number of logical narrow ops it computes),
+* evaluates through the pure-jnp reference oracle on CPU (the functional
+  contract), and
+* lowers to the corresponding Pallas TPU kernel in the serving fast path
+  (kernels/ops.py dispatches; the jnp reference is itself the legal
+  "placeholder function" the paper describes in sec. 3.3).
+
+There is also `silvia_width_hint_p`, the analogue of the HLS frontend's width
+minimization metadata: an identity op that declares "this tensor's values fit
+in `width` bits", letting quantization layers mark int4-valued int8 storage.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import core as jcore
+from jax.extend import core as jex_core
+from jax.interpreters import batching, mlir
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# silvia_width_hint: value-range metadata
+# ---------------------------------------------------------------------------
+
+silvia_width_hint_p = jex_core.Primitive("silvia_width_hint")
+
+
+@silvia_width_hint_p.def_impl
+def _width_hint_impl(x, *, width, signed):
+    return x
+
+
+@silvia_width_hint_p.def_abstract_eval
+def _width_hint_abs(x, *, width, signed):
+    return x
+
+
+mlir.register_lowering(
+    silvia_width_hint_p,
+    mlir.lower_fun(lambda x, *, width, signed: x, multiple_results=False))
+batching.primitive_batchers[silvia_width_hint_p] = (
+    lambda args, dims, **params: (silvia_width_hint_p.bind(*args, **params), dims[0]))
+
+
+def width_hint(x, width: int, signed: bool = True):
+    """Declare that `x` (an integer tensor) only holds `width`-bit values."""
+    return silvia_width_hint_p.bind(x, width=int(width), signed=bool(signed))
+
+
+def _width_hint_jvp(primals, tangents, *, width, signed):
+    (x,), (t,) = primals, tangents
+    return silvia_width_hint_p.bind(x, width=width, signed=signed), t
+
+
+jax.interpreters.ad.primitive_jvps[silvia_width_hint_p] = _width_hint_jvp
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _broadcast_aval(avals, dtype):
+    shape = jnp.broadcast_shapes(*[a.shape for a in avals])
+    return jcore.ShapedArray(shape, dtype)
+
+
+def _register(prim, impl, abstract_eval):
+    prim.multiple_results = True
+    prim.def_impl(impl)
+    prim.def_abstract_eval(abstract_eval)
+    mlir.register_lowering(prim, mlir.lower_fun(impl, multiple_results=True))
+
+
+# ---------------------------------------------------------------------------
+# silvia_packed_add: k lane-wise additions/subtractions per unit (SILVIAAdd)
+# ---------------------------------------------------------------------------
+
+silvia_packed_add_p = jex_core.Primitive("silvia_packed_add")
+
+
+def _packed_add_impl(*ops, mode, lane_bits, sub, out_dtypes, n_lanes):
+    xs, ys = ops[:n_lanes], ops[n_lanes:]
+    outs = kops.simd_add(xs, ys, sub=sub, lane_bits=lane_bits)
+    return [o.astype(d) for o, d in zip(outs, out_dtypes)]
+
+
+def _packed_add_abs(*ops, mode, lane_bits, sub, out_dtypes, n_lanes):
+    xs, ys = ops[:n_lanes], ops[n_lanes:]
+    return [_broadcast_aval([x, y], np.dtype(d))
+            for x, y, d in zip(xs, ys, out_dtypes)]
+
+
+_register(silvia_packed_add_p, _packed_add_impl, _packed_add_abs)
+
+
+def packed_add(xs, ys, *, mode: str, lane_bits: int, sub: bool, out_dtypes):
+    return silvia_packed_add_p.bind(
+        *xs, *ys, mode=mode, lane_bits=int(lane_bits), sub=bool(sub),
+        out_dtypes=tuple(np.dtype(d).name for d in out_dtypes),
+        n_lanes=len(xs))
+
+
+# ---------------------------------------------------------------------------
+# silvia_packed_muladd: factor-2 shared-operand MAD chain (SILVIAMuladd)
+# ---------------------------------------------------------------------------
+
+silvia_packed_muladd_p = jex_core.Primitive("silvia_packed_muladd")
+
+
+def _packed_muladd_impl(*ops, n, out_dtype, m_bits, c_bits):
+    a, b, c = ops[:n], ops[n:2 * n], ops[2 * n:]
+    p_a, p_b = kops.muladd2(a, b, c)
+    return [p_a.astype(out_dtype), p_b.astype(out_dtype)]
+
+
+def _packed_muladd_abs(*ops, n, out_dtype, m_bits, c_bits):
+    aval = _broadcast_aval(list(ops), np.dtype(out_dtype))
+    return [aval, aval]
+
+
+_register(silvia_packed_muladd_p, _packed_muladd_impl, _packed_muladd_abs)
+
+
+def packed_muladd(a, b, c, *, out_dtype, m_bits: int = 8, c_bits: int = 8):
+    """p_a = sum_i a_i*c_i ; p_b = sum_i b_i*c_i (paper Eq. 1)."""
+    assert len(a) == len(b) == len(c)
+    return silvia_packed_muladd_p.bind(
+        *a, *b, *c, n=len(a), out_dtype=np.dtype(out_dtype).name,
+        m_bits=int(m_bits), c_bits=int(c_bits))
+
+
+# ---------------------------------------------------------------------------
+# silvia_packed_mul4: factor-4 4-bit multiplications (SILVIAMuladd, sec. 2.3)
+# ---------------------------------------------------------------------------
+
+silvia_packed_mul4_p = jex_core.Primitive("silvia_packed_mul4")
+
+
+def _packed_mul4_impl(*ops, out_dtypes, a_signed, b_signed):
+    a, b = ops[:4], ops[4]
+    outs = kops.mul4(a, b)
+    return [o.astype(d) for o, d in zip(outs, out_dtypes)]
+
+
+def _packed_mul4_abs(*ops, out_dtypes, a_signed, b_signed):
+    return [_broadcast_aval([ai, ops[4]], np.dtype(d))
+            for ai, d in zip(ops[:4], out_dtypes)]
+
+
+_register(silvia_packed_mul4_p, _packed_mul4_impl, _packed_mul4_abs)
+
+
+def packed_mul4(a, b, *, out_dtypes, a_signed: bool, b_signed: bool):
+    """p_i = a_i * b, i in 0..3 (paper Eq. 3)."""
+    assert len(a) == 4
+    return silvia_packed_mul4_p.bind(
+        *a, b, out_dtypes=tuple(np.dtype(d).name for d in out_dtypes),
+        a_signed=bool(a_signed), b_signed=bool(b_signed))
+
+
+# ---------------------------------------------------------------------------
+# op-count metadata: logical narrow ops computed per packed unit
+# ---------------------------------------------------------------------------
+
+PACKED_PRIMS = {
+    silvia_packed_add_p,
+    silvia_packed_muladd_p,
+    silvia_packed_mul4_p,
+}
+
+
+def packed_op_counts(eqn) -> dict:
+    """Return {'mul': m, 'add': a} logical narrow op counts for a packed eqn."""
+    p = eqn.primitive
+    if p is silvia_packed_add_p:
+        return {"mul": 0, "add": eqn.params["n_lanes"]}
+    if p is silvia_packed_muladd_p:
+        n = eqn.params["n"]
+        return {"mul": 2 * n, "add": 2 * (n - 1)}
+    if p is silvia_packed_mul4_p:
+        return {"mul": 4, "add": 0}
+    raise ValueError(f"not a packed primitive: {p}")

@@ -1,0 +1,95 @@
+"""SILVIAAdd: pack independent narrow additions/subtractions into one
+SIMD lane op (paper sec. 2.1 / 3).
+
+Paper modes (48-bit DSP ALU): four12 / two24.
+TPU modes   (32-bit i32 lane): four8 / two16 (see core/bounds.py).
+
+Legality: the packed lanes compute wrapped `lane_bits` two's-complement sums.
+A candidate is exact iff (a) its result provably fits the lane
+(max operand width + 1 <= lane_bits), or (b) the original op already wraps at
+the lane width (out dtype bits == lane_bits), mirroring the paper's
+"operands up to 12/24 bits" constraint.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bounds, ir, prims
+from repro.core.silvia import BBContext, Candidate, SILVIA, Tuple_
+
+_ADD_PRIMS = {"add": False, "sub": True}
+
+
+class SILVIAAdd(SILVIA):
+    name = "silvia_add"
+
+    def __init__(self, op_size: int = 8, inst: str = "both",
+                 allow_partial: bool = True):
+        assert op_size in (8, 16), "TPU lane modes: four8 (8) / two16 (16)"
+        self.mode = bounds.ADD_MODES["four8" if op_size == 8 else "two16"]
+        self.inst = inst
+        self.allow_partial = allow_partial
+
+    # -- candidate identification (paper sec. 3.1) --------------------------
+    def get_candidates(self, ctx: BBContext):
+        cands = []
+        lane = self.mode.lane_bits
+        for i, eqn in enumerate(ctx.eqns):
+            name = eqn.primitive.name
+            if name not in _ADD_PRIMS or eqn.effects:
+                continue
+            if self.inst != "both" and name != self.inst:
+                continue
+            out = eqn.outvars[0]
+            if ir.is_drop_var(out):
+                continue
+            dt = np.dtype(out.aval.dtype)
+            if dt.kind not in "iu":
+                continue
+            wx = ctx.widths.width_of(eqn.invars[0])
+            wy = ctx.widths.width_of(eqn.invars[1])
+            exact = max(wx.bits, wy.bits) + 1 <= lane
+            wraps = ir.dtype_bits(dt) == lane
+            if not (exact or wraps):
+                continue
+            cands.append(Candidate(
+                root=i, covered=frozenset([i]),
+                reads=(wx.value_src, wy.value_src),
+                root_vars=(out,),
+                meta=dict(sub=_ADD_PRIMS[name], shape=out.aval.shape,
+                          out_dtype=dt.name)))
+        return cands
+
+    # -- operation-specific tuple validity (paper sec. 3.2.2) ---------------
+    def can_pack(self, tup: Tuple_, cand: Candidate, ctx: BBContext) -> bool:
+        m0 = tup.cands[0].meta
+        return (m0["sub"] == cand.meta["sub"]
+                and m0["shape"] == cand.meta["shape"])
+
+    def is_tuple_full(self, tup: Tuple_) -> bool:
+        return len(tup.cands) == self.mode.n_lanes
+
+    def tuple_viable(self, tup: Tuple_) -> bool:
+        return self.allow_partial and len(tup.cands) >= 2
+
+    # -- tuple packing (paper sec. 3.3) --------------------------------------
+    def pack_tuple(self, tup: Tuple_, ctx: BBContext) -> ir.PackedItem:
+        cands = tup.cands
+        k = len(cands)
+        xs = [c.reads[0] for c in cands]
+        ys = [c.reads[1] for c in cands]
+        out_dtypes = tuple(c.meta["out_dtype"] for c in cands)
+        sub = cands[0].meta["sub"]
+        mode_name = self.mode.name
+        lane_bits = self.mode.lane_bits
+
+        def build(invals):
+            bx, by = invals[:k], invals[k:]
+            return prims.packed_add(bx, by, mode=mode_name,
+                                    lane_bits=lane_bits, sub=sub,
+                                    out_dtypes=out_dtypes)
+
+        return ir.PackedItem(
+            build=build, in_vars=xs + ys,
+            out_vars=[c.root_vars[0] for c in cands],
+            describe=f"{mode_name} x{k}")

@@ -1,0 +1,277 @@
+"""SILVIAMuladd: pack shared-operand multiply-and-add trees (paper sec. 2.2,
+2.3, 3).
+
+Factor-2 (SILVIAMuladd): two MAD trees `p_a = sum a_i*c_i`, `p_b = sum b_i*c_i`
+sharing the c_i operands pack onto one unit (wp486).  A degenerate tree of a
+single multiplication is a valid candidate too, so mul-only packing falls out
+for free (paper sec. 3.1).  Chains longer than the Eq. 2 bound split into
+balanced segments summed by an external adder tree (paper sec. 3.3).
+
+Factor-4 (SILVIAMul4): four <=4-bit multiplications by one shared factor pack
+onto one unit (paper sec. 2.3, including the unsigned variant the paper
+introduces).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core import bounds, ir, prims
+from repro.core.silvia import BBContext, Candidate, SILVIA, Tuple_
+
+
+def _key_of(src) -> Any:
+    """Hashable identity key for a shared-operand source (Var or Literal)."""
+    if ir.is_literal(src):
+        v = src.val
+        return ("lit", str(np.asarray(v).dtype), np.asarray(v).tobytes()
+                if np.asarray(v).size < 64 else id(src))
+    return src
+
+
+@dataclasses.dataclass
+class Leaf:
+    mul_idx: int
+    ops: tuple          # ((width, value_src, match_key), (width, value_src, match_key))
+    shape: tuple
+
+
+@dataclasses.dataclass
+class Tree:
+    root_idx: int
+    eqns: frozenset
+    leaves: list        # of Leaf
+    root_var: Any
+    out_dtype: str
+    shape: tuple
+
+
+def _collect_trees(ctx: BBContext, m_bits: int, c_bits: int) -> list[Tree]:
+    """Find maximal add-trees whose leaves are narrow multiplications
+    (paper sec. 3.1, getCandidates of SILVIAMuladd)."""
+    use_counts = {v: len(us) for v, us in ctx.use_idxs.items()}
+    info: dict[int, Tree] = {}           # eqn idx -> tree rooted there
+    consumed_roots: set[int] = set()     # roots absorbed by a larger tree
+    for i, eqn in enumerate(ctx.eqns):
+        name = eqn.primitive.name
+        if eqn.effects or not eqn.outvars or ir.is_drop_var(eqn.outvars[0]):
+            continue
+        out = eqn.outvars[0]
+        dt = np.dtype(out.aval.dtype)
+        if dt.kind not in "iu":
+            continue
+        if name == "mul":
+            w0 = ctx.widths.width_of(eqn.invars[0])
+            w1 = ctx.widths.width_of(eqn.invars[1])
+            # one operand within m_bits (packed lanes), other within c_bits
+            # (shared); either assignment may hold -- resolved at pairing.
+            fits = ((w0.bits <= m_bits and w1.bits <= c_bits)
+                    or (w1.bits <= m_bits and w0.bits <= c_bits))
+            if not fits:
+                continue
+            leaf = Leaf(
+                mul_idx=i,
+                ops=((w0.bits, w0.value_src, _key_of(w0.match_src)),
+                     (w1.bits, w1.value_src, _key_of(w1.match_src))),
+                shape=out.aval.shape)
+            info[i] = Tree(i, frozenset([i]), [leaf], out, dt.name,
+                           out.aval.shape)
+        elif name == "add":
+            subs = []
+            ok = True
+            for v in eqn.invars:
+                if ir.is_literal(v):
+                    ok = False
+                    break
+                d = ctx.def_idx.get(v)
+                if d is None or d not in info or use_counts.get(v, 0) != 1:
+                    ok = False
+                    break
+                subs.append(d)
+            if not ok or len(set(subs)) != 2:
+                continue
+            t0, t1 = info[subs[0]], info[subs[1]]
+            info[i] = Tree(i, t0.eqns | t1.eqns | frozenset([i]),
+                           t0.leaves + t1.leaves, out, dt.name, out.aval.shape)
+            consumed_roots |= {subs[0], subs[1]}
+    return [t for i, t in info.items() if i not in consumed_roots]
+
+
+def _match_leaves(t1: Tree, t2: Tree, m_bits: int, c_bits: int):
+    """Pair leaves of two trees by a shared operand (paper Eq. 1): returns
+    [(a_src, b_src, c_src)] per pair or None.  Greedy bipartite match on
+    shared-operand identity."""
+    if len(t1.leaves) != len(t2.leaves):
+        return None
+    used = [False] * len(t2.leaves)
+    pairs = []
+    for l1 in t1.leaves:
+        found = False
+        for j, l2 in enumerate(t2.leaves):
+            if used[j]:
+                continue
+            # choose which operand is shared: same match key, fits c_bits;
+            # the remaining operands must fit m_bits.
+            for s1 in (0, 1):
+                for s2 in (0, 1):
+                    cw1, csrc1, ck1 = l1.ops[s1]
+                    cw2, _, ck2 = l2.ops[s2]
+                    aw, asrc, _ = l1.ops[1 - s1]
+                    bw, bsrc, _ = l2.ops[1 - s2]
+                    if (ck1 == ck2 and cw1 <= c_bits and cw2 <= c_bits
+                            and aw <= m_bits and bw <= m_bits):
+                        pairs.append((asrc, bsrc, csrc1))
+                        used[j] = True
+                        found = True
+                        break
+                if found:
+                    break
+            if found:
+                break
+        if not found:
+            return None
+    return pairs
+
+
+class SILVIAMuladd(SILVIA):
+    """Factor-2 shared-operand MAD packing (paper sec. 2.2)."""
+
+    name = "silvia_muladd"
+
+    def __init__(self, m_bits: int = 8, c_bits: int = 8,
+                 max_chain_len: int | None = None):
+        self.m_bits = m_bits
+        self.c_bits = c_bits
+        self.n_max = bounds.muladd2_max_chain(m_bits, c_bits)
+        if max_chain_len is not None:      # paper's MAX_CHAIN_LEN option
+            self.n_max = min(self.n_max, max_chain_len)
+
+    def get_candidates(self, ctx: BBContext):
+        cands = []
+        for t in _collect_trees(ctx, self.m_bits, self.c_bits):
+            reads = []
+            for leaf in t.leaves:
+                reads.extend([leaf.ops[0][1], leaf.ops[1][1]])
+            cands.append(Candidate(
+                root=t.root_idx, covered=t.eqns, reads=tuple(reads),
+                root_vars=(t.root_var,), meta=t))
+        return cands
+
+    def can_pack(self, tup: Tuple_, cand: Candidate, ctx: BBContext) -> bool:
+        t1: Tree = tup.cands[0].meta
+        t2: Tree = cand.meta
+        if t1.shape != t2.shape or t1.out_dtype != t2.out_dtype:
+            return False
+        return _match_leaves(t1, t2, self.m_bits, self.c_bits) is not None
+
+    def is_tuple_full(self, tup: Tuple_) -> bool:
+        return len(tup.cands) == 2
+
+    def tuple_viable(self, tup: Tuple_) -> bool:
+        return False   # a lone MAD tree stays as-is (resource sharing note, 3.5.2)
+
+    def pack_tuple(self, tup: Tuple_, ctx: BBContext) -> ir.PackedItem:
+        t1: Tree = tup.cands[0].meta
+        t2: Tree = tup.cands[1].meta
+        pairs = _match_leaves(t1, t2, self.m_bits, self.c_bits)
+        assert pairs is not None
+        n = len(pairs)
+        a_srcs = [p[0] for p in pairs]
+        b_srcs = [p[1] for p in pairs]
+        c_srcs = [p[2] for p in pairs]
+        out_dtype = t1.out_dtype
+        n_max, m_bits, c_bits = self.n_max, self.m_bits, self.c_bits
+
+        def build(invals):
+            a = invals[:n]
+            b = invals[n:2 * n]
+            c = invals[2 * n:]
+            # Eq. 2 split: balanced segments, external adder tree (sec. 3.3)
+            n_seg = -(-n // n_max)
+            seg_len = -(-n // n_seg)
+            pa_parts, pb_parts = [], []
+            for s in range(0, n, seg_len):
+                e = min(s + seg_len, n)
+                pa, pb = prims.packed_muladd(
+                    a[s:e], b[s:e], c[s:e], out_dtype=out_dtype,
+                    m_bits=m_bits, c_bits=c_bits)
+                pa_parts.append(pa)
+                pb_parts.append(pb)
+            p_a = sum(pa_parts[1:], pa_parts[0])
+            p_b = sum(pb_parts[1:], pb_parts[0])
+            return [p_a, p_b]
+
+        return ir.PackedItem(
+            build=build, in_vars=a_srcs + b_srcs + c_srcs,
+            out_vars=[t1.root_var, t2.root_var],
+            describe=f"muladd2 n={n}")
+
+
+class SILVIAMul4(SILVIA):
+    """Factor-4 4-bit multiplication packing (paper sec. 2.3)."""
+
+    name = "silvia_mul4"
+
+    def __init__(self, allow_partial_as_pairs: bool = False):
+        self.allow_partial_as_pairs = allow_partial_as_pairs
+
+    def get_candidates(self, ctx: BBContext):
+        cands = []
+        for t in _collect_trees(ctx, m_bits=4, c_bits=4):
+            if len(t.leaves) != 1:     # mul-only packing
+                continue
+            leaf = t.leaves[0]
+            cands.append(Candidate(
+                root=t.root_idx, covered=t.eqns,
+                reads=(leaf.ops[0][1], leaf.ops[1][1]),
+                root_vars=(t.root_var,), meta=t))
+        return cands
+
+    def _shared_key(self, tup: Tuple_):
+        """Shared-operand keys compatible with every member so far."""
+        keys = None
+        for c in tup.cands:
+            leaf = c.meta.leaves[0]
+            ks = {leaf.ops[0][2], leaf.ops[1][2]}
+            keys = ks if keys is None else keys & ks
+        return keys or set()
+
+    def can_pack(self, tup: Tuple_, cand: Candidate, ctx: BBContext) -> bool:
+        t1: Tree = tup.cands[0].meta
+        t2: Tree = cand.meta
+        if t1.shape != t2.shape or t1.out_dtype != t2.out_dtype:
+            return False
+        leaf = t2.leaves[0]
+        return bool(self._shared_key(tup) & {leaf.ops[0][2], leaf.ops[1][2]})
+
+    def is_tuple_full(self, tup: Tuple_) -> bool:
+        return len(tup.cands) == 4
+
+    def tuple_viable(self, tup: Tuple_) -> bool:
+        return len(tup.cands) == 4
+
+    def pack_tuple(self, tup: Tuple_, ctx: BBContext) -> ir.PackedItem:
+        shared = sorted(self._shared_key(tup), key=str)[0]
+        a_srcs, b_src, signs = [], None, []
+        for c in tup.cands:
+            leaf = c.meta.leaves[0]
+            if leaf.ops[0][2] == shared:
+                ci, ai = leaf.ops[0], leaf.ops[1]
+            else:
+                ci, ai = leaf.ops[1], leaf.ops[0]
+            a_srcs.append(ai[1])
+            if b_src is None:
+                b_src = ci[1]
+        out_dtypes = tuple(c.meta.out_dtype for c in tup.cands)
+
+        def build(invals):
+            a, b = invals[:4], invals[4]
+            return prims.packed_mul4(a, b, out_dtypes=out_dtypes,
+                                     a_signed=True, b_signed=True)
+
+        return ir.PackedItem(
+            build=build, in_vars=a_srcs + [b_src],
+            out_vars=[c.root_vars[0] for c in tup.cands],
+            describe="mul4")

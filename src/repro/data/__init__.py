@@ -1,0 +1,6 @@
+"""Data pipeline: deterministic, shardable token streams."""
+from repro.data.pipeline import (DataConfig, TokenStream, make_stream,
+                                 mmap_stream, synthetic_stream)
+
+__all__ = ["DataConfig", "TokenStream", "make_stream", "mmap_stream",
+           "synthetic_stream"]

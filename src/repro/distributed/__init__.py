@@ -1,0 +1,5 @@
+"""Distribution substrate: sharding rules, fault tolerance, elasticity."""
+from repro.distributed.sharding import (batch_pspec, cache_pspecs,
+                                        param_pspecs, to_shardings)
+
+__all__ = ["batch_pspec", "cache_pspecs", "param_pspecs", "to_shardings"]

@@ -1,0 +1,32 @@
+"""Ambient distribution context.
+
+Model code is mesh-agnostic; the launcher can install a mesh + axis roles
+here to unlock explicitly-collective code paths (shard_map MoE dispatch).
+Tracing-time only: the context must be active while jit/lower traces.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+_MESH = None
+_DP_AXES: tuple = ()
+_MODEL_AXIS: Optional[str] = None
+
+
+@contextlib.contextmanager
+def mesh_scope(mesh, dp_axes: tuple, model_axis: str):
+    global _MESH, _DP_AXES, _MODEL_AXIS
+    prev = (_MESH, _DP_AXES, _MODEL_AXIS)
+    _MESH, _DP_AXES, _MODEL_AXIS = mesh, tuple(dp_axes), model_axis
+    try:
+        yield
+    finally:
+        _MESH, _DP_AXES, _MODEL_AXIS = prev
+
+
+def current():
+    """Returns (mesh, dp_axes, model_axis) or None."""
+    if _MESH is None:
+        return None
+    return _MESH, _DP_AXES, _MODEL_AXIS

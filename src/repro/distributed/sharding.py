@@ -1,0 +1,195 @@
+"""Sharding rules: param/batch/cache PartitionSpecs for every family.
+
+Strategy (GSPMD; baseline for the roofline table -- hillclimbed variants
+live in launch/dryrun.py options):
+
+* **FSDP** over ("pod","data"): every large weight's *input* (d_model-like)
+  dimension is fully sharded; XLA all-gathers weights per layer under scan.
+* **TP** over "model": attention heads / FFN hidden / vocab are sharded;
+  row-parallel outputs (wo / out_proj / mlp down) contract over the sharded
+  dimension, producing the Megatron-style psum per block.
+* **EP** over "model": MoE expert dim is block-assigned to model shards;
+  GSPMD inserts the all-to-all-equivalent resharding around expert compute.
+* **SP**: long-context decode shards the KV cache / SSD chunk stream over
+  "data" (sequence dimension) since batch=1 cannot use it.
+
+Rules are by leaf-path suffix + rank, so the same table serves plain arrays
+and QTensor leaves (…/wq.q, …/wq.scale) and arbitrary leading stack axes
+(layers, super-blocks, experts).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, fsdp_axes
+
+# suffix -> (spec for last two dims of the weight)
+# "col": [K, N] -> (FSDP, model)   (column/head/ffn-up parallel)
+# "row": [K, N] -> (model, FSDP)   (row parallel: contract dim sharded)
+_COL = {"wq", "wk", "wv", "wi", "wg", "in_proj", "lm_head", "router"}
+_ROW = {"wo", "out_proj"}
+_EXPERT_STACKED = {"wi", "wg", "wo"}   # under a "moe" parent: [E, K, N]
+
+
+def _last2(path):
+    keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    keys = [k for k in keys if isinstance(k, str)]
+    return keys
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop sharding on dimensions the mesh axes don't divide (e.g. odd
+    vocab sizes, head counts smaller than the model axis)."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim_size, axis in zip(shape, dims):
+        if axis is not None and dim_size % _axis_size(mesh, axis) != 0:
+            axis = None
+        out.append(axis)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_pspecs(params, mesh, cfg=None, mode: str = "2d"):
+    """Pytree of PartitionSpecs matching `params` (arrays or QTensors).
+
+    mode="2d" (default): FSDP over (pod, data) + TP/EP over model.
+    mode="pure_dp": no tensor parallelism -- weights fully sharded over ALL
+    mesh axes on their input dim, batch over all axes.  The right choice for
+    models whose head counts don't divide the model axis (e.g. smollm's 9
+    heads vs model=16, where TP replicates attention compute)."""
+    if mode == "pure_dp":
+        all_axes = tuple(mesh.axis_names)
+        fs = all_axes if len(all_axes) > 1 else all_axes[0]
+        tp = None
+    else:
+        fsdp = fsdp_axes(mesh)
+        fs = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+        tp = "model"
+
+    def spec_for(path, leaf) -> P:
+        if not hasattr(leaf, "ndim") or leaf.ndim == 0:
+            return P()
+        keys = _last2(path)
+        name = next((k for k in reversed(keys)
+                     if k not in ("q", "scale")), "")
+        in_moe = "moe" in keys
+        lead = leaf.ndim - 2
+        if name == "embed":
+            return P(tp, fs)
+        if name == "pos_embed" or name == "enc_pos":
+            return P(None, None)
+        if leaf.ndim == 1:
+            return P(None)
+        if name == "conv_w":
+            return P(*([None] * lead), None, tp)
+        if in_moe and name in _EXPERT_STACKED:
+            # [..., E, K, N]: experts over model (EP), K or N over FSDP
+            lead_e = leaf.ndim - 3
+            if name == "wo":
+                return P(*([None] * lead_e), tp, None, fs)
+            return P(*([None] * lead_e), tp, fs, None)
+        if name == "scale" or keys and keys[-1] == "scale":
+            # QTensor scale [..., 1, N]: follow the weight's N sharding
+            base = next((k for k in reversed(keys) if k not in ("scale",)), "")
+            if base in _ROW:
+                return P(*([None] * lead), None, fs if tp is None else None)
+            return P(*([None] * lead), None, tp)
+        if name in _ROW:
+            return P(*([None] * lead), tp, fs)
+        if name in _COL:
+            if name == "router":
+                return P(*([None] * lead), fs, None)
+            return P(*([None] * lead), fs, tp)
+        # unknown leaves (stacked norms, biases, A_log, ...): replicate
+        return P(*([None] * leaf.ndim))
+
+    def wrapped(path, leaf):
+        s = spec_for(path, leaf)
+        if hasattr(leaf, "shape"):
+            return sanitize_spec(s, leaf.shape, mesh)
+        return s
+
+    return jax.tree_util.tree_map_with_path(wrapped, params)
+
+
+def batch_pspec(mesh, kind: str = "train", mode: str = "2d") -> Any:
+    """PartitionSpec factory for input batches (batch dim over DP axes)."""
+    dp = tuple(mesh.axis_names) if mode == "pure_dp" else dp_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec_for(leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim == 0:
+            return P()
+        return P(dp, *([None] * (leaf.ndim - 1)))
+
+    return spec_for
+
+
+def cache_pspecs(cache, mesh, cfg, *, seq_shard: bool = False,
+                 mode: str = "2d", seq_axis=None):
+    """Specs for decode caches.  Layout: leaves are [L(stack), B, S, ...] for
+    attention KV, [L, B, H, P, N] for SSD state.  seq_shard=True (long_500k,
+    batch=1) puts the sequence dim on "data" instead of the batch dim.
+    seq_axis (e.g. "model"): ALSO shard the KV sequence dim over that axis
+    -- decode batches smaller than the chip count otherwise replicate the
+    cache across the model axis (the dominant HBM term)."""
+    dp = tuple(mesh.axis_names) if mode == "pure_dp" else dp_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec_for(path, leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim <= 1:
+            return P()
+        keys = _last2(path)
+        if keys and keys[-1] in ("k_s", "v_s") and leaf.ndim >= 3:
+            # [L, B, S, KV] per-position scales: follow the kv sharding
+            if seq_shard:
+                return P(None, None, dp, None)
+            return P(None, dp, seq_axis, None)
+        is_kv = any(k in ("k", "v") for k in keys[-1:])
+        if is_kv and leaf.ndim >= 4:
+            # [L, B, S, KV, D]
+            if seq_shard:
+                return P(None, None, dp, *([None] * (leaf.ndim - 3)))
+            return P(None, dp, seq_axis, *([None] * (leaf.ndim - 3)))
+        if keys and keys[-1] == "ssm" and leaf.ndim >= 4:
+            # [L(, M), B, H, P, N]: heads over model
+            lead = leaf.ndim - 4
+            if seq_shard:
+                return P(*([None] * lead), None, "model", None, None)
+            return P(*([None] * lead), dp, "model", None, None)
+        if keys and keys[-1] == "conv":
+            lead = leaf.ndim - 3
+            if seq_shard:
+                return P(*([None] * lead), None, None, "model")
+            return P(*([None] * lead), dp, None, "model")
+        return P(*([None] * leaf.ndim))
+
+    def wrapped(path, leaf):
+        s = spec_for(path, leaf)
+        if hasattr(leaf, "shape"):
+            return sanitize_spec(s, leaf.shape, mesh)
+        return s
+
+    return jax.tree_util.tree_map_with_path(wrapped, cache)
+
+
+def to_shardings(specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,17 @@
+"""Packed-arithmetic Pallas TPU kernels -- the "custom RTL modules" of the
+SILVIA flow (paper sec. 3.3/3.4), adapted to the TPU memory/compute hierarchy.
+
+simd_add       SWAR four8/two16 add/sub        (paper sec. 2.1, SILVIAAdd)
+muladd2        factor-2 shared-operand MAD      (paper sec. 2.2, wp486)
+mul4           factor-4 4-bit multiplications   (paper sec. 2.3, incl. the
+                                                 paper's novel unsigned form)
+quant_matmul   w8a8 MXU GEMM                    (serving baseline)
+packed_matmul  w4a8 packed-weight MXU GEMM      (the packing insight applied
+                                                 to the HBM-bound fast path)
+ref            pure-jnp oracles for all of the above
+ops            backend dispatch (Pallas on TPU / oracle on CPU)
+"""
+from repro.kernels import common, mul4, muladd2, ops, packed_matmul, quant_matmul, ref, simd_add
+
+__all__ = ["common", "mul4", "muladd2", "ops", "packed_matmul",
+           "quant_matmul", "ref", "simd_add"]

@@ -1,0 +1,93 @@
+"""Shared utilities for the packed Pallas TPU kernels.
+
+TPU tiling notes (the hardware this code targets; validated on CPU via
+interpret mode):
+
+* VPU lanes are 32-bit; the native vreg tile is (8, 128) for 32-bit types
+  and (32, 128) for 8-bit types.  Every kernel here tiles VMEM blocks as
+  multiples of those shapes so Mosaic lays registers out without relayouts.
+* SWAR packing across *logical lanes* (k narrow ops in one i32 word) is the
+  TPU analogue of the paper's DSP packing: one i32 VPU op carries k narrow
+  operations.  Packing is free when operands are stored pre-packed (weights,
+  packed offline at quantization time -- like FPGA routing, which costs
+  nothing at runtime); activations pay a pack/unpack cost the tests account
+  for separately.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Minimal TPU tile shapes per element width.
+TILE_32 = (8, 128)
+TILE_8 = (32, 128)
+
+
+def pad_to_2d(x, tile):
+    """Flatten x to 2D and pad each dim to a tile multiple.
+    Returns (padded, orig_shape, (rows, cols))."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = tile[1]
+    rows = -(-n // cols)
+    rows_p = -(-rows // tile[0]) * tile[0]
+    pad = rows_p * cols - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows_p, cols), shape, n
+
+
+def unpad_from_2d(y, shape, n):
+    return y.reshape(-1)[:n].reshape(shape)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@functools.cache
+def interpret_default() -> bool:
+    """Pallas kernels run in interpret mode everywhere but real TPUs."""
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# SWAR lane packing helpers (jnp level; used by kernels and offline packers)
+# ---------------------------------------------------------------------------
+
+def lane_mask_high(lane_bits: int) -> int:
+    """MSB-per-lane mask, e.g. 0x80808080 for 8-bit lanes in a u32 word."""
+    m = 0
+    for off in range(0, 32, lane_bits):
+        m |= 1 << (off + lane_bits - 1)
+    return m
+
+
+def pack_lanes(xs, lane_bits: int):
+    """Pack len(xs) == 32//lane_bits narrow int tensors into one uint32 SWAR
+    word tensor (bit-concatenation of two's-complement lanes)."""
+    n_lanes = 32 // lane_bits
+    assert len(xs) == n_lanes
+    lane_max = (1 << lane_bits) - 1
+    w = jnp.zeros(jnp.broadcast_shapes(*[x.shape for x in xs]), jnp.uint32)
+    for i, x in enumerate(xs):
+        u = x.astype(jnp.int32).astype(jnp.uint32) & jnp.uint32(lane_max)
+        w = w | (u << jnp.uint32(i * lane_bits))
+    return w
+
+
+def unpack_lanes(w, lane_bits: int):
+    """Inverse of pack_lanes: returns list of int32 tensors (sign-extended)."""
+    n_lanes = 32 // lane_bits
+    lane_max = jnp.uint32((1 << lane_bits) - 1)
+    sign = 1 << (lane_bits - 1)
+    outs = []
+    for i in range(n_lanes):
+        u = (w >> jnp.uint32(i * lane_bits)) & lane_max
+        s = u.astype(jnp.int32)
+        s = ((s ^ sign) - sign)  # sign extend lane
+        outs.append(s)
+    return outs

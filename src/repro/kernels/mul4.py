@@ -1,0 +1,121 @@
+"""Factor-4 4-bit multiplication Pallas kernels (paper sec. 2.3).
+
+Two variants:
+
+* `mul4_split` -- the paper-faithful port of Fig. 3 / Eq. 4 (including the
+  paper's NOVEL unsigned-operand mechanism): three 4-bit lanes plus the 3
+  MSBs of a3 go through the wide multiply; the final product is patched with
+      p3 = (a3[3:1] * b) * 2 + (a3 & 1) * b
+  where the patch ops are cheap VPU and/ shift/ add (the paper's "small
+  amount of LUTs").  This mirrors the 27-bit port constraint of the DSP.
+
+* `mul4_full32` -- the TPU-native variant: an i32 lane has 32 > 27 operand
+  bits, so all four 4-bit operands fit at offsets 0/8/16/24 without the
+  split; the products are recovered by sequential lane extraction.  This is
+  a beyond-paper improvement enabled by the wider unit (recorded in
+  DESIGN.md / EXPERIMENTS.md).
+
+Both compute p_i = a_i * b exactly for signed or unsigned 4-bit a_i and
+4-bit b, via exact integer arithmetic:
+P = (sum_i a_i * 2^(8i)) * b, |a_i * b| < 2^7 guarantees lossless recovery.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+
+def _extract_lane(p, signed: bool = True):
+    """Pop the low 8-bit lane: returns (lane, rest).
+
+    Signed products use sign-extension (borrow correction per paper sec. 2.3:
+    "adding the MSB of a product p_i to the next product" is algebraically
+    the `(p - lane) >> 8` step); unsigned products extract directly."""
+    if signed:
+        lane = ((p & 0xFF) ^ 0x80) - 0x80
+    else:
+        lane = p & 0xFF
+    return lane, (p - lane) >> 8
+
+
+def _mul4_full32_kernel(a_ref, b_ref, p_ref, *, signed: bool):
+    # Unsigned x unsigned products reach 225 * 2^24 > 2^31 in the top lane:
+    # the same port-width pressure that forces the paper's Fig. 3 split on
+    # the 27-bit DSP.  With a full 32-bit lane we instead compute modulo
+    # 2^32 (uint32), which is exact since the true value < 2^32.
+    dt = jnp.int32 if signed else jnp.uint32
+    a = a_ref[...].astype(jnp.int32).astype(dt)   # (4, bm, bn)
+    b = b_ref[...].astype(jnp.int32).astype(dt)   # (bm, bn)
+    w = a[0] + (a[1] << 8) + (a[2] << 16) + (a[3] << 24)
+    p = w * b                              # ONE multiply for 4 products
+    p0, r = _extract_lane(p, signed)
+    p1, r = _extract_lane(r, signed)
+    p2, r = _extract_lane(r, signed)
+    p3 = r                                 # top lane: remaining bits
+    p_ref[...] = jnp.stack([p0, p1, p2, p3]).astype(jnp.int32)
+
+
+def _mul4_split_kernel(a_ref, b_ref, p_ref, *, signed: bool):
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    a3 = a[3]
+    a3_hi = a3 >> 1                        # a3[3:1] (arithmetic: sign kept)
+    a3_lo = a3 & 1                         # a3[0]
+    # 27-bit port layout (paper Fig. 3a): 3 full lanes + 3-bit top lane
+    w = a[0] + (a[1] << 8) + (a[2] << 16) + (a3_hi << 24)
+    p = w * b
+    p0, r = _extract_lane(p, signed)
+    p1, r = _extract_lane(r, signed)
+    p2, r = _extract_lane(r, signed)
+    p3_hi = r
+    # Eq. 4: p3 = (a3[3:1] * b) * 2 + a3[0] * b ; the multiply by a single
+    # bit is an AND-like select (paper: "hardware friendly").
+    p3 = (p3_hi << 1) + jnp.where(a3_lo != 0, b, 0)
+    p_ref[...] = jnp.stack([p0, p1, p2, p3])
+
+
+def _run(kernel, a, b, block, interpret, signed=True):
+    kernel = functools.partial(kernel, signed=signed)
+    interpret = common.interpret_default() if interpret is None else interpret
+    assert a.shape[0] == 4 and a.shape[1:] == b.shape
+    inner = b.shape
+    b2, shape, cnt = common.pad_to_2d(b, common.TILE_8)
+    rows, cols = b2.shape
+    bm = max(common.TILE_8[0], min(block[0], rows) // common.TILE_8[0] * common.TILE_8[0])
+    bn = max(common.TILE_8[1], min(block[1], cols) // common.TILE_8[1] * common.TILE_8[1])
+    rows = common.cdiv(rows, bm) * bm
+    cols = common.cdiv(cols, bn) * bn
+    b2 = jnp.pad(b2, ((0, rows - b2.shape[0]), (0, cols - b2.shape[1])))
+    flat = a.reshape(4, -1)
+    a2 = jnp.pad(flat, ((0, 0), (0, rows * cols - flat.shape[1]))).reshape(
+        4, rows, cols)
+    grid = (rows // bm, cols // bn)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((4, rows, cols), jnp.int32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((4, bm, bn), lambda i, j: (0, i, j)),
+                  pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((4, bm, bn), lambda i, j: (0, i, j)),
+        interpret=interpret,
+    )(a2, b2)
+    return [common.unpad_from_2d(out[i], inner, cnt) for i in range(4)]
+
+
+def mul4_full32(a, b, *, block=(256, 512), interpret: bool | None = None,
+                signed: bool = True):
+    """a: (4, ...) 4-bit-valued int8; b: (...) 4-bit-valued int8.
+    Returns [p0..p3] int32.  TPU-native full 32-bit lane layout.
+    `signed=False` only when ALL products are provably non-negative."""
+    return _run(_mul4_full32_kernel, a, b, block, interpret, signed)
+
+
+def mul4_split(a, b, *, block=(256, 512), interpret: bool | None = None,
+               signed: bool = True):
+    """Paper-faithful Fig. 3 / Eq. 4 variant (27-bit port + correction)."""
+    return _run(_mul4_split_kernel, a, b, block, interpret, signed)

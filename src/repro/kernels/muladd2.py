@@ -1,0 +1,77 @@
+"""Factor-2 shared-operand MAD Pallas kernel -- SILVIAMuladd's packed unit.
+
+Paper (sec. 2.2, Fu et al. wp486): one DSP computes p_a = sum a_i*c_i and
+p_b = sum b_i*c_i by placing a in the upper multiplier port bits:
+(a * 2^18 + b) * c.  TPU adaptation: same trick in an int32 lane with a
+16-bit low lane:
+
+    P   = sum_i (a_i * 2^16 + b_i) * c_i          (ONE i32 multiply per i,
+                                                   instead of two)
+    p_b = sign_extend_16(P mod 2^16)              (exact while |p_b| < 2^15,
+    p_a = (P - p_b) >> 16                          guaranteed by Eq. 2)
+
+Chain length N obeys the re-derived Eq. 2 bound (core/bounds.py):
+N(m=8,n=8,L=16)=1, N(m=4,n=8,L=16)=31 -- the w4a8 serving configuration gets
+genuine in-lane accumulation, mirroring the paper's 7-deep DSP cascades.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+
+def _muladd2_kernel(a_ref, b_ref, c_ref, pa_ref, pb_ref):
+    # blocks: (n, bm, bn) int8 -> (bm, bn) int32
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    c = c_ref[...].astype(jnp.int32)
+    packed = (a << 16) + b                # one packed operand per chain elem
+    p = jnp.sum(packed * c, axis=0)       # ONE multiply lane per chain elem
+    p_b = ((p & 0xFFFF) ^ 0x8000) - 0x8000   # sign-extend low lane
+    p_a = (p - p_b) >> 16                     # exact: P - p_b == p_a * 2^16
+    pa_ref[...] = p_a
+    pb_ref[...] = p_b
+
+
+def muladd2(a, b, c, *, block=(256, 512), interpret: bool | None = None):
+    """a, b, c: (n, ...) int8 stacks (n = chain length within the Eq. 2
+    bound).  Returns (p_a, p_b) int32 of shape (...).
+
+    The caller (core pass / ops.py) is responsible for n <= Eq. 2 bound;
+    violating it overflows the low lane exactly as it would on the DSP.
+    """
+    interpret = common.interpret_default() if interpret is None else interpret
+    assert a.shape == b.shape == c.shape and a.ndim >= 1
+    n = a.shape[0]
+    inner = a.shape[1:]
+    a2, shape, cnt = common.pad_to_2d(a.reshape(n, -1)[0], common.TILE_8)
+    rows, cols = a2.shape
+
+    def prep(x):
+        flat = x.reshape(n, -1)
+        pad = rows * cols - flat.shape[1]
+        return jnp.pad(flat, ((0, 0), (0, pad))).reshape(n, rows, cols)
+
+    bm = max(common.TILE_8[0], min(block[0], rows) // common.TILE_8[0] * common.TILE_8[0])
+    bn = max(common.TILE_8[1], min(block[1], cols) // common.TILE_8[1] * common.TILE_8[1])
+    rows = common.cdiv(rows, bm) * bm
+    cols = common.cdiv(cols, bn) * bn
+    a3, b3, c3 = prep(a), prep(b), prep(c)
+    grid = (rows // bm, cols // bn)
+    spec_in = pl.BlockSpec((n, bm, bn), lambda i, j: (0, i, j))
+    spec_out = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    p_a, p_b = pl.pallas_call(
+        _muladd2_kernel,
+        out_shape=[jax.ShapeDtypeStruct((rows, cols), jnp.int32)] * 2,
+        grid=grid,
+        in_specs=[spec_in, spec_in, spec_in],
+        out_specs=[spec_out, spec_out],
+        interpret=interpret,
+    )(a3, b3, c3)
+    return (common.unpad_from_2d(p_a, inner, cnt),
+            common.unpad_from_2d(p_b, inner, cnt))

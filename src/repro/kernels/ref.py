@@ -1,0 +1,118 @@
+"""Pure-jnp reference oracles for every packed kernel.
+
+These define the *semantics* each packed operation must honour.  The Pallas
+kernels (simd_add.py / muladd2.py / mul4.py / packed_matmul.py) are validated
+against these references in interpret mode, shape/dtype-swept by the tests.
+
+All references compute in int32 (the "exact" result); the packed kernels
+compute the same values through SWAR bit manipulation inside int32 lanes.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def _i32(x):
+    return x.astype(jnp.int32) if hasattr(x, "astype") else jnp.asarray(x, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# SILVIAAdd: SWAR SIMD additions / subtractions
+# ---------------------------------------------------------------------------
+
+def simd_add_ref(xs: Sequence, ys: Sequence, *, sub: bool = False,
+                 lane_bits: int = 8):
+    """k independent lane-wise adds (or subs), each exact in its own lane.
+
+    Semantics contract: result_i == (x_i +/- y_i) wrapped to `lane_bits`
+    two's complement.  The SILVIA legality check only packs candidates whose
+    results cannot exceed the lane (or whose original dtype already wraps at
+    the lane width), so wrapping here matches the original program.
+    """
+    outs = []
+    lo = -(2 ** (lane_bits - 1))
+    span = 2 ** lane_bits
+    for x, y in zip(xs, ys):
+        r = _i32(x) - _i32(y) if sub else _i32(x) + _i32(y)
+        # two's-complement wrap to lane_bits
+        r = ((r - lo) % span) + lo
+        outs.append(r)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# SILVIAMuladd factor-2: two shared-operand MAD chains per unit (wp486)
+# ---------------------------------------------------------------------------
+
+def muladd2_ref(a: Sequence, b: Sequence, c: Sequence):
+    """(p_a, p_b) = (sum_i a_i * c_i, sum_i b_i * c_i)  -- paper Eq. 1.
+
+    a, b, c are length-N sequences of equally-shaped integer tensors (N is
+    the chain length; legality guarantees N <= Eq.2 bound for the lane
+    configuration).  Scalars broadcast.
+    """
+    assert len(a) == len(b) == len(c) and len(a) >= 1
+    p_a = sum(_i32(ai) * _i32(ci) for ai, ci in zip(a, c))
+    p_b = sum(_i32(bi) * _i32(ci) for bi, ci in zip(b, c))
+    return p_a, p_b
+
+
+# ---------------------------------------------------------------------------
+# SILVIAMuladd factor-4: four 4-bit multiplications by one shared factor
+# ---------------------------------------------------------------------------
+
+def mul4_ref(a: Sequence, b):
+    """p_i = a_i * b for i in 0..3 -- paper Eq. 3.
+
+    a_i are 4-bit (signed or unsigned) values, b is a shared 4-bit factor.
+    """
+    assert len(a) == 4
+    bb = _i32(b)
+    return [_i32(ai) * bb for ai in a]
+
+
+# ---------------------------------------------------------------------------
+# Packed quantized matmuls (serving path)
+# ---------------------------------------------------------------------------
+
+def quant_matmul_ref(x_q, w_q, x_scale, w_scale, out_dtype=jnp.float32):
+    """w8a8 matmul oracle: dequantized result of int8 x int8 -> int32 GEMM.
+
+    x_q: [M, K] int8, w_q: [K, N] int8
+    x_scale: [M, 1] or scalar, w_scale: [1, N] or scalar (float32)
+    """
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
+
+
+def packed_w4_matmul_ref(x_q, w_packed, x_scale, w_scale,
+                         out_dtype=jnp.float32):
+    """w4a8 matmul oracle with two int4 weights packed per int8 word.
+
+    w_packed: [K, N//2] int8 storing (w_even + 16 * w_odd) where w_even is
+    biased to unsigned 4-bit (w_even_u = w_even + 8) so the word stays in
+    int8 range; columns 2j / 2j+1 of the logical [K, N] int4 weight matrix.
+
+    The oracle unpacks and performs the exact int32 GEMM.
+    """
+    lo_u = (w_packed.astype(jnp.int32) & 0xF)            # unsigned 4-bit + bias
+    w_even = lo_u - 8                                     # de-bias -> signed
+    w_odd = w_packed.astype(jnp.int32) >> 4               # arithmetic shift
+    k, n_half = w_packed.shape
+    w = jnp.stack([w_even, w_odd], axis=-1).reshape(k, 2 * n_half)
+    acc = jnp.dot(x_q.astype(jnp.int32), w, preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
+
+
+def pack_w4(w_int4):
+    """Pack a [K, N] int4-valued (stored int8, range [-8, 7]) weight matrix
+    into [K, N//2] int8 words: word = (w_even + 8) | (w_odd << 4)."""
+    assert w_int4.shape[-1] % 2 == 0
+    w = w_int4.astype(jnp.int32)
+    w_even = w[..., 0::2] + 8          # [0, 15]
+    w_odd = w[..., 1::2]               # [-8, 7]
+    word = (w_odd * 16) + w_even       # in [-128, 127]
+    return word.astype(jnp.int8)

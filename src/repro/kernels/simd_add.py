@@ -1,0 +1,87 @@
+"""SWAR SIMD add/sub Pallas kernel -- SILVIAAdd's packed unit.
+
+Paper (sec. 2.1): the DSP48E2 ALU adds four 12-bit or two 24-bit pairs per
+slice.  TPU adaptation: one int32 VPU op adds four 8-bit or two 16-bit lanes
+per word using classic carry-kill SWAR:
+
+    add: s = ((x & ~H) + (y & ~H)) ^ ((x ^ y) & H)
+    sub: s = ((x | H) - (y & ~H)) ^ ((x ^ ~y) & H)
+
+where H holds each lane's MSB.  The kernel operates on pre-packed u32 words
+(pack/unpack helpers live in common.py; weights/biases pack offline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+
+def _swar_kernel(x_ref, y_ref, o_ref, *, lane_bits: int, sub: bool):
+    x = x_ref[...]
+    y = y_ref[...]
+    h = jnp.uint32(common.lane_mask_high(lane_bits))
+    nh = jnp.uint32(~common.lane_mask_high(lane_bits) & 0xFFFFFFFF)
+    if sub:
+        s = ((x | h) - (y & nh)) ^ ((x ^ ~y) & h)
+    else:
+        s = ((x & nh) + (y & nh)) ^ ((x ^ y) & h)
+    o_ref[...] = s
+
+
+def simd_add_packed(x_packed, y_packed, *, lane_bits: int = 8,
+                    sub: bool = False, block=(256, 512),
+                    interpret: bool | None = None):
+    """Lane-wise add/sub on SWAR-packed u32 words: the packed fast path.
+
+    x_packed, y_packed: uint32 tensors of identical shape (each word holds
+    32//lane_bits logical operands).  One VPU op per word -> 4x (8-bit) or
+    2x (16-bit) op-density, the paper's four12/two24 rescaled to 32 bits.
+    """
+    assert x_packed.dtype == jnp.uint32 and y_packed.dtype == jnp.uint32
+    interpret = common.interpret_default() if interpret is None else interpret
+    x2, shape, n = common.pad_to_2d(x_packed, common.TILE_32)
+    y2, _, _ = common.pad_to_2d(y_packed, common.TILE_32)
+    rows, cols = x2.shape
+    bm = min(block[0], rows)
+    bn = min(block[1], cols)
+    # round block to tile multiples
+    bm = max(common.TILE_32[0], bm - bm % common.TILE_32[0])
+    bn = max(common.TILE_32[1], bn - bn % common.TILE_32[1])
+    rows_p, cols_p = common.cdiv(rows, bm) * bm, common.cdiv(cols, bn) * bn
+    x2 = jnp.pad(x2, ((0, rows_p - rows), (0, cols_p - cols)))
+    y2 = jnp.pad(y2, ((0, rows_p - rows), (0, cols_p - cols)))
+    rows, cols = rows_p, cols_p
+    grid = (rows // bm, cols // bn)
+    out = pl.pallas_call(
+        functools.partial(_swar_kernel, lane_bits=lane_bits, sub=sub),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.uint32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                  pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(x2, y2)
+    return common.unpad_from_2d(out, shape, n)
+
+
+def simd_add(xs, ys, *, lane_bits: int = 8, sub: bool = False,
+             interpret: bool | None = None):
+    """Unpacked-operand entry point: packs k narrow tensors into SWAR words,
+    runs the packed kernel, unpacks.  k = 32 // lane_bits; shorter tuples are
+    padded with zero lanes (a partially-filled DSP, paper sec. 3.2)."""
+    n_lanes = 32 // lane_bits
+    assert len(xs) == len(ys) <= n_lanes
+    k = len(xs)
+    zero = jnp.zeros_like(xs[0])
+    xs = list(xs) + [zero] * (n_lanes - k)
+    ys = list(ys) + [zero] * (n_lanes - k)
+    xw = common.pack_lanes(xs, lane_bits)
+    yw = common.pack_lanes(ys, lane_bits)
+    sw = simd_add_packed(xw, yw, lane_bits=lane_bits, sub=sub,
+                         interpret=interpret)
+    return common.unpack_lanes(sw, lane_bits)[:k]

@@ -1,0 +1,385 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct inputs (no allocation), print
+memory_analysis / cost_analysis, and extract the three roofline terms from
+the partitioned HLO (launch/hlo_analysis.py).
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first init, and the production meshes need 512 host devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+    ... --multi-pod        (2 x 16 x 16 pod mesh instead of 16 x 16)
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.shapes import SHAPES, cells_for_arch
+from repro.distributed.sharding import (batch_pspec, cache_pspecs,
+                                        param_pspecs, to_shardings)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init
+from repro.quant.qtensor import quantize_tree_for_serving
+from repro.training import TrainConfig, make_train_step
+
+# v5e-class hardware constants (per chip), from the brief.
+HW = dict(peak_flops_bf16=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+# Per-arch training memory levers (state dtype / microbatching) -- these are
+# the configurations REPORTED in EXPERIMENTS.md; see the memory analysis.
+TRAIN_OVERRIDES = {
+    "arctic-480b": dict(microbatches=8, state_dtype="bfloat16"),
+    "qwen2-vl-72b": dict(microbatches=4, state_dtype="float32"),
+    "command-r-35b": dict(microbatches=2, state_dtype="float32"),
+    "jamba-v0.1-52b": dict(microbatches=4, state_dtype="float32"),
+}
+
+
+def abstract(f, *args, **kwargs):
+    return jax.eval_shape(functools.partial(f, **kwargs), *args)
+
+
+def train_seq_for(cfg: ModelConfig, seq: int) -> int:
+    return seq
+
+
+def make_batch_avals(cfg: ModelConfig, batch: int, seq: int, kind: str):
+    """ShapeDtypeStruct stand-ins for one input batch."""
+    if cfg.family == "encdec":
+        return {
+            "audio": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                          jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((batch, seq // 4 + 1), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        if kind == "train":
+            return {
+                "embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            }
+        return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+    if kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32)}
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+VARIANTS = {
+    # hillclimb levers, composable: --variant moe_grouped,kv8
+    "moe_grouped": "GShard-style grouped (shard-local) MoE dispatch",
+    "pure_dp": "no TP: FSDP over all axes (for TP-unfriendly models)",
+    "kv8": "int8 KV cache (+per-position scales)",
+    "mb2": "train with 2 microbatches",
+    "mb1": "train without microbatching",
+    "cf10": "MoE capacity factor 1.0",
+    "noremat": "disable activation rematerialization",
+    "kv_seq_model": "shard decode KV cache sequence dim over the model axis",
+    "chunked_attn": "scan causal attention over 1024-wide query chunks "
+                    "(flash-attention memory behaviour)",
+    "moe_shardmap": "explicitly-collective MoE dispatch under shard_map "
+                    "(local scatters; all-gather weights + psum combine)",
+}
+
+
+def apply_variants(cfg: ModelConfig, overrides: dict, variants):
+    for v in variants:
+        if v == "moe_grouped" and cfg.moe is not None:
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, dispatch="grouped"))
+        elif v == "moe_shardmap" and cfg.moe is not None:
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, dispatch="shard_map"))
+        elif v == "pure_dp":
+            overrides["sharding_mode"] = "pure_dp"
+        elif v == "kv8":
+            cfg = dataclasses.replace(cfg, serve_kv_dtype="int8")
+        elif v == "mb2":
+            overrides["microbatches"] = 2
+        elif v == "mb1":
+            overrides["microbatches"] = 1
+        elif v == "cf10" and cfg.moe is not None:
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=1.0))
+        elif v == "noremat":
+            overrides["remat"] = False
+        elif v == "kv_seq_model":
+            overrides["kv_seq_axis"] = "model"
+        elif v == "chunked_attn":
+            cfg = dataclasses.replace(cfg, attn_q_chunk=1024)
+        elif v:
+            raise ValueError(f"unknown variant {v}")
+    return cfg, overrides
+
+
+def build_case(cfg: ModelConfig, shape_name: str, mesh, *,
+               quant: str | None = None, overrides: dict | None = None):
+    """Returns (jitted_fn, arg_avals tuple) ready to .lower()."""
+    cell = SHAPES[shape_name]
+    seq, batch = cell.seq_len, cell.global_batch
+    max_seq = max(seq + 1, 8)
+    mode = (overrides or {}).get("sharding_mode", "2d")
+    rng = jax.random.PRNGKey(0)
+    params_avals = jax.eval_shape(
+        lambda: lm.init_params(rng, cfg, max_seq=max_seq))
+    pspecs = param_pspecs(params_avals, mesh, cfg, mode=mode)
+    bspec_fn = batch_pspec(mesh, mode=mode)
+
+    if cell.kind == "train":
+        ov = dict(TRAIN_OVERRIDES.get(cfg.name, {}))
+        ov.update(overrides or {})
+        tcfg = TrainConfig(
+            microbatches=ov.get("microbatches", 1),
+            optimizer=AdamWConfig(
+                state_dtype=ov.get("state_dtype", "float32")),
+            remat=ov.get("remat", True))
+        opt_avals = jax.eval_shape(
+            lambda p: adamw_init(p, tcfg.optimizer), params_avals)
+        opt_specs = param_pspecs(opt_avals, mesh, cfg, mode=mode)
+        batch_avals = make_batch_avals(cfg, batch, seq, "train")
+        bspecs = jax.tree_util.tree_map(bspec_fn, batch_avals)
+        step = make_train_step(cfg, tcfg)
+        fn = jax.jit(
+            step,
+            in_shardings=(to_shardings(pspecs, mesh),
+                          to_shardings(opt_specs, mesh),
+                          to_shardings(bspecs, mesh)),
+            donate_argnums=(0, 1))
+        return fn, (params_avals, opt_avals, batch_avals)
+
+    fmt = quant or cfg.serve_fmt
+    qparams_avals = jax.eval_shape(
+        lambda p: quantize_tree_for_serving(p, fmt), params_avals)
+    qspecs = param_pspecs(qparams_avals, mesh, cfg, mode=mode)
+
+    if cell.kind == "prefill":
+        batch_avals = make_batch_avals(cfg, batch, seq, "prefill")
+        bspecs = jax.tree_util.tree_map(bspec_fn, batch_avals)
+
+        def prefill_fn(p, inputs):
+            if cfg.family == "encdec":
+                inputs = (inputs["audio"], inputs["tokens"][:, :-1])
+            return lm.prefill(p, inputs, cfg, cache_len=seq)
+
+        fn = jax.jit(prefill_fn,
+                     in_shardings=(to_shardings(qspecs, mesh),
+                                   to_shardings(bspecs, mesh)))
+        return fn, (qparams_avals, batch_avals)
+
+    # decode: one new token against a seq-length cache
+    s_enc = seq if cfg.family == "encdec" else None
+    cache_avals = jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch, seq, s_enc=s_enc))
+    seq_shard = batch == 1
+    cspecs = cache_pspecs(cache_avals, mesh, cfg, seq_shard=seq_shard,
+                          mode=mode,
+                          seq_axis=(overrides or {}).get("kv_seq_axis"))
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    from jax.sharding import PartitionSpec as P
+    tok_aval = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos_aval = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    tok_spec = P(None, None) if seq_shard else P(dp, None)
+    pos_spec = P(None) if seq_shard else P(dp)
+
+    def decode_fn(p, tok, cache, pos):
+        return lm.decode_step(p, tok, cache, pos, cfg)
+
+    fn = jax.jit(decode_fn,
+                 in_shardings=(to_shardings(qspecs, mesh),
+                               to_shardings(tok_spec, mesh),
+                               to_shardings(cspecs, mesh),
+                               to_shardings(pos_spec, mesh)),
+                 donate_argnums=(2,))
+    return fn, (qparams_avals, tok_aval, cache_avals, pos_aval)
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train (N_active for MoE), 2*N*D serve,
+    plus the quadratic attention term where applicable (global, all chips)."""
+    cell = SHAPES[shape_name]
+    n_act = cfg.active_param_count()
+    b, s = cell.global_batch, cell.seq_len
+    attn_layers = (cfg.n_layers // (cfg.hybrid.period if cfg.hybrid else 1)
+                   if cfg.family == "hybrid" else
+                   0 if cfg.family == "ssm" else cfg.n_layers)
+    if cell.kind == "train":
+        tokens = b * s
+        attn = 0.5 * 4 * b * s * s * cfg.q_dim * attn_layers * 3  # fwd+bwd
+        return 6.0 * n_act * tokens + attn
+    if cell.kind == "prefill":
+        tokens = b * s
+        attn = 0.5 * 4 * b * s * s * cfg.q_dim * attn_layers
+        return 2.0 * n_act * tokens + attn
+    tokens = b * 1
+    attn = 4 * b * s * cfg.q_dim * attn_layers  # read the whole KV cache
+    return 2.0 * n_act * tokens + attn
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             quant: str | None = None, overrides: dict | None = None,
+             keep_hlo: bool = False, variants=()) -> dict:
+    cfg = configs.get_config(arch)
+    overrides = dict(overrides or {})
+    cfg, overrides = apply_variants(cfg, overrides, variants)
+    cell_status = cells_for_arch(cfg)[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "variants": list(variants), "quant": quant,
+           "status": cell_status}
+    if cell_status != "run":
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = np.prod(mesh.devices.shape)
+    try:
+        from repro.distributed import context as dctx
+        t0 = time.time()
+        with dctx.mesh_scope(mesh, dp_axes(mesh), "model"):
+            fn, avals = build_case(cfg, shape_name, mesh, quant=quant,
+                                   overrides=overrides)
+            lowered = fn.lower(*avals)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = hlo_analysis.analyze_hlo(compiled.as_text())
+        terms = {
+            "compute_s": hlo.dot_flops / HW["peak_flops_bf16"],
+            "memory_s": hlo.hbm_bytes / HW["hbm_bw"],
+            "collective_s": hlo.coll_bytes / HW["ici_bw"],
+        }
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(cfg, shape_name)
+        total_dot = hlo.dot_flops * n_chips
+        rec.update({
+            "ok": True,
+            "n_chips": int(n_chips),
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "args_gb": ma.argument_size_in_bytes / 2**30,
+                "temp_gb": ma.temp_size_in_bytes / 2**30,
+                "out_gb": ma.output_size_in_bytes / 2**30,
+                "total_gb": (ma.argument_size_in_bytes
+                             + ma.temp_size_in_bytes) / 2**30,
+            },
+            "xla_cost_analysis": {"flops": ca.get("flops"),
+                                  "bytes_out": ca.get("bytes accessedout{}")},
+            "hlo": {
+                "dot_flops_per_chip": hlo.dot_flops,
+                "coll_bytes_per_chip": hlo.coll_bytes,
+                "hbm_bytes_per_chip": hlo.hbm_bytes,
+                "coll_by_kind": {k: round(v) for k, v in
+                                 hlo.coll_by_kind.items()},
+                "n_while": hlo.n_while,
+                "trip_counts": hlo.trip_counts,
+            },
+            "roofline": {
+                **{k: v for k, v in terms.items()},
+                "dominant": dominant,
+                "bound_s": max(terms.values()),
+            },
+            "model_flops_global": mf,
+            "hlo_flops_global": total_dot,
+            "useful_flops_ratio": (mf / total_dot) if total_dot else None,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+        })
+        if keep_hlo:
+            rec["hlo_text_len"] = len(compiled.as_text())
+    except Exception as e:  # noqa: BLE001 -- report per-cell failures
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant", default=None, choices=[None, "bf16", "w8a8",
+                                                      "w4a8"])
+    ap.add_argument("--variant", default="",
+                    help="comma-separated hillclimb levers: "
+                         + ", ".join(VARIANTS))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    variants = tuple(v for v in args.variant.split(",") if v)
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    def save(results):
+        if not args.out:
+            return
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        keyed = {(r["arch"], r["shape"], r["mesh"],
+                  ",".join(r.get("variants", [])), r.get("quant") or ""): r
+                 for r in existing}
+        for r in results:
+            keyed[(r["arch"], r["shape"], r["mesh"],
+                   ",".join(r.get("variants", [])), r.get("quant") or "")] = r
+        with open(args.out, "w") as f:
+            json.dump(list(keyed.values()), f, indent=1)
+
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, multi_pod=mp, quant=args.quant,
+                           variants=variants)
+            results.append(rec)
+            save(results)      # incremental: survive crashes/kills
+            status = rec.get("status")
+            if status != "run":
+                print(f"[SKIP] {arch:22s} {shape:12s} {rec['mesh']:8s} "
+                      f"{status}", flush=True)
+                continue
+            if rec.get("ok"):
+                r = rec["roofline"]
+                print(f"[ OK ] {arch:22s} {shape:12s} {rec['mesh']:8s} "
+                      f"compile={rec['compile_s']:6.1f}s "
+                      f"mem={rec['memory']['total_gb']:7.2f}GB "
+                      f"compute={r['compute_s']:.2e}s "
+                      f"mem_t={r['memory_s']:.2e}s "
+                      f"coll={r['collective_s']:.2e}s "
+                      f"dom={r['dominant']}", flush=True)
+            else:
+                print(f"[FAIL] {arch:22s} {shape:12s} {rec['mesh']:8s} "
+                      f"{rec['error'][:160]}", flush=True)
+    if args.out:
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,282 @@
+"""Static analyzer over optimized (post-SPMD-partitioning) HLO text.
+
+Why not `compiled.cost_analysis()`: XLA's analysis visits each `while` body
+ONCE -- scan-over-layers models (all of ours) would be undercounted by a
+factor of n_layers.  This analyzer:
+
+* parses every computation in the HLO module,
+* per computation sums
+    - dot FLOPs (2 * |output| * contracted-dim size),
+    - collective bytes (all-gather / all-reduce / reduce-scatter /
+      all-to-all / collective-permute: max(operand, result) bytes),
+    - an HBM-traffic proxy (operand+result bytes of dots, fusions,
+      gathers/scatters, collectives and plain copies -- elementwise
+      instructions inside fusions are excluded by construction),
+* resolves the call graph: `call`/`fusion` add the callee once; `while`
+  multiplies the body+condition by the trip count recovered from the loop
+  condition's comparison constant (scan lengths are static), `conditional`
+  takes the max branch.
+
+All quantities are PER DEVICE (the HLO is the per-partition program), so
+    compute_term    = dot_flops / peak_flops_per_chip
+    memory_term     = hbm_bytes / hbm_bw_per_chip
+    collective_term = coll_bytes / ici_bw_per_chip
+need no further division by chip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+_COLL_RE = re.compile(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(?:-start|-done)?\(")
+_DOT_RE = re.compile(r"= [a-z0-9]+\[[0-9,]*\][^=]* dot\(")
+_CALLEE_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r" while\(")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_FUSION_RE = re.compile(r"= [^=]*fusion\(")
+_CALL_RE = re.compile(r"= [^=]*\bcall\(")
+_CONDITIONAL_RE = re.compile(r" conditional\(")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _all_shapes(line: str):
+    return [(m.group(1), m.group(2)) for m in _SHAPE_RE.finditer(line)]
+
+
+_DOT_OPERANDS_RE = re.compile(r"\bdot\(([^)]*)\)")
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in (dims.split(",") if dims else []):
+        n *= int(d)
+    return n
+
+
+def _dot_flops(line: str, shape_env: dict) -> float:
+    """2 * |out| * contracted-dim size.  Operand shapes come from the
+    computation-local name->shape environment (HLO prints operand names,
+    not shapes, inside bodies)."""
+    shapes = _all_shapes(line)
+    if not shapes:
+        return 0.0
+    out_elems = _elems(shapes[0][1])
+    ops = _DOT_OPERANDS_RE.search(line)
+    names = [s.strip().lstrip("%") for s in ops.group(1).split(",")] if ops else []
+    contract = None
+    for side, idx in (("lhs", 0), ("rhs", 1)):
+        m = re.search(side + r"_contracting_dims=\{([0-9,]*)\}", line)
+        if not (m and m.group(1)) or idx >= len(names):
+            continue
+        dims_str = shape_env.get(names[idx])
+        if dims_str is None:
+            continue
+        dims = dims_str.split(",") if dims_str else []
+        c = 1
+        ok = True
+        for i in m.group(1).split(","):
+            if int(i) < len(dims):
+                c *= int(dims[int(i)])
+            else:
+                ok = False
+        if ok:
+            contract = c
+            break
+    if contract is None:
+        contract = 1
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    coll_bytes: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    calls: list = dataclasses.field(default_factory=list)   # (kind, name[, cond])
+    max_const: int = 1
+
+
+def _parse_computations(text: str) -> dict[str, CompStats]:
+    comps: dict[str, CompStats] = {}
+    cur: Optional[CompStats] = None
+    shape_env: dict[str, str] = {}
+    comment_re = re.compile(r"/\*.*?\*/")
+    inst_re = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+    for raw in text.splitlines():
+        line = comment_re.sub("", raw.strip())
+        # computation header: "[ENTRY ]%name (params...) -> type {"
+        if line.endswith("{") and "->" in line and "=" not in line.split("->")[0]:
+            toks = line.split()
+            name = toks[1] if toks[0] == "ENTRY" and len(toks) > 1 else toks[0]
+            name = name.lstrip("%")
+            if "(" in name:
+                name = name.split("(")[0]
+            if name:
+                cur = comps.setdefault(name, CompStats())
+                shape_env = {}
+                continue
+        if cur is None or not line or line == "}":
+            if line == "}":
+                cur = None
+            continue
+        im = inst_re.match(line)
+        if im:
+            shape_env[im.group(1)] = im.group(3)
+        for m in _CONST_RE.finditer(line):
+            v = int(m.group(1))
+            if v < (1 << 24):
+                cur.max_const = max(cur.max_const, v)
+        shapes = _all_shapes(line)
+        out_bytes = _shape_bytes(*shapes[0]) if shapes else 0.0
+        opnd_bytes = sum(_shape_bytes(dt, dm) for dt, dm in shapes[1:])
+        cm = _COLL_RE.search(line)
+        if cm:
+            b = max(opnd_bytes, out_bytes)
+            cur.coll_bytes += b
+            cur.coll_by_kind[cm.group(1)] = \
+                cur.coll_by_kind.get(cm.group(1), 0.0) + b
+            cur.hbm_bytes += out_bytes + opnd_bytes
+            continue
+        if _WHILE_RE.search(line):
+            body = _BODY_RE.search(line)
+            cond = _COND_RE.search(line)
+            if body:
+                cur.calls.append(("while", body.group(1),
+                                  cond.group(1) if cond else None))
+            continue
+        if _CONDITIONAL_RE.search(line):
+            bm = _BRANCHES_RE.search(line)
+            if bm:
+                names = [s.strip().lstrip("%") for s in bm.group(1).split(",")]
+                cur.calls.append(("cond", tuple(names), None))
+            continue
+        if " dot(" in line:
+            cur.dot_flops += _dot_flops(line, shape_env)
+            cur.hbm_bytes += out_bytes + opnd_bytes
+            callee = _CALLEE_RE.search(line)
+            continue
+        if _FUSION_RE.search(line) or _CALL_RE.search(line):
+            callee = _CALLEE_RE.search(line)
+            if callee:
+                cur.calls.append(("call", callee.group(1), None))
+            cur.hbm_bytes += out_bytes + opnd_bytes
+            continue
+        if any(op in line for op in (" copy(", " gather(", " scatter(",
+                                     " dynamic-slice(", " dynamic-update-slice(",
+                                     " sort(", " convolution(")):
+            cur.hbm_bytes += out_bytes + opnd_bytes
+            if " convolution(" in line:
+                cur.dot_flops += 2 * out_bytes  # rough; convs are rare here
+            callee = _CALLEE_RE.search(line)
+            if callee:
+                cur.calls.append(("call", callee.group(1), None))
+    return comps
+
+
+@dataclasses.dataclass
+class HloCosts:
+    dot_flops: float
+    coll_bytes: float
+    hbm_bytes: float
+    coll_by_kind: dict
+    n_while: int
+    trip_counts: list
+
+
+def analyze_hlo(text: str, entry: Optional[str] = None) -> HloCosts:
+    comps = _parse_computations(text)
+    if not comps:
+        return HloCosts(0, 0, 0, {}, 0, [])
+    memo: dict[str, tuple] = {}
+    trip_counts: list[int] = []
+    n_while = 0
+
+    def trip_of(cond_name: Optional[str]) -> int:
+        if cond_name and cond_name in comps:
+            return max(1, comps[cond_name].max_const)
+        return 1
+
+    def total(name: str, stack=()) -> tuple:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, 0.0, 0.0, {})
+        c = comps[name]
+        f, cb, hb = c.dot_flops, c.coll_bytes, c.hbm_bytes
+        kinds = dict(c.coll_by_kind)
+        for kind, callee, cond in c.calls:
+            if kind == "while":
+                nonlocal_trip = trip_of(cond)
+                sf, scb, shb, sk = total(callee, stack + (name,))
+                f += sf * nonlocal_trip
+                cb += scb * nonlocal_trip
+                hb += shb * nonlocal_trip
+                for k, v in sk.items():
+                    kinds[k] = kinds.get(k, 0) + v * nonlocal_trip
+            elif kind == "cond":
+                best = (0.0, 0.0, 0.0, {})
+                for b in callee:
+                    cand = total(b, stack + (name,))
+                    if cand[0] + cand[2] > best[0] + best[2]:
+                        best = cand
+                f += best[0]
+                cb += best[1]
+                hb += best[2]
+                for k, v in best[3].items():
+                    kinds[k] = kinds.get(k, 0) + v
+            else:
+                sf, scb, shb, sk = total(callee, stack + (name,))
+                f += sf
+                cb += scb
+                hb += shb
+                for k, v in sk.items():
+                    kinds[k] = kinds.get(k, 0) + v
+        memo[name] = (f, cb, hb, kinds)
+        return memo[name]
+
+    # entry: computation named like the module entry; fall back to the one
+    # not called by anyone
+    called = {callee for c in comps.values() for kind, callee, _ in c.calls
+              if kind != "cond"}
+    for c in comps.values():
+        for kind, callee, cond in c.calls:
+            if kind == "while":
+                n_while += 1
+                trip_counts.append(trip_of(cond))
+                called.add(cond)
+            if kind == "cond":
+                called.update(callee)
+    roots = [n for n in comps if n not in called]
+    if entry and entry in comps:
+        roots = [entry]
+    ftot = cbtot = hbtot = 0.0
+    ktot: dict = {}
+    for r in roots:
+        f, cb, hb, kk = total(r)
+        ftot += f
+        cbtot += cb
+        hbtot += hb
+        for k, v in kk.items():
+            ktot[k] = ktot.get(k, 0) + v
+    return HloCosts(ftot, cbtot, hbtot, ktot, n_while, trip_counts)

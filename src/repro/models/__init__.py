@@ -1,0 +1,7 @@
+"""Model zoo: functional-JAX implementations of the assigned architectures."""
+from repro.models import attention, blocks, common, lm, mlp, ssm
+from repro.models.config import (HybridConfig, ModelConfig, MoEConfig,
+                                 SSMConfig)
+
+__all__ = ["HybridConfig", "ModelConfig", "MoEConfig", "SSMConfig",
+           "attention", "blocks", "common", "lm", "mlp", "ssm"]

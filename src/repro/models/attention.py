@@ -1,0 +1,234 @@
+"""Grouped-query attention with RoPE/M-RoPE, KV cache, and cross-attention.
+
+Modes:
+  full(x)                      -- causal self-attention over the sequence
+                                  (training / prefill; optionally emits cache)
+  decode(x_t, cache, pos)      -- one new token against a static-size cache
+  cross(x, memory)             -- encoder-decoder cross attention (whisper)
+
+The KV cache is a dict {k: [B, S_max, KV, D], v: ..., } with positions filled
+up to `pos`; decode updates in place via dynamic_update_slice (functional).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+from repro.quant.qtensor import qmatmul
+from repro.models.config import ModelConfig
+
+
+def init_attn(rng, cfg: ModelConfig, cross: bool = False):
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    r = common.split_rngs(rng, 4)
+    p = {
+        "wq": common.dense_init(r[0], d, cfg.q_dim, dt),
+        "wk": common.dense_init(r[1], d, cfg.kv_dim, dt),
+        "wv": common.dense_init(r[2], d, cfg.kv_dim, dt),
+        "wo": common.dense_init(r[3], cfg.q_dim, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    return p
+
+
+def _project_q(p, x, cfg: ModelConfig):
+    q = qmatmul(x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    b, s, _ = q.shape
+    return q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+
+
+def _project_kv(p, x, cfg: ModelConfig):
+    k = qmatmul(x, p["wk"])
+    v = qmatmul(x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    b, s, _ = k.shape
+    return (k.reshape(b, s, cfg.n_kv, cfg.head_dim),
+            v.reshape(b, s, cfg.n_kv, cfg.head_dim))
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q: [B,S,H,D], k: [B,T,KV,D] -> scores [B,KV,G,S,T] (G = H//KV)."""
+    b, s, h, d = q.shape
+    kv = cfg.n_kv
+    g = h // kv
+    q = q.reshape(b, s, kv, g, d)
+    return jnp.einsum("bskgd,btkd->bkgst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(w, v, cfg: ModelConfig):
+    """w: [B,KV,G,S,T], v: [B,T,KV,D] -> [B,S,H*D]."""
+    b, kv, g, s, t = w.shape
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return o.reshape(b, s, kv * g * o.shape[-1])
+
+
+def _kv_quantize(t):
+    """Per-position symmetric int8 quantization of a [B,S,KV,D] tensor:
+    returns (int8 values, [B,S,KV] f32 scales)."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = amax / 127.0 + 1e-8
+    q = jnp.round(t.astype(jnp.float32) / scale[..., None]
+                  ).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequant(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _cache_insert(cache_t, scale_t, new, pos, quantized: bool):
+    """Insert [B,1,KV,D] `new` at per-row positions into the cache."""
+    if quantized:
+        q, s = _kv_quantize(new)
+        t = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0, 0)))(cache_t, q, pos)
+        sc = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0)))(scale_t, s, pos)
+        return t, sc
+    t = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+        c, u, (i, 0, 0)))(cache_t, new, pos)
+    return t, None
+
+
+def _attn_chunked(q, k, v, srcpos, cfg: ModelConfig, q_chunk: int):
+    """Causal attention with the query dim scanned in chunks: only a
+    [B, KV, G, q_chunk, T] score block is ever live (flash-attention memory
+    behaviour expressed at the XLA level)."""
+    b, s, h, d = q.shape
+    nc = s // q_chunk
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    q_c = jnp.moveaxis(q.reshape(b, nc, q_chunk, h, d), 1, 0)
+    p_c = jnp.moveaxis(srcpos.reshape(b, nc, q_chunk), 1, 0)
+
+    def body(_, inp):
+        qi, pi = inp
+        scores = _gqa_scores(qi, k, cfg) * scale      # [B,KV,G,qc,T]
+        mask = pi[:, None, None, :, None] >= srcpos[:, None, None, None, :]
+        scores = jnp.where(mask, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return None, _gqa_out(w, v, cfg)              # [B,qc,H*D]
+
+    _, outs = jax.lax.scan(body, None, (q_c, p_c))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h * d)
+
+
+def attn_full(p, x, cfg: ModelConfig, positions=None, causal: bool = True,
+              return_cache: bool = False, cache_len: Optional[int] = None):
+    """Self attention over the full sequence (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    if not cfg.learned_pos:   # whisper-style models use absolute embeddings
+        q = common.apply_rope(q, positions, cfg.rope_theta, cfg.m_rope_sections)
+        k = common.apply_rope(k, positions, cfg.rope_theta, cfg.m_rope_sections)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    srcpos = positions if positions.ndim == 2 else positions[0]
+    if (cfg.attn_q_chunk and causal and s > cfg.attn_q_chunk
+            and s % cfg.attn_q_chunk == 0):
+        out = qmatmul(_attn_chunked(q, k, v, srcpos, cfg, cfg.attn_q_chunk),
+                      p["wo"])
+        if not return_cache:
+            return out
+        s_max = cache_len or s
+        pad = s_max - s
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if cfg.serve_kv_dtype == "int8":
+            kq, ks = _kv_quantize(kp)
+            vq, vs = _kv_quantize(vp)
+            return out, {"k": kq, "v": vq, "k_s": ks, "v_s": vs}
+        return out, {"k": kp, "v": vp}
+    scores = _gqa_scores(q, k, cfg) * scale
+    if causal:
+        mask = srcpos[:, None, None, :, None] >= srcpos[:, None, None, None, :]
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = qmatmul(_gqa_out(w, v, cfg), p["wo"])
+    if not return_cache:
+        return out
+    s_max = cache_len or s
+    pad = s_max - s
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if cfg.serve_kv_dtype == "int8":
+        kq, ks = _kv_quantize(kp)
+        vq, vs = _kv_quantize(vp)
+        return out, {"k": kq, "v": vq, "k_s": ks, "v_s": vs}
+    return out, {"k": kp, "v": vp}
+
+
+def attn_decode(p, x_t, cache, pos, cfg: ModelConfig):
+    """One-token decode: x_t [B, 1, d]; pos [B] int32 next position.
+
+    Returns (out [B,1,d], new_cache)."""
+    b = x_t.shape[0]
+    posb = pos[:, None]                     # [B,1]
+    if cfg.m_rope_sections is not None:
+        posq = jnp.broadcast_to(posb[None], (3, b, 1))
+    else:
+        posq = posb
+    q = _project_q(p, x_t, cfg)
+    k_t, v_t = _project_kv(p, x_t, cfg)
+    if not cfg.learned_pos:
+        q = common.apply_rope(q, posq, cfg.rope_theta, cfg.m_rope_sections)
+        k_t = common.apply_rope(k_t, posq, cfg.rope_theta, cfg.m_rope_sections)
+    # insert at pos (same pos for every batch row in this serving step)
+    quantized = cfg.serve_kv_dtype == "int8"
+    kc, ksc = _cache_insert(cache["k"], cache.get("k_s"), k_t, pos,
+                            quantized)
+    vc, vsc = _cache_insert(cache["v"], cache.get("v_s"), v_t, pos,
+                            quantized)
+    if quantized:
+        k = _kv_dequant(kc, ksc, x_t.dtype)
+        v = _kv_dequant(vc, vsc, x_t.dtype)
+        new_cache = {"k": kc, "v": vc, "k_s": ksc, "v_s": vsc}
+    else:
+        k, v = kc, vc
+        new_cache = {"k": kc, "v": vc}
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    scores = _gqa_scores(q, k, cfg) * scale      # [B,KV,G,1,T]
+    t = k.shape[1]
+    valid = jnp.arange(t)[None, :] <= pos[:, None]          # [B,T]
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x_t.dtype)
+    out = qmatmul(_gqa_out(w, v, cfg), p["wo"])
+    return out, new_cache
+
+
+def attn_cross(p, x, memory, cfg: ModelConfig, mem_kv=None):
+    """Cross attention (decoder -> encoder memory).  If mem_kv is given
+    (precomputed at prefill), memory projection is skipped."""
+    q = _project_q(p, x, cfg)
+    if mem_kv is None:
+        k, v = _project_kv(p, memory, cfg)
+    else:
+        k, v = mem_kv["k"], mem_kv["v"]
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    scores = _gqa_scores(q, k, cfg) * scale
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    return qmatmul(_gqa_out(w, v, cfg), p["wo"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=None):
+    shape = (batch, s_max, cfg.n_kv, cfg.head_dim)
+    if cfg.serve_kv_dtype == "int8":
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(shape[:-1], jnp.float32),
+                "v_s": jnp.zeros(shape[:-1], jnp.float32)}
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}

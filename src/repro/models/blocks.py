@@ -1,0 +1,241 @@
+"""Residual block compositions per architecture family.
+
+Every family defines a homogeneous "scan unit" so the layer stack runs under
+one jax.lax.scan with params stacked on a leading axis (keeps the HLO size
+O(1) in depth -- essential for the 80-layer / 480B dry-runs):
+
+  dense / vlm       1 unit = pre-norm attn + pre-norm MLP
+  moe               1 unit = pre-norm attn + MoE (+ parallel dense FFN for
+                    arctic's "dense residual")
+  ssm (mamba2)      1 unit = pre-norm SSD mixer (no MLP)
+  hybrid (jamba)    1 unit = `period`-layer super-block: mamba mixers with
+                    one attention at `attn_index`; alternating dense/MoE FFN
+  encdec (whisper)  encoder unit (bidirectional attn + GELU MLP) and
+                    decoder unit (causal self-attn + cross-attn + GELU MLP)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, mlp, ssm
+from repro.models.config import ModelConfig
+
+
+def _norm(cfg, x, p):
+    return common.norm_apply(x, p, cfg.norm, cfg.norm_eps)
+
+
+def _norm_init(cfg):
+    return common.norm_init(cfg.d_model, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# dense / vlm unit
+# ---------------------------------------------------------------------------
+
+def init_dense_block(rng, cfg: ModelConfig):
+    r = common.split_rngs(rng, 2)
+    return {"ln1": _norm_init(cfg), "attn": attn.init_attn(r[0], cfg),
+            "ln2": _norm_init(cfg), "mlp": mlp.init_mlp(r[1], cfg)}
+
+
+def dense_block(p, x, cfg, *, mode="train", cache=None, pos=None,
+                positions=None, cache_len=None):
+    h = _norm(cfg, x, p["ln1"])
+    if mode == "decode":
+        a, new_cache = attn.attn_decode(p["attn"], h, cache, pos, cfg)
+    elif mode == "prefill":
+        a, new_cache = attn.attn_full(p["attn"], h, cfg, positions,
+                                      return_cache=True, cache_len=cache_len)
+    else:
+        a, new_cache = attn.attn_full(p["attn"], h, cfg, positions), None
+    x = x + a
+    x = x + mlp.mlp(p["mlp"], _norm(cfg, x, p["ln2"]), cfg)
+    return x, new_cache, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# moe unit (arctic / granite)
+# ---------------------------------------------------------------------------
+
+def init_moe_block(rng, cfg: ModelConfig):
+    r = common.split_rngs(rng, 3)
+    p = {"ln1": _norm_init(cfg), "attn": attn.init_attn(r[0], cfg),
+         "ln2": _norm_init(cfg), "moe": mlp.init_moe(r[1], cfg)}
+    if cfg.moe.dense_residual:
+        p["dense"] = mlp.init_mlp(r[2], cfg)
+    return p
+
+
+def moe_block(p, x, cfg, *, mode="train", cache=None, pos=None,
+              positions=None, cache_len=None):
+    h = _norm(cfg, x, p["ln1"])
+    if mode == "decode":
+        a, new_cache = attn.attn_decode(p["attn"], h, cache, pos, cfg)
+    elif mode == "prefill":
+        a, new_cache = attn.attn_full(p["attn"], h, cfg, positions,
+                                      return_cache=True, cache_len=cache_len)
+    else:
+        a, new_cache = attn.attn_full(p["attn"], h, cfg, positions), None
+    x = x + a
+    h2 = _norm(cfg, x, p["ln2"])
+    y, aux = mlp.moe(p["moe"], h2, cfg)
+    if "dense" in p:                      # arctic: parallel dense residual
+        y = y + mlp.mlp(p["dense"], h2, cfg)
+    return x + y, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# ssm unit (mamba2)
+# ---------------------------------------------------------------------------
+
+def init_ssm_block(rng, cfg: ModelConfig):
+    return {"ln": _norm_init(cfg), "ssm": ssm.init_ssm(rng, cfg)}
+
+
+def ssm_block(p, x, cfg, *, mode="train", cache=None, pos=None,
+              positions=None, cache_len=None):
+    h = _norm(cfg, x, p["ln"])
+    if mode == "decode":
+        y, new_cache = ssm.ssd_decode(p["ssm"], h, cache, cfg)
+    elif mode == "prefill":
+        y, new_cache = ssm.ssd_forward(p["ssm"], h, cfg, return_state=True)
+    else:
+        y, new_cache = ssm.ssd_forward(p["ssm"], h, cfg), None
+    return x + y, new_cache, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# hybrid super-block (jamba)
+# ---------------------------------------------------------------------------
+
+def init_hybrid_block(rng, cfg: ModelConfig):
+    hp = cfg.hybrid
+    m = cfg.moe
+    n_mamba = hp.period - 1
+    n_moe = sum(1 for i in range(hp.period) if i % m.interleave == m.interleave - 1)
+    n_dense = hp.period - n_moe
+    r = common.split_rngs(rng, 4)
+
+    def stacked(rngs, fn):
+        return jax.vmap(fn)(jnp.stack(rngs))
+
+    return {
+        "mamba": stacked(common.split_rngs(r[0], n_mamba),
+                         lambda k: ssm.init_ssm(k, cfg)),
+        "mamba_ln": stacked(common.split_rngs(r[0], n_mamba),
+                            lambda k: _norm_init(cfg)),
+        "attn": attn.init_attn(r[1], cfg),
+        "attn_ln": _norm_init(cfg),
+        "moe": stacked(common.split_rngs(r[2], n_moe),
+                       lambda k: mlp.init_moe(k, cfg)),
+        "dense": stacked(common.split_rngs(r[3], n_dense),
+                         lambda k: mlp.init_mlp(k, cfg)),
+        "ffn_ln": stacked(common.split_rngs(r[3], hp.period),
+                          lambda k: _norm_init(cfg)),
+    }
+
+
+def _tree_idx(tree, i):
+    return jax.tree_util.tree_map(lambda t: t[i], tree)
+
+
+def hybrid_block(p, x, cfg, *, mode="train", cache=None, pos=None,
+                 positions=None, cache_len=None):
+    """One jamba super-block: period layers, each = mixer + FFN residual."""
+    hp, m = cfg.hybrid, cfg.moe
+    aux_total = jnp.float32(0.0)
+    new_cache = {"mamba": [], "attn": None}
+    i_mamba = i_moe = i_dense = 0
+    for i in range(hp.period):
+        if i == hp.attn_index:
+            h = _norm(cfg, x, p["attn_ln"])
+            if mode == "decode":
+                a, c = attn.attn_decode(p["attn"], h, cache["attn"], pos, cfg)
+            elif mode == "prefill":
+                a, c = attn.attn_full(p["attn"], h, cfg, positions,
+                                      return_cache=True, cache_len=cache_len)
+            else:
+                a, c = attn.attn_full(p["attn"], h, cfg, positions), None
+            x = x + a
+            new_cache["attn"] = c
+        else:
+            mp = _tree_idx(p["mamba"], i_mamba)
+            ln = _tree_idx(p["mamba_ln"], i_mamba)
+            h = _norm(cfg, x, ln)
+            if mode == "decode":
+                y, c = ssm.ssd_decode(mp, h, _tree_idx(cache["mamba"], i_mamba), cfg)
+            elif mode == "prefill":
+                y, c = ssm.ssd_forward(mp, h, cfg, return_state=True)
+            else:
+                y, c = ssm.ssd_forward(mp, h, cfg), None
+            x = x + y
+            new_cache["mamba"].append(c)
+            i_mamba += 1
+        ln = _tree_idx(p["ffn_ln"], i)
+        h2 = _norm(cfg, x, ln)
+        if i % m.interleave == m.interleave - 1:
+            y, aux = mlp.moe(_tree_idx(p["moe"], i_moe), h2, cfg)
+            aux_total = aux_total + aux
+            i_moe += 1
+        else:
+            y = mlp.mlp(_tree_idx(p["dense"], i_dense), h2, cfg)
+            i_dense += 1
+        x = x + y
+    if mode == "train":
+        nc = None
+    else:
+        nc = {"mamba": jax.tree_util.tree_map(
+            lambda *ts: jnp.stack(ts), *new_cache["mamba"]),
+            "attn": new_cache["attn"]}
+    return x, nc, aux_total
+
+
+# ---------------------------------------------------------------------------
+# encoder / decoder units (whisper)
+# ---------------------------------------------------------------------------
+
+def init_enc_block(rng, cfg: ModelConfig):
+    r = common.split_rngs(rng, 2)
+    return {"ln1": _norm_init(cfg), "attn": attn.init_attn(r[0], cfg),
+            "ln2": _norm_init(cfg), "mlp": mlp.init_mlp(r[1], cfg)}
+
+
+def enc_block(p, x, cfg):
+    x = x + attn.attn_full(p["attn"], _norm(cfg, x, p["ln1"]), cfg,
+                           causal=False)
+    x = x + mlp.mlp(p["mlp"], _norm(cfg, x, p["ln2"]), cfg)
+    return x
+
+
+def init_dec_block(rng, cfg: ModelConfig):
+    r = common.split_rngs(rng, 3)
+    return {"ln1": _norm_init(cfg), "self": attn.init_attn(r[0], cfg),
+            "ln2": _norm_init(cfg), "cross": attn.init_attn(r[1], cfg),
+            "ln3": _norm_init(cfg), "mlp": mlp.init_mlp(r[2], cfg)}
+
+
+def dec_block(p, x, cfg, *, memory=None, mode="train", cache=None,
+              pos=None, cache_len=None):
+    """cache = {self: kv-cache, cross: precomputed {k, v}} (decode)."""
+    h = _norm(cfg, x, p["ln1"])
+    if mode == "decode":
+        a, self_c = attn.attn_decode(p["self"], h, cache["self"], pos, cfg)
+        cross_kv = cache["cross"]
+    elif mode == "prefill":
+        a, self_c = attn.attn_full(p["self"], h, cfg, return_cache=True,
+                                   cache_len=cache_len)
+        k, v = attn._project_kv(p["cross"], memory, cfg)
+        cross_kv = {"k": k, "v": v}
+    else:
+        a, self_c, cross_kv = attn.attn_full(p["self"], h, cfg), None, None
+    x = x + a
+    x = x + attn.attn_cross(p["cross"], _norm(cfg, x, p["ln2"]), memory, cfg,
+                            mem_kv=cross_kv)
+    x = x + mlp.mlp(p["mlp"], _norm(cfg, x, p["ln3"]), cfg)
+    new_cache = None if mode == "train" else {"self": self_c, "cross": cross_kv}
+    return x, new_cache, jnp.float32(0.0)

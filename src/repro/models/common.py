@@ -1,0 +1,91 @@
+"""Shared model components: norms, rotary embeddings, initializers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight + bias).astype(x.dtype)
+
+
+def norm_apply(x, params, kind: str, eps: float):
+    if kind == "rmsnorm":
+        return rms_norm(x, params["w"], eps)
+    return layer_norm(x, params["w"], params["b"], eps)
+
+
+def norm_init(d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0,
+               m_rope_sections=None):
+    """x: [B, S, H, D]; positions: [B, S] (standard) or [3, B, S] (M-RoPE,
+    temporal/height/width position streams per qwen2-vl).
+
+    M-RoPE splits the D/2 frequency slots into three contiguous sections,
+    each rotated by its own position stream."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))             # [D/2]
+    if m_rope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,D/2]
+    else:
+        secs = m_rope_sections
+        assert sum(secs) == d // 2, (secs, d)
+        parts = []
+        off = 0
+        for i, s in enumerate(secs):
+            p = positions[i]                               # [B, S]
+            parts.append(p[..., None].astype(jnp.float32) * freqs[off:off + s])
+            off += s
+        ang = jnp.concatenate(parts, axis=-1)              # [B,S,D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, d_in: int, d_out: int, dtype=jnp.bfloat16, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+def split_rngs(rng, n: int):
+    return list(jax.random.split(rng, n))

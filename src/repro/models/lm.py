@@ -1,0 +1,265 @@
+"""Top-level language models: init / forward / prefill / decode per family.
+
+All families share the skeleton:
+
+    embed (or frontend-stub embeddings) -> scan(blocks) -> norm -> lm_head
+
+with layer params stacked on a leading axis and the stack run under
+jax.lax.scan (optionally remat'd), so jaxpr/HLO size is depth-independent.
+
+Caches are pytrees stacked over the scan axis; decode threads them through
+the same scan.  Whisper (encdec) runs two scans and carries cross-attention
+KV in the cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import blocks, common, ssm
+from repro.models.config import ModelConfig
+from repro.quant.qtensor import qmatmul
+
+BLOCK_FNS = {
+    "dense": (blocks.init_dense_block, blocks.dense_block),
+    "vlm": (blocks.init_dense_block, blocks.dense_block),
+    "moe": (blocks.init_moe_block, blocks.moe_block),
+    "ssm": (blocks.init_ssm_block, blocks.ssm_block),
+    "hybrid": (blocks.init_hybrid_block, blocks.hybrid_block),
+}
+
+
+def n_scan_units(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        assert cfg.n_layers % cfg.hybrid.period == 0
+        return cfg.n_layers // cfg.hybrid.period
+    return cfg.n_layers
+
+
+def _stacked_init(rng, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(rng, n))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg: ModelConfig, max_seq: int = 4096):
+    r = common.split_rngs(rng, 6)
+    dt = jnp.dtype(cfg.dtype)
+    p: dict[str, Any] = {}
+    p["embed"] = common.embed_init(r[0], cfg.vocab, cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = common.dense_init(r[1], cfg.d_model, cfg.vocab, dt)
+    p["final_norm"] = common.norm_init(cfg.d_model, cfg.norm)
+    if cfg.learned_pos:
+        p["pos_embed"] = common.embed_init(r[2], max_seq, cfg.d_model, dt)
+
+    if cfg.family == "encdec":
+        p["enc"] = _stacked_init(r[3], cfg.n_layers,
+                                 lambda k: blocks.init_enc_block(k, cfg))
+        p["enc_norm"] = common.norm_init(cfg.d_model, cfg.norm)
+        p["enc_pos"] = common.embed_init(r[5], max_seq, cfg.d_model, dt)
+        nd = cfg.n_decoder_layers or cfg.n_layers
+        p["dec"] = _stacked_init(r[4], nd,
+                                 lambda k: blocks.init_dec_block(k, cfg))
+    else:
+        init_fn, _ = BLOCK_FNS[cfg.family]
+        p["blocks"] = _stacked_init(r[3], n_scan_units(cfg),
+                                    lambda k: init_fn(k, cfg))
+    return p
+
+
+def _lm_head(p, x, cfg: ModelConfig):
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return qmatmul(x, w).astype(jnp.float32)
+
+
+def _embed(p, tokens_or_embeds, cfg: ModelConfig):
+    if tokens_or_embeds.dtype in (jnp.int32, jnp.int64):
+        return jnp.take(p["embed"], tokens_or_embeds, axis=0)
+    # frontend stub: precomputed frame/patch embeddings
+    return tokens_or_embeds.astype(jnp.dtype(cfg.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decoder-only forward (train) / prefill / decode
+# ---------------------------------------------------------------------------
+
+def forward(params, inputs, cfg: ModelConfig, *, remat: bool = True,
+            positions=None):
+    """inputs: [B,S] int tokens or [B,S,d] stub embeddings -> logits, aux."""
+    if cfg.family == "encdec":
+        return encdec_forward(params, inputs, cfg, remat=remat)
+    x = _embed(params, inputs, cfg)
+    if cfg.learned_pos:
+        x = x + params["pos_embed"][None, :x.shape[1], :]
+    if cfg.m_rope_sections is not None and positions is None:
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s)[None, None, :], (3, b, s))
+    _, block_fn = BLOCK_FNS[cfg.family]
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h2, _, aux_i = block_fn(layer_params, h, cfg, mode="train",
+                                positions=positions)
+        return (h2, aux + aux_i), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    x = common.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    return _lm_head(params, x, cfg), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               s_enc: Optional[int] = None):
+    """Stacked per-scan-unit cache pytree."""
+    n = n_scan_units(cfg)
+
+    def one(_):
+        if cfg.family in ("dense", "vlm", "moe"):
+            return attn_mod.init_cache(cfg, batch, s_max)
+        if cfg.family == "ssm":
+            return ssm.init_ssm_state(cfg, batch)
+        if cfg.family == "hybrid":
+            return {
+                "mamba": jax.tree_util.tree_map(
+                    lambda t: jnp.broadcast_to(
+                        t, (cfg.hybrid.period - 1,) + t.shape),
+                    ssm.init_ssm_state(cfg, batch)),
+                "attn": attn_mod.init_cache(cfg, batch, s_max),
+            }
+        if cfg.family == "encdec":
+            return {
+                "self": attn_mod.init_cache(cfg, batch, s_max),
+                "cross": {
+                    "k": jnp.zeros((batch, s_enc or s_max, cfg.n_kv,
+                                    cfg.head_dim), jnp.dtype(cfg.dtype)),
+                    "v": jnp.zeros((batch, s_enc or s_max, cfg.n_kv,
+                                    cfg.head_dim), jnp.dtype(cfg.dtype)),
+                },
+            }
+        raise ValueError(cfg.family)
+
+    if cfg.family == "encdec":
+        n = cfg.n_decoder_layers or cfg.n_layers
+    unit = one(None)
+    return jax.tree_util.tree_map(
+        lambda t: jnp.broadcast_to(t[None], (n,) + t.shape).copy(), unit)
+
+
+def prefill(params, inputs, cfg: ModelConfig, cache_len: int,
+            positions=None):
+    """Run the prompt, return (last-position logits, cache)."""
+    if cfg.family == "encdec":
+        return encdec_prefill(params, inputs, cfg, cache_len)
+    x = _embed(params, inputs, cfg)
+    if cfg.learned_pos:
+        x = x + params["pos_embed"][None, :x.shape[1], :]
+    if cfg.m_rope_sections is not None and positions is None:
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s)[None, None, :], (3, b, s))
+    _, block_fn = BLOCK_FNS[cfg.family]
+
+    def body(h, layer_params):
+        h2, cache, _ = block_fn(layer_params, h, cfg, mode="prefill",
+                                positions=positions, cache_len=cache_len)
+        return h2, cache
+
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = common.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    return _lm_head(params, x[:, -1:, :], cfg), caches
+
+
+def decode_step(params, token_t, cache, pos, cfg: ModelConfig):
+    """token_t: [B,1] int (or [B,1,d] stub embed); pos: [B] int32 positions.
+
+    Returns (logits [B,1,V], new_cache)."""
+    if cfg.family == "encdec":
+        return encdec_decode_step(params, token_t, cache, pos, cfg)
+    x = _embed(params, token_t, cfg)
+    if cfg.learned_pos:
+        x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None, :]
+    _, block_fn = BLOCK_FNS[cfg.family]
+
+    def body(h, xs):
+        layer_params, layer_cache = xs
+        h2, new_cache, _ = block_fn(layer_params, h, cfg, mode="decode",
+                                    cache=layer_cache, pos=pos)
+        return h2, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = common.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    return _lm_head(params, x, cfg), new_caches
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encode(params, embeds, cfg: ModelConfig):
+    x = embeds.astype(jnp.dtype(cfg.dtype))
+    x = x + params["enc_pos"][None, :x.shape[1], :]
+
+    def body(h, layer_params):
+        return blocks.enc_block(layer_params, h, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return common.norm_apply(x, params["enc_norm"], cfg.norm, cfg.norm_eps)
+
+
+def encdec_forward(params, inputs, cfg: ModelConfig, *, remat: bool = True):
+    """inputs: (audio_embeds [B,S_enc,d], dec_tokens [B,S_dec])."""
+    audio, dec_tokens = inputs
+    memory = encode(params, audio, cfg)
+    x = jnp.take(params["embed"], dec_tokens, axis=0)
+    x = x + params["pos_embed"][None, :x.shape[1], :]
+
+    def body(carry, layer_params):
+        h, = carry
+        h2, _, _ = blocks.dec_block(layer_params, h, cfg, memory=memory,
+                                    mode="train")
+        return (h2,), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x,), _ = jax.lax.scan(body, (x,), params["dec"])
+    x = common.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    return _lm_head(params, x, cfg), jnp.float32(0.0)
+
+
+def encdec_prefill(params, inputs, cfg: ModelConfig, cache_len: int):
+    audio, dec_tokens = inputs
+    memory = encode(params, audio, cfg)
+    x = jnp.take(params["embed"], dec_tokens, axis=0)
+    x = x + params["pos_embed"][None, :x.shape[1], :]
+
+    def body(h, layer_params):
+        h2, cache, _ = blocks.dec_block(layer_params, h, cfg, memory=memory,
+                                        mode="prefill", cache_len=cache_len)
+        return h2, cache
+
+    x, caches = jax.lax.scan(body, x, params["dec"])
+    x = common.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    return _lm_head(params, x[:, -1:, :], cfg), caches
+
+
+def encdec_decode_step(params, token_t, cache, pos, cfg: ModelConfig):
+    x = jnp.take(params["embed"], token_t, axis=0)
+    x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None, :]
+
+    def body(h, xs):
+        layer_params, layer_cache = xs
+        h2, new_cache, _ = blocks.dec_block(layer_params, h, cfg, memory=None,
+                                            mode="decode", cache=layer_cache,
+                                            pos=pos)
+        return h2, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec"], cache))
+    x = common.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    return _lm_head(params, x, cfg), new_caches

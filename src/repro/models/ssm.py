@@ -1,0 +1,197 @@
+"""Mamba2 SSD (state-space duality) layer -- chunked training/prefill form
+plus constant-memory single-token decode (arXiv:2405.21060).
+
+Chunked SSD: the sequence is split into chunks of Q tokens processed by a
+lax.scan (so only ONE chunk's quadratic term is live at a time -- essential
+at prefill_32k scale); each chunk computes a quadratic intra-chunk term
+(attention-like, MXU-friendly) plus the contribution of the carried state:
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t . h_t + D * x_t
+
+State per layer: [B, H, P, N] -- constant in sequence length, which is what
+makes the long_500k decode cell runnable for ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+from repro.quant.qtensor import qmatmul
+from repro.models.config import ModelConfig, SSMConfig
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm or SSMConfig()
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return s, d_inner, n_heads, conv_ch
+
+
+def init_ssm(rng, cfg: ModelConfig):
+    s, d_inner, n_heads, conv_ch = dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    r = common.split_rngs(rng, 4)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    return {
+        "in_proj": common.dense_init(r[0], d, d_in_proj, dt),
+        "conv_w": (jax.random.normal(r[1], (s.conv_width, conv_ch),
+                                     jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": common.dense_init(r[3], d_inner, d, dt),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    s, d_inner, n_heads, _ = dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, width: int):
+    """Depthwise causal conv via explicit shifts (width is small)."""
+    out = xbc * conv_w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i, :]
+        out = out + shifted * conv_w[-1 - i]
+    return jax.nn.silu(out + conv_b)
+
+
+def _segsum_decay(da_cs):
+    """L[i, j] = exp(da_cs[i] - da_cs[j]) for i >= j else 0.
+    da_cs: [B, Q, H] -> [B, H, Q, Q]."""
+    q = da_cs.shape[-2]
+    diff = da_cs[:, :, None, :] - da_cs[:, None, :, :]       # [B,i,j,H]
+    diff = jnp.moveaxis(diff, -1, 1)                         # [B,H,i,j]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_forward(p, x_in, cfg: ModelConfig, initial_state=None,
+                return_state: bool = False):
+    """x_in: [B, L, d_model] -> [B, L, d_model] (+ final {ssm, conv} state)."""
+    s, d_inner, n_heads, conv_ch = dims(cfg)
+    b, l_real, _ = x_in.shape
+    q = min(s.chunk, l_real)
+    l = -(-l_real // q) * q           # pad to a chunk multiple
+    if l != l_real:
+        x_in = jnp.pad(x_in, ((0, 0), (0, l - l_real), (0, 0)))
+    nc = l // q
+    g, n, pd = s.n_groups, s.d_state, s.headdim
+
+    zxbcdt = qmatmul(x_in, p["in_proj"])
+    z, xbc_pre, dtr = _split_proj(zxbcdt, cfg)
+    xbc = _causal_conv(xbc_pre, p["conv_w"], p["conv_b"], s.conv_width)
+    x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+
+    rep = n_heads // g
+    a = -jnp.exp(p["A_log"])                                 # [H]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # [B,L,H]
+    if l != l_real:
+        # padded positions become identity steps (decay 1, zero update) so
+        # the carried/final state is untouched by padding
+        valid = (jnp.arange(l) < l_real)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+
+    # chunk the streams: [nc, B, Q, ...] for lax.scan
+    def chunked(t, shape):
+        return jnp.moveaxis(t.reshape(b, nc, q, *shape), 1, 0)
+
+    xs = dict(
+        x=chunked(x.astype(jnp.float32), (n_heads, pd)),
+        bm=chunked(bmat.astype(jnp.float32), (g, n)),
+        cm=chunked(cmat.astype(jnp.float32), (g, n)),
+        dt=chunked(dt, (n_heads,)),
+    )
+
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((b, n_heads, pd, n), jnp.float32))
+
+    def chunk_step(state, inp):
+        xq, bq, cq, dtq = inp["x"], inp["bm"], inp["cm"], inp["dt"]
+        bh = jnp.repeat(bq, rep, axis=2)                     # [B,Q,H,n]
+        chh = jnp.repeat(cq, rep, axis=2)
+        da = dtq * a                                          # [B,Q,H]
+        da_cs = jnp.cumsum(da, axis=1)
+        lmat = _segsum_decay(da_cs)                           # [B,H,Q,Q]
+        cb = jnp.einsum("bihn,bjhn->bhij", chh, bh)
+        y_diag = jnp.einsum("bhij,bjh,bjhp->bihp", cb * lmat, dtq, xq)
+        decay_in = jnp.exp(da_cs)                             # [B,Q,H]
+        y_off = jnp.einsum("bqhn,bhpn,bqh->bqhp", chh, state, decay_in)
+        decay_states = jnp.exp(da_cs[:, -1:, :] - da_cs)
+        states = jnp.einsum("bqhn,bqh,bqh,bqhp->bhpn",
+                            bh, decay_states, dtq, xq)
+        chunk_decay = jnp.exp(da_cs[:, -1, :])                # [B,H]
+        new_state = chunk_decay[:, :, None, None] * state + states
+        return new_state, y_diag + y_off                      # y: [B,Q,H,pd]
+
+    final_state, ys = jax.lax.scan(chunk_step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, n_heads, pd)
+    xf = x.astype(jnp.float32).reshape(b, l, n_heads, pd)
+    y = y + p["D"][None, None, :, None] * xf
+    y = y.reshape(b, l, d_inner)
+    # gated rmsnorm then out projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = common.rms_norm(y, p["norm_w"], cfg.norm_eps).astype(x_in.dtype)
+    out = qmatmul(y, p["out_proj"])
+    if l != l_real:
+        out = out[:, :l_real, :]
+    if return_state:
+        conv_state = xbc_pre[:, l_real - (s.conv_width - 1):l_real, :]
+        return out, {"ssm": final_state, "conv": conv_state}
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    s, d_inner, n_heads, conv_ch = dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, n_heads, s.headdim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch),
+                          jnp.dtype(cfg.dtype)),
+    }
+
+
+def ssd_decode(p, x_t, state, cfg: ModelConfig):
+    """Single-token decode.  x_t: [B, 1, d_model]; state dict from
+    init_ssm_state / prior steps.  Returns (y_t, new_state)."""
+    s, d_inner, n_heads, conv_ch = dims(cfg)
+    b = x_t.shape[0]
+    g, n, pd = s.n_groups, s.d_state, s.headdim
+
+    zxbcdt = qmatmul(x_t, p["in_proj"])                     # [B,1,*]
+    z, xbc_new, dtr = _split_proj(zxbcdt, cfg)
+    # conv over [cached, new]
+    buf = jnp.concatenate([state["conv"], xbc_new], axis=1)  # [B,W,ch]
+    conv_out = jnp.einsum("bwc,wc->bc", buf, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)[:, None, :]                 # [B,1,ch]
+    new_conv = buf[:, 1:, :]
+
+    x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    xf = x.astype(jnp.float32).reshape(b, n_heads, pd)
+    bh = jnp.repeat(bmat.astype(jnp.float32).reshape(b, g, n),
+                    n_heads // g, axis=1)                   # [B,H,n]
+    chh = jnp.repeat(cmat.astype(jnp.float32).reshape(b, g, n),
+                     n_heads // g, axis=1)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32).reshape(b, n_heads)
+                         + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)                                    # [B,H]
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, bh, xf)
+    new_ssm = da[:, :, None, None] * state["ssm"] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", chh, new_ssm)
+    y = y + p["D"][None, :, None] * xf
+    y = y.reshape(b, 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = common.rms_norm(y, p["norm_w"], cfg.norm_eps).astype(x_t.dtype)
+    out = qmatmul(y, p["out_proj"])
+    return out, {"ssm": new_ssm, "conv": new_conv}

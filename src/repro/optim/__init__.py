@@ -1,0 +1,11 @@
+"""Optimizer substrate: AdamW with sharded states, schedules, clipping,
+and int8 gradient compression with error feedback."""
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               global_norm)
+from repro.optim.schedule import warmup_cosine
+from repro.optim.compression import (compress_grads, decompress_grads,
+                                     compressed_psum)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "compress_grads",
+           "compressed_psum", "decompress_grads", "global_norm",
+           "warmup_cosine"]

@@ -1,0 +1,11 @@
+"""Quantization substrate: symmetric int8/int4 quantization, packed int4
+storage, and quantized linear layers whose naive form exposes exactly the
+narrow-integer patterns the SILVIA passes pack."""
+from repro.quant.quantize import (dequantize, pack_int4, quantize,
+                                  quantize_int4, unpack_int4)
+from repro.quant.linear import (QuantLinearParams, quant_linear,
+                                quantize_linear_params)
+
+__all__ = ["QuantLinearParams", "dequantize", "pack_int4", "quant_linear",
+           "quantize", "quantize_int4", "quantize_linear_params",
+           "unpack_int4"]

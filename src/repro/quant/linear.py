@@ -1,0 +1,63 @@
+"""Quantized linear layers for the serving path.
+
+Three weight formats, selected by `fmt`:
+
+  "w8a8"        int8 weights [K, N] + per-col scales; int8 dynamic act quant;
+                MXU int8 GEMM (kernels/quant_matmul).
+  "w4a8"        int4 weights packed two-per-int8-word [K, N//2]; the SILVIA
+                packing insight applied to the HBM-bound decode path
+                (kernels/packed_matmul): halves weight bytes.
+  "bf16"        no quantization (training / baseline).
+
+`quant_linear` is shape-polymorphic over leading batch dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.quant.quantize import pack_int4, quantize
+
+
+@dataclasses.dataclass
+class QuantLinearParams:
+    fmt: str
+    w: Any              # bf16 [K,N] | int8 [K,N] | packed int8 [K,N//2]
+    w_scale: Any        # f32 [1,N] (quantized formats)
+    bias: Any = None
+
+
+def quantize_linear_params(w, fmt: str, bias=None) -> QuantLinearParams:
+    """Offline weight quantization (per-output-channel scales)."""
+    if fmt == "bf16":
+        return QuantLinearParams(fmt, w.astype(jnp.bfloat16), None, bias)
+    if fmt == "w8a8":
+        q, s = quantize(w, bits=8, axis=1)
+        return QuantLinearParams(fmt, q, s.reshape(1, -1), bias)
+    if fmt == "w4a8":
+        q, s = quantize(w, bits=4, axis=1)
+        return QuantLinearParams(fmt, pack_int4(q), s.reshape(1, -1), bias)
+    raise ValueError(fmt)
+
+
+def quant_linear(x, p: QuantLinearParams):
+    """x: [..., K] float -> [..., N] float32 (bf16 passthrough for fmt=bf16)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if p.fmt == "bf16":
+        y = jnp.dot(x2.astype(jnp.bfloat16), p.w,
+                    preferred_element_type=jnp.float32)
+    else:
+        x_q, x_s = quantize(x2, bits=8, axis=0)
+        if p.fmt == "w8a8":
+            y = kops.quant_matmul(x_q, p.w, x_s, p.w_scale)
+        else:
+            y = kops.packed_w4_matmul(x_q, p.w, x_s, p.w_scale)
+    if p.bias is not None:
+        y = y + p.bias
+    n = y.shape[-1]
+    return y.reshape(*lead, n)

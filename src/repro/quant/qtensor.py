@@ -1,0 +1,116 @@
+"""QTensor: quantized weight leaves + the pluggable matmul they dispatch to.
+
+`common.matmul(x, w)` (re-exported as `quant.qmatmul`) accepts either a plain
+array (bf16 training path) or a QTensor (serving path).  QTensor is a pytree,
+so quantized params flow through jit / shardings / eval_shape unchanged.
+
+Formats:
+  w8a8  q: int8 [..., K, N],    scale: f32 [..., 1, N]
+  w4a8  q: int8 [..., K, N//2] (two int4/word), scale: f32 [..., 1, N]
+
+The w4a8 storage halves weight HBM bytes -- the packing insight applied to
+the memory-bound decode path (see kernels/packed_matmul.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.quant.quantize import pack_int4, quantize
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class QTensor:
+    q: Any
+    scale: Any
+    fmt: str
+
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("q"), self.q),
+                 (jax.tree_util.GetAttrKey("scale"), self.scale)), self.fmt)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    @property
+    def logical_shape(self):
+        s = tuple(self.q.shape)
+        if self.fmt == "w4a8":
+            return s[:-1] + (2 * s[-1],)
+        return s
+
+
+def quantize_weight(w, fmt: str) -> QTensor:
+    """w: [..., K, N] float -> QTensor (per-output-channel scales; leading
+    axes, e.g. stacked layers or experts, keep independent scales)."""
+    bits = 4 if fmt == "w4a8" else 8
+    qmax = 2 ** (bits - 1) - 1
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)       # [..., 1, N]
+    scale = (amax / qmax + 1e-8).astype(jnp.float32)
+    q = jnp.clip(jnp.round(wf / scale), -qmax - 1, qmax).astype(jnp.int8)
+    if fmt == "w4a8":
+        q = pack_int4(q)
+    return QTensor(q, scale, fmt)
+
+
+def _q2d(x2, w: QTensor):
+    x_q, x_s = quantize(x2, bits=8, axis=0)
+    if w.fmt == "w8a8":
+        return kops.quant_matmul(x_q, w.q, x_s, w.scale)
+    return kops.packed_w4_matmul(x_q, w.q, x_s, w.scale)
+
+
+def qmatmul(x, w):
+    """x: [..., K]; w: array [K, N] | QTensor [K, N] | QTensor [E, K, N]
+    (batched expert weights, x then [E, ..., K])."""
+    if not isinstance(w, QTensor):
+        return x @ w
+    if w.q.ndim == 2:
+        lead = x.shape[:-1]
+        y = _q2d(x.reshape(-1, x.shape[-1]), w)
+        return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
+    # batched experts: map over the leading axis
+    assert w.q.ndim == 3 and x.ndim >= 3 and x.shape[0] == w.q.shape[0]
+    lead = x.shape[1:-1]
+    xe = x.reshape(x.shape[0], -1, x.shape[-1])
+    ye = jax.vmap(_q2d)(xe, w)
+    return ye.reshape(x.shape[0], *lead, ye.shape[-1]).astype(x.dtype)
+
+
+def quantize_tree_for_serving(params, fmt: str, min_size: int = 1 << 16,
+                              skip_keys=("router", "embed", "pos")):
+    """Replace every large >=2D float weight leaf with a QTensor.
+
+    Walks the param pytree by path; leaves whose key path contains any of
+    `skip_keys`, 1-D leaves (norms/biases/A_log/...) and small leaves stay
+    in bf16/f32."""
+    if fmt == "bf16":
+        return params
+
+    def visit(path, leaf):
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        is_float = hasattr(leaf, "dtype") and leaf.dtype in (
+            jnp.float32, jnp.bfloat16, jnp.float16)
+        if (not hasattr(leaf, "ndim") or leaf.ndim < 2 or not is_float
+                or leaf.size < min_size
+                or min(leaf.shape[-2:]) < 64   # stacked vectors / conv taps
+                or any(k in keys for k in skip_keys)):
+            return leaf
+        if leaf.ndim == 2 and "lm_head" not in keys:
+            # 2-D leaves inside the stacked block tree are per-layer
+            # vectors (norms etc.) -- only the unstacked lm_head matmul
+            # weight is a real 2-D GEMM operand
+            return leaf
+        if leaf.shape[-1] % 2 and fmt == "w4a8":
+            return quantize_weight(leaf, "w8a8")
+        return quantize_weight(leaf, fmt)
+
+    return jax.tree_util.tree_map_with_path(visit, params)

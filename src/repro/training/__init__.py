@@ -1,0 +1,5 @@
+"""Training substrate: loss, train step, microbatched accumulation."""
+from repro.training.step import (TrainConfig, loss_fn, make_train_step,
+                                 make_serve_fns)
+
+__all__ = ["TrainConfig", "loss_fn", "make_serve_fns", "make_train_step"]

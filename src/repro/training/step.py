@@ -1,0 +1,113 @@
+"""Train / serve step construction for every architecture family.
+
+`make_train_step(cfg, train_cfg)` returns a pure function
+    step(params, opt_state, batch) -> (params, opt_state, metrics)
+with optional microbatched gradient accumulation (a lax.scan over
+microbatches -- activation memory / collective-size lever) and AdamW.
+
+`make_serve_fns(cfg)` returns (prefill_fn, decode_fn) for the serving cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update, warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatches: int = 1          # gradient accumulation factor
+    z_loss: float = 1e-4           # logit normalizer regularization
+    aux_loss_weight: float = 0.01  # MoE load balancing
+    remat: bool = True
+    schedule_total: int = 10000
+    schedule_warmup: int = 200
+
+
+def loss_fn(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
+    """batch: {tokens: [B, S+1]} (decoder-only) or
+    {audio: [B,Se,d], tokens: [B, Sd+1]} (encdec) or
+    {embeds: [B,S,d], labels: [B,S]} (vlm stub)."""
+    if cfg.family == "encdec":
+        inputs = (batch["audio"], batch["tokens"][:, :-1])
+        labels = batch["tokens"][:, 1:]
+        logits, aux = lm.forward(params, inputs, cfg, remat=tcfg.remat)
+    elif "embeds" in batch:
+        logits, aux = lm.forward(params, batch["embeds"], cfg,
+                                 remat=tcfg.remat)
+        labels = batch["labels"]
+    else:
+        tokens = batch["tokens"]
+        logits, aux = lm.forward(params, tokens[:, :-1], cfg,
+                                 remat=tcfg.remat)
+        labels = tokens[:, 1:]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(lse - ll)
+    zl = tcfg.z_loss * jnp.mean(jnp.square(lse))
+    total = nll + zl + tcfg.aux_loss_weight * aux
+    return total, {"loss": nll, "z_loss": zl, "aux_loss": aux}
+
+
+def _split_microbatches(batch, n: int):
+    return jax.tree_util.tree_map(
+        lambda t: t.reshape(n, t.shape[0] // n, *t.shape[1:]), batch)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, cfg=cfg, tcfg=tcfg), has_aux=True)
+
+    def step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            mb = _split_microbatches(batch, tcfg.microbatches)
+
+            def accum(carry, mb_batch):
+                gsum, msum = carry
+                (_, metrics), grads = grad_fn(params, mb_batch)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                msum = jax.tree_util.tree_map(jnp.add, msum, metrics)
+                return (gsum, msum), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mzero = {"loss": 0.0, "z_loss": 0.0, "aux_loss": 0.0}
+            mzero = jax.tree_util.tree_map(jnp.float32, mzero)
+            (gsum, msum), _ = jax.lax.scan(accum, (zeros, mzero), mb)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / tcfg.microbatches, gsum)
+            metrics = jax.tree_util.tree_map(
+                lambda m: m / tcfg.microbatches, msum)
+        else:
+            (_, metrics), grads = grad_fn(params, batch)
+        lr_scale = warmup_cosine(opt_state["step"],
+                                 warmup=tcfg.schedule_warmup,
+                                 total=tcfg.schedule_total)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, tcfg.optimizer, lr_scale)
+        metrics = dict(metrics, **opt_metrics, lr_scale=lr_scale)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_serve_fns(cfg: ModelConfig):
+    """(prefill_fn, decode_fn) with signatures matching the shape cells."""
+
+    def prefill_fn(params, inputs, cache_len):
+        return lm.prefill(params, inputs, cfg, cache_len=cache_len)
+
+    def decode_fn(params, token_t, cache, pos):
+        return lm.decode_step(params, token_t, cache, pos, cfg)
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,9 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here -- tests see the real single
+CPU device; only launch/dryrun.py forces 512 host devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

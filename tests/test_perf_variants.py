@@ -1,0 +1,107 @@
+"""The §Perf levers must preserve semantics: grouped / shard_map MoE
+dispatch, chunked attention, int8 KV cache, pure-DP sharding."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.distributed import context
+from repro.launch.mesh import make_mesh
+from repro.models import lm, mlp
+
+
+def _moe_cfg(cf=8.0, **kw):
+    cfg = configs.get_reduced_config("granite-moe-1b-a400m")
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=cf, **kw))
+
+
+def test_grouped_dispatch_matches_global():
+    rng = jax.random.PRNGKey(0)
+    cfg = _moe_cfg()
+    p = mlp.init_moe(rng, cfg)
+    x = jax.random.normal(rng, (2, 16, cfg.d_model), jnp.float32)
+    y1, a1 = mlp.moe(p, x, cfg)
+    y2, a2 = mlp.moe(p, x, _moe_cfg(dispatch="grouped", dispatch_groups=4))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    assert abs(float(a1 - a2)) < 1e-5
+
+
+def test_shard_map_dispatch_matches_global():
+    rng = jax.random.PRNGKey(1)
+    cfg = _moe_cfg()
+    p = mlp.init_moe(rng, cfg)
+    x = jax.random.normal(rng, (2, 16, cfg.d_model), jnp.float32)
+    y1, a1 = mlp.moe(p, x, cfg)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg_sm = _moe_cfg(dispatch="shard_map")
+    with context.mesh_scope(mesh, ("data",), "model"):
+        y2, a2 = jax.jit(lambda p, x: mlp.moe(p, x, cfg_sm))(p, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    assert abs(float(a1 - a2)) < 1e-5
+
+
+def test_shard_map_dispatch_differentiable():
+    rng = jax.random.PRNGKey(2)
+    cfg = _moe_cfg(dispatch="shard_map")
+    p = mlp.init_moe(rng, cfg)
+    x = jax.random.normal(rng, (2, 8, cfg.d_model), jnp.float32)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with context.mesh_scope(mesh, ("data",), "model"):
+        g = jax.jit(jax.grad(
+            lambda p, x: jnp.sum(mlp.moe(p, x, cfg)[0] ** 2)))(p, x)
+    total = sum(float(jnp.abs(l).sum())
+                for l in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(total) and total > 0
+
+
+def test_chunked_attention_matches_full():
+    cfg0 = dataclasses.replace(configs.get_reduced_config("yi-6b"),
+                               dtype="float32")
+    cfg1 = dataclasses.replace(cfg0, attn_q_chunk=16)
+    rng = jax.random.PRNGKey(3)
+    params = lm.init_params(rng, cfg0, max_seq=72)
+    toks = jax.random.randint(rng, (2, 64), 0, cfg0.vocab)
+    l0, _ = lm.forward(params, toks, cfg0, remat=False)
+    l1, _ = lm.forward(params, toks, cfg1, remat=False)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_int8_kv_decode_accuracy():
+    cfg = dataclasses.replace(configs.get_reduced_config("yi-6b"),
+                              dtype="float32", serve_kv_dtype="int8")
+    rng = jax.random.PRNGKey(4)
+    S = 32
+    params = lm.init_params(rng, cfg, max_seq=S * 2)
+    toks = jax.random.randint(rng, (2, S + 1), 0, cfg.vocab)
+    lg_full, _ = lm.forward(params, toks, cfg, remat=False)
+    _, cache = lm.prefill(params, toks[:, :S], cfg, cache_len=S + 8)
+    assert cache["attn"]["k"].dtype == jnp.int8 if "attn" in cache else True
+    flat = jax.tree_util.tree_leaves(cache)
+    assert any(l.dtype == jnp.int8 for l in flat)
+    lg_dec, _ = lm.decode_step(params, toks[:, S:S + 1], cache,
+                               jnp.full((2,), S, jnp.int32), cfg)
+    rel = float(jnp.abs(lg_dec[:, 0] - lg_full[:, S]).max()
+                / jnp.abs(lg_full).max())
+    assert rel < 0.05, rel
+
+
+def test_pure_dp_specs_replicate_tp():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import param_pspecs
+    cfg = configs.get_reduced_config("smollm-135m")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    params = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg, max_seq=64))
+    specs = param_pspecs(params, mesh, cfg, mode="pure_dp")
+    flat = jax.tree_util.tree_leaves(specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+    for s in flat:
+        for entry in s:
+            if entry is not None:
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                assert "model" not in axes or len(axes) > 1, s

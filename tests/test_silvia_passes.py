@@ -1,0 +1,293 @@
+"""SILVIA pass behaviour: the paper's running examples + legality rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as silvia
+from repro.core import bounds, opcount
+from repro.core.prims import (silvia_packed_add_p, silvia_packed_muladd_p,
+                              silvia_packed_mul4_p)
+
+
+def i8(rng, shape, lo=-128, hi=128):
+    return jnp.asarray(rng.integers(lo, hi, shape), jnp.int8)
+
+
+def prim_names(closed):
+    return [e.primitive.name for e in closed.jaxpr.eqns]
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1 / Fig. 4: two muls with a shared operand -> one packed call
+# ---------------------------------------------------------------------------
+
+def test_fig1_running_example(rng):
+    def fig1(a0, a1, b):
+        c0 = a0.astype(jnp.int32) * b.astype(jnp.int32)
+        c1 = a1.astype(jnp.int32) * b.astype(jnp.int32)
+        return c0, c1
+
+    args = [i8(rng, (16,)) for _ in range(3)]
+    after = silvia.optimized_jaxpr(fig1, *args,
+                                   passes=[silvia.PassConfig(op="muladd")])
+    names = prim_names(after)
+    assert names == ["silvia_packed_muladd"], names  # converts DCE'd too
+    opt = silvia.optimize(fig1, [silvia.PassConfig(op="muladd")])
+    for got, want in zip(opt(*args), fig1(*args)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fig4_alap_rearrangement(rng):
+    """Fig. 4a: first use of c0 precedes a1's definition chain -- without
+    ALAP there is no insertion point; the pass must still pack."""
+    def fn(a0, a1, b):
+        c0 = a0.astype(jnp.int32) * b.astype(jnp.int32)
+        u0 = c0 + 1           # early use of c0 (the "store")
+        c1 = a1.astype(jnp.int32) * b.astype(jnp.int32)
+        u1 = c1 + 2
+        return u0, u1
+
+    args = [i8(rng, (8,)) for _ in range(3)]
+    after = silvia.optimized_jaxpr(fn, *args,
+                                   passes=[silvia.PassConfig(op="muladd")])
+    assert "silvia_packed_muladd" in prim_names(after)
+    opt = silvia.optimize(fn, [silvia.PassConfig(op="muladd")])
+    for got, want in zip(opt(*args), fn(*args)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dependent_muls_not_packed(rng):
+    """c1 depends on c0 -> no valid tuple (independence, sec. 3.2)."""
+    def fn(a0, b):
+        c0 = a0.astype(jnp.int32) * b.astype(jnp.int32)
+        c1 = (c0.astype(jnp.int8)).astype(jnp.int32) * b.astype(jnp.int32)
+        return c1
+
+    args = [i8(rng, (8,)) for _ in range(2)]
+    after = silvia.optimized_jaxpr(fn, *args,
+                                   passes=[silvia.PassConfig(op="muladd")])
+    assert "silvia_packed_muladd" not in prim_names(after)
+
+
+def test_no_shared_operand_no_pack(rng):
+    def fn(a0, a1, b0, b1):
+        return (a0.astype(jnp.int32) * b0.astype(jnp.int32),
+                a1.astype(jnp.int32) * b1.astype(jnp.int32))
+
+    args = [i8(rng, (8,)) for _ in range(4)]
+    after = silvia.optimized_jaxpr(fn, *args,
+                                   passes=[silvia.PassConfig(op="muladd")])
+    assert "silvia_packed_muladd" not in prim_names(after)
+
+
+def test_wide_operands_not_packed(rng):
+    """16-bit operands exceed the 8-bit muladd lanes."""
+    def fn(a0, a1, b):
+        return (a0.astype(jnp.int32) * b.astype(jnp.int32),
+                a1.astype(jnp.int32) * b.astype(jnp.int32))
+
+    args = [jnp.asarray(rng.integers(-30000, 30000, (8,)), jnp.int16)
+            for _ in range(3)]
+    after = silvia.optimized_jaxpr(fn, *args,
+                                   passes=[silvia.PassConfig(op="muladd")])
+    assert "silvia_packed_muladd" not in prim_names(after)
+
+
+# ---------------------------------------------------------------------------
+# MAD trees + Eq. 2 chain splitting (sec. 3.3)
+# ---------------------------------------------------------------------------
+
+def test_mad_tree_chain_split(rng):
+    def trees(a, b, c):
+        f = lambda x: x.astype(jnp.int32)
+        ta = [f(a[i]) * f(c[i]) for i in range(4)]
+        tb = [f(b[i]) * f(c[i]) for i in range(4)]
+        pa = (ta[0] + ta[1]) + (ta[2] + ta[3])
+        pb = (tb[0] + tb[1]) + (tb[2] + tb[3])
+        return pa, pb
+
+    mk = lambda: tuple(i8(rng, (32,)) for _ in range(4))
+    args = [mk(), mk(), mk()]
+    after = silvia.optimized_jaxpr(trees, *args,
+                                   passes=[silvia.PassConfig(op="muladd")])
+    names = prim_names(after)
+    # 8-bit lanes on the 32-bit unit: N_max = 1 -> 4 packed units + ext adds
+    assert names.count("silvia_packed_muladd") == 4
+    assert names.count("add") == 6  # external adder tree (2 lanes x 3 adds)
+    opt = silvia.optimize(trees, [silvia.PassConfig(op="muladd")])
+    for got, want in zip(opt(*args), trees(*args)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mad_tree_4bit_single_chain(rng):
+    """4-bit packed operands: Eq. 2 gives N=31 -> one packed unit."""
+    def trees(a, b, c):
+        f = lambda x: x.astype(jnp.int32)
+        wh = lambda x: silvia.width_hint(x, 4)
+        ta = [f(wh(a[i])) * f(c[i]) for i in range(4)]
+        tb = [f(wh(b[i])) * f(c[i]) for i in range(4)]
+        pa = (ta[0] + ta[1]) + (ta[2] + ta[3])
+        pb = (tb[0] + tb[1]) + (tb[2] + tb[3])
+        return pa, pb
+
+    mk4 = lambda: tuple(i8(rng, (16,), -8, 8) for _ in range(4))
+    args = [mk4(), mk4(), tuple(i8(rng, (16,)) for _ in range(4))]
+    after = silvia.optimized_jaxpr(
+        trees, *args, passes=[silvia.PassConfig(op="muladd", m_bits=4)])
+    names = prim_names(after)
+    assert names.count("silvia_packed_muladd") == 1
+    assert "add" not in names   # absorbed into the in-lane chain
+    opt = silvia.optimize(trees, [silvia.PassConfig(op="muladd", m_bits=4)])
+    for got, want in zip(opt(*args), trees(*args)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_eq2_paper_parity():
+    """The same Eq. 2 that bounds our lanes reproduces the paper's N<=7
+    (18-bit low lane, signed 8-bit operands) and the TPU-lane numbers."""
+    assert bounds.eq2_max_chain(8, 8, 18, signed=True) == 7     # paper 2.2
+    assert bounds.muladd2_max_chain(8, 8) == 1                  # i32 lane
+    assert bounds.muladd2_max_chain(4, 8) == 31                 # w4a8
+    assert bounds.eq2_max_chain(4, 4, 8, signed=True) == 1
+
+
+# ---------------------------------------------------------------------------
+# SILVIAAdd
+# ---------------------------------------------------------------------------
+
+def test_four8_full_tuple(rng):
+    def adds(xs, ys):
+        return tuple(x + y for x, y in zip(xs, ys))
+
+    xs = tuple(i8(rng, (16,)) for _ in range(4))
+    ys = tuple(i8(rng, (16,)) for _ in range(4))
+    after = silvia.optimized_jaxpr(
+        adds, xs, ys, passes=[silvia.PassConfig(op="add", op_size=8)])
+    names = prim_names(after)
+    assert names == ["silvia_packed_add"]
+    opt = silvia.optimize(adds, [silvia.PassConfig(op="add", op_size=8)])
+    for got, want in zip(opt(xs, ys), adds(xs, ys)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_two16_and_sub(rng):
+    def subs(x0, y0, x1, y1):
+        return x0 - y0, x1 - y1
+
+    args = [jnp.asarray(rng.integers(-30000, 30000, (8,)), jnp.int16)
+            for _ in range(4)]
+    after = silvia.optimized_jaxpr(
+        subs, *args, passes=[silvia.PassConfig(op="add", op_size=16,
+                                               inst="sub")])
+    assert "silvia_packed_add" in prim_names(after)
+    opt = silvia.optimize(subs, [silvia.PassConfig(op="add", op_size=16)])
+    for got, want in zip(opt(*args), subs(*args)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_partial_tuple_packs(rng):
+    """3 adds still pack into a four8 unit (one idle lane)."""
+    def adds(xs, ys):
+        return tuple(x + y for x, y in zip(xs, ys))
+
+    xs = tuple(i8(rng, (16,)) for _ in range(3))
+    ys = tuple(i8(rng, (16,)) for _ in range(3))
+    after = silvia.optimized_jaxpr(
+        adds, xs, ys, passes=[silvia.PassConfig(op="add", op_size=8)])
+    assert "silvia_packed_add" in prim_names(after)
+
+
+def test_i32_adds_of_narrow_sources_pack_two16(rng):
+    """int8 sources widened to i32: result needs 9 bits -> two16 mode."""
+    def adds(x0, y0, x1, y1):
+        f = lambda t: t.astype(jnp.int32)
+        return f(x0) + f(y0), f(x1) + f(y1)
+
+    args = [i8(rng, (16,)) for _ in range(4)]
+    after8 = silvia.optimized_jaxpr(
+        adds, *args, passes=[silvia.PassConfig(op="add", op_size=8)])
+    assert "silvia_packed_add" not in prim_names(after8)  # 9 bits > 8 lane
+    after16 = silvia.optimized_jaxpr(
+        adds, *args, passes=[silvia.PassConfig(op="add", op_size=16)])
+    assert "silvia_packed_add" in prim_names(after16)
+    opt = silvia.optimize(adds, [silvia.PassConfig(op="add", op_size=16)])
+    for got, want in zip(opt(*args), adds(*args)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# factor-4 (sec. 2.3) + default pipeline + recursion
+# ---------------------------------------------------------------------------
+
+def test_mul4(rng):
+    def fn(a, b):
+        f = lambda x: silvia.width_hint(x, 4).astype(jnp.int32)
+        b4 = f(b)
+        return tuple(f(a[i]) * b4 for i in range(4))
+
+    a = tuple(i8(rng, (16,), -8, 8) for _ in range(4))
+    b = i8(rng, (16,), -8, 8)
+    after = silvia.optimized_jaxpr(fn, a, b,
+                                   passes=[silvia.PassConfig(op="mul4")])
+    assert prim_names(after).count("silvia_packed_mul4") == 1
+    opt = silvia.optimize(fn, [silvia.PassConfig(op="mul4")])
+    for got, want in zip(opt(a, b), fn(a, b)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_float_code_untouched(rng):
+    def fn(x, y):
+        return x * y + jnp.sin(x)
+
+    x = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    before = jax.make_jaxpr(fn)(x, x)
+    after = silvia.optimized_jaxpr(fn, x, x)
+    assert prim_names(after) == [e.primitive.name for e in before.jaxpr.eqns]
+
+
+def test_scan_body_optimized(rng):
+    def fn(a, b):
+        def body(c, xs):
+            x, y = xs
+            p0 = x.astype(jnp.int32) * y.astype(jnp.int32)
+            p1 = (x + 1).astype(jnp.int32) * y.astype(jnp.int32)
+            return c + p0.sum() + p1.sum(), p0
+        return jax.lax.scan(body, jnp.int32(0), (a, b))
+
+    a, b = i8(rng, (4, 16), -100, 100), i8(rng, (4, 16), -100, 100)
+    after = silvia.optimized_jaxpr(fn, a, b,
+                                   passes=[silvia.PassConfig(op="muladd")])
+    scan_eqn = next(e for e in after.jaxpr.eqns if e.primitive.name == "scan")
+    inner = [e.primitive.name for e in scan_eqn.params["jaxpr"].jaxpr.eqns]
+    assert "silvia_packed_muladd" in inner
+    opt = silvia.optimize(fn, [silvia.PassConfig(op="muladd")])
+    for got, want in zip(opt(a, b), fn(a, b)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_optimize_under_jit_grad_compat(rng):
+    """The rewritten function must stay jit-compatible."""
+    def fn(a0, a1, b):
+        return (a0.astype(jnp.int32) * b.astype(jnp.int32)
+                + a1.astype(jnp.int32) * b.astype(jnp.int32))
+
+    args = [i8(rng, (8,)) for _ in range(3)]
+    opt = jax.jit(silvia.optimize(fn, [silvia.PassConfig(op="muladd")]))
+    np.testing.assert_array_equal(np.asarray(opt(*args)),
+                                  np.asarray(fn(*args)))
+
+
+def test_ops_per_unit_metric(rng):
+    def fn(a0, a1, b):
+        return (a0.astype(jnp.int32) * b.astype(jnp.int32),
+                a1.astype(jnp.int32) * b.astype(jnp.int32))
+
+    args = [i8(rng, (8,)) for _ in range(3)]
+    before = opcount.count_ops(jax.make_jaxpr(fn)(*args))
+    after = opcount.count_ops(silvia.optimized_jaxpr(
+        fn, *args, passes=[silvia.PassConfig(op="muladd")]))
+    assert before.mul_density == 1.0
+    assert after.mul_density == 2.0
+    rep = opcount.density_report(before, after)
+    assert rep["unit_reduction"] == 0.5
