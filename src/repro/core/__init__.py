@@ -8,15 +8,17 @@ The paper's contribution as a composable JAX module:
                                 silvia.PassConfig(op="add", op_size=8)])
 """
 from repro.core import bounds, ddg, dce, ir, opcount, prims
-from repro.core.pipeline import (DEFAULT_PASSES, PassConfig, optimize,
-                                 optimize_closed_jaxpr, optimized_jaxpr)
+from repro.core.pipeline import (DEFAULT_PASSES, PassConfig, RewriteCache,
+                                 optimize, optimize_closed_jaxpr,
+                                 optimized_jaxpr)
 from repro.core.prims import width_hint
 from repro.core.silvia import SILVIA
 from repro.core.silvia_add import SILVIAAdd
 from repro.core.silvia_muladd import SILVIAMul4, SILVIAMuladd
 
 __all__ = [
-    "DEFAULT_PASSES", "PassConfig", "SILVIA", "SILVIAAdd", "SILVIAMul4",
-    "SILVIAMuladd", "bounds", "ddg", "dce", "ir", "opcount", "optimize",
-    "optimize_closed_jaxpr", "optimized_jaxpr", "prims", "width_hint",
+    "DEFAULT_PASSES", "PassConfig", "RewriteCache", "SILVIA", "SILVIAAdd",
+    "SILVIAMul4", "SILVIAMuladd", "bounds", "ddg", "dce", "ir", "opcount",
+    "optimize", "optimize_closed_jaxpr", "optimized_jaxpr", "prims",
+    "width_hint",
 ]

@@ -215,6 +215,51 @@ class WidthAnalysis:
 
 
 # ---------------------------------------------------------------------------
+# shared per-BB analysis cache
+# ---------------------------------------------------------------------------
+
+class AnalysisCache:
+    """Identity-keyed cache of per-BB analysis state (BBContext).
+
+    The SILVIA passes run as an ordered pipeline over the same BB: a pass
+    that finds nothing to rewrite returns the *same* ClosedJaxpr object, so
+    the next pass can reuse the ALAP schedule, def/use maps and width
+    analysis instead of rebuilding them.  A pass that does rewrite emits a
+    fresh jaxpr object, which misses here -- that identity change IS the
+    invalidation: every distinct BB version is analyzed exactly once.
+
+    Entries keep a strong reference to their jaxpr so CPython cannot recycle
+    the id() while the entry is live.
+    """
+
+    def __init__(self):
+        self._entries: dict[int, tuple[Any, Any]] = {}
+        self.builds = 0
+        self.hits = 0
+
+    def get_or_build(self, jaxpr, build: Callable[[], Any]):
+        ent = self._entries.get(id(jaxpr))
+        if ent is not None and ent[0] is jaxpr:
+            self.hits += 1
+            return ent[1]
+        self.builds += 1
+        val = build()
+        self._entries[id(jaxpr)] = (jaxpr, val)
+        return val
+
+    def evict(self):
+        """Drop cached contexts, keep counters.  Entries are only reusable
+        within one pipeline walk (every new trace makes fresh jaxpr
+        objects), so callers evict between walks to bound memory."""
+        self._entries.clear()
+
+    def clear(self):
+        self._entries.clear()
+        self.builds = 0
+        self.hits = 0
+
+
+# ---------------------------------------------------------------------------
 # schedule items + emit
 # ---------------------------------------------------------------------------
 

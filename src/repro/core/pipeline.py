@@ -11,16 +11,38 @@ mirrors the paper's
     set SILVIA::PASSES [list [dict create OP "muladd"] \
                              [dict create OP "add" OP_SIZE 12]]
     SILVIA::csynth_design
+
+The paper's headline property is that SILVIA is a *zero-cost drop-in*: the
+passes run once at synthesis time.  The serving analogue is compile-once /
+run-many, realized by three cache layers:
+
+* a **trace cache** in `optimize()`: tracing + the SILVIA rewrite + jit
+  compilation happen once per (pytree structure, input avals) signature;
+  subsequent calls dispatch straight into the compiled executable,
+* a **sub-jaxpr rewrite memo** (`RewriteCache`): structurally identical
+  inner BBs (repeated layer bodies, identical scan/cond branches) are
+  rewritten once and the result is spliced everywhere,
+* a **shared analysis cache** (`ir.AnalysisCache`): the ALAP schedule,
+  def/use maps and width analysis of a BB are built once per BB *version*
+  and reused by every pass in the pipeline; a rewrite produces a new jaxpr
+  object, which is exactly the invalidation event.
+
+`optimize()`-wrapped functions expose `cache_info()` / `cache_clear()` so
+tests and benchmarks can assert the compile-once behaviour.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Sequence
+import time
+from typing import Any, Callable, Sequence
+
+import numpy as np
 
 import jax
 from jax.extend import core as jex_core
 
+from repro.core import ir
 from repro.core.silvia import SILVIA
 from repro.core.silvia_add import SILVIAAdd
 from repro.core.silvia_muladd import SILVIAMul4, SILVIAMuladd
@@ -89,13 +111,93 @@ def _map_subjaxprs(eqn, fn):
     return eqn.replace(params=new_params), True
 
 
+# ---------------------------------------------------------------------------
+# rewrite-level caches
+# ---------------------------------------------------------------------------
+
+# Consts up to this many bytes are fingerprinted by content; larger ones by
+# object identity (kept alive by the cache entry), trading cross-object
+# sharing for O(1) keys on weight-sized arrays.
+_CONST_KEY_MAX_BYTES = 1 << 12
+
+
+def _const_key(c) -> Any:
+    a = np.asarray(c) if not hasattr(c, "dtype") else c
+    nbytes = getattr(a, "nbytes", None)
+    if nbytes is not None and nbytes <= _CONST_KEY_MAX_BYTES:
+        try:
+            return ("bytes", str(a.dtype), a.shape, np.asarray(a).tobytes())
+        except Exception:
+            pass
+    return ("id", id(c))
+
+
+def _jaxpr_fingerprint(closed: ClosedJaxpr) -> Any:
+    """Structural key for a ClosedJaxpr: the canonical pretty-print (var
+    names are assigned per-print in order of appearance, so structurally
+    identical jaxprs print identically) plus a fingerprint of the consts."""
+    return (str(closed.jaxpr),
+            tuple(_const_key(c) for c in closed.consts))
+
+
+class RewriteCache:
+    """State shared across one or many `optimize_closed_jaxpr` walks.
+
+    * `analysis`: per-BB-version BBContext cache (ir.AnalysisCache),
+    * `subjaxpr`: (pass signature, fingerprint) -> rewritten ClosedJaxpr,
+      so repeated layer bodies / identical scan bodies are optimized once
+      -- but never across *different* pass lists sharing one cache,
+    * keepalive of the memoized inputs so id()-based const keys stay valid.
+    """
+
+    def __init__(self):
+        self.analysis = ir.AnalysisCache()
+        self.subjaxpr: dict[Any, ClosedJaxpr] = {}
+        self._keepalive: list = []
+        self.subjaxpr_hits = 0
+        self.subjaxpr_misses = 0
+
+    def memo_sub(self, sub: ClosedJaxpr, loop_info, rewrite, passes=()):
+        key = (_pass_signature(passes), _jaxpr_fingerprint(sub), loop_info)
+        hit = self.subjaxpr.get(key)
+        if hit is not None:
+            self.subjaxpr_hits += 1
+            return hit
+        self.subjaxpr_misses += 1
+        out = rewrite(sub)
+        self._keepalive.append((sub, tuple(passes)))  # id()-key stability
+        self.subjaxpr[key] = out
+        return out
+
+    def info(self) -> dict:
+        return {
+            "subjaxpr_hits": self.subjaxpr_hits,
+            "subjaxpr_misses": self.subjaxpr_misses,
+            "analysis_builds": self.analysis.builds,
+            "analysis_hits": self.analysis.hits,
+        }
+
+    def clear(self):
+        self.analysis.clear()
+        self.subjaxpr.clear()
+        self._keepalive.clear()
+        self.subjaxpr_hits = 0
+        self.subjaxpr_misses = 0
+
+
 def optimize_closed_jaxpr(closed: ClosedJaxpr, passes: Sequence[SILVIA],
                           stats: list | None = None,
-                          loop_info=None) -> ClosedJaxpr:
+                          loop_info=None,
+                          cache: RewriteCache | None = None) -> ClosedJaxpr:
     """Apply the pass list to a ClosedJaxpr, recursing into sub-jaxprs.
 
     loop_info: (num_consts, num_carry) when `closed` is a scan body --
-    unlocks the II-aware tuple filter for passes with filter_ii=True."""
+    unlocks the II-aware tuple filter for passes with filter_ii=True.
+    cache: shared RewriteCache; sub-jaxpr rewrites are memoized on it and
+    BB analyses are shared across the passes (a fresh private cache is used
+    when None, preserving the stateless call signature)."""
+    if cache is None:
+        cache = RewriteCache()
     # 1. recurse into inner BBs first
     new_eqns, changed = [], False
     for eqn in closed.jaxpr.eqns:
@@ -103,52 +205,141 @@ def optimize_closed_jaxpr(closed: ClosedJaxpr, passes: Sequence[SILVIA],
         if eqn.primitive.name == "scan":
             inner_loop_info = (eqn.params.get("num_consts", 0),
                                eqn.params.get("num_carry", 0))
-        rec = functools.partial(optimize_closed_jaxpr, passes=passes,
-                                stats=stats, loop_info=inner_loop_info)
+        rewrite = functools.partial(optimize_closed_jaxpr, passes=passes,
+                                    stats=stats, loop_info=inner_loop_info,
+                                    cache=cache)
+        rec = functools.partial(cache.memo_sub, loop_info=inner_loop_info,
+                                rewrite=rewrite, passes=passes)
         ne, ch = _map_subjaxprs(eqn, rec)
         new_eqns.append(ne)
         changed |= ch
     if changed:
         jaxpr = closed.jaxpr.replace(eqns=new_eqns)
         closed = ClosedJaxpr(jaxpr, closed.consts)
-    # 2. run each pass on this BB
+    # 2. run each pass on this BB, sharing the analysis state
     for p in passes:
-        closed, st = p.run(closed, loop_info=loop_info)
+        closed, st = p.run(closed, loop_info=loop_info, cache=cache.analysis)
         if stats is not None:
             st["pass"] = p.name
             stats.append(st)
     return closed
 
 
+# ---------------------------------------------------------------------------
+# optimize(): the compile-once / run-many drop-in wrapper
+# ---------------------------------------------------------------------------
+
+def _pass_signature(passes) -> tuple:
+    """Hashable identity of a pass list (for trace-cache keys)."""
+    sig = []
+    for p in passes:
+        if isinstance(p, PassConfig):
+            sig.append(("cfg",) + dataclasses.astuple(p))
+        else:
+            sig.append(("obj", id(p)))
+    return tuple(sig)
+
+
+def _aval_key(x) -> Any:
+    try:
+        a = jax.api_util.shaped_abstractify(x)
+        return (a.shape, str(a.dtype), getattr(a, "weak_type", False))
+    except Exception:
+        return ("py", type(x), x if isinstance(x, (int, float, bool, str,
+                                                   bytes, type(None))) else id(x))
+
+
+@dataclasses.dataclass
+class _TraceEntry:
+    runner: Callable
+    out_tree: Any
+    rewrite_ms: float
+
+
 def optimize(fn, passes: Sequence[PassConfig | SILVIA] = DEFAULT_PASSES,
-             collect_stats: list | None = None):
+             collect_stats: list | None = None, *, jit: bool = True):
     """Return a drop-in replacement for `fn` whose jaxpr has been rewritten
-    by the SILVIA passes.  Works under jit / grad / shard_map / scan."""
+    by the SILVIA passes.  Works under jit / grad / shard_map / scan.
+
+    Tracing, the SILVIA rewrite and (with jit=True, the default) XLA
+    compilation happen ONCE per input-signature (pytree structure + avals);
+    later calls with the same signature dispatch straight into the cached
+    executable.  A shape/dtype/structure change re-traces.  Identical
+    sub-jaxprs (repeated layer bodies) are rewritten once per wrapper, even
+    across signatures.
+
+    The wrapper exposes:
+      wrapped.cache_info()  -> dict with trace_hits / trace_misses /
+                               subjaxpr_* / analysis_* counters and the
+                               cumulative rewrite wall time (ms),
+      wrapped.cache_clear() -> drop all cached traces and rewrites.
+
+    collect_stats: list that per-BB pass stats dicts are appended to on
+    every cache MISS (hits skip the pipeline entirely, by design).
+    """
     pass_objs = [p.instantiate() if isinstance(p, PassConfig) else p
                  for p in passes]
+
+    trace_cache: dict[Any, _TraceEntry] = {}
+    rewrite_cache = RewriteCache()
+    counters = {"trace_hits": 0, "trace_misses": 0, "rewrite_ms": 0.0}
 
     @functools.wraps(fn)
     def wrapped(*args, **kwargs):
         flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        key = (in_tree, tuple(_aval_key(x) for x in flat))
+        entry = trace_cache.get(key)
+        if entry is None:
+            counters["trace_misses"] += 1
 
-        def flat_fn(*flat_args):
-            a, k = jax.tree_util.tree_unflatten(in_tree, flat_args)
-            return fn(*a, **k)
+            def flat_fn(*flat_args):
+                a, k = jax.tree_util.tree_unflatten(in_tree, flat_args)
+                return fn(*a, **k)
 
-        closed, out_shape = jax.make_jaxpr(flat_fn, return_shape=True)(*flat)
-        out_tree = jax.tree_util.tree_structure(out_shape)
-        closed = optimize_closed_jaxpr(closed, pass_objs, collect_stats)
-        outs = jex_core.jaxpr_as_fun(closed)(*flat)
-        return jax.tree_util.tree_unflatten(out_tree, outs)
+            t0 = time.perf_counter()
+            closed, out_shape = jax.make_jaxpr(flat_fn,
+                                               return_shape=True)(*flat)
+            out_tree = jax.tree_util.tree_structure(out_shape)
+            closed = optimize_closed_jaxpr(closed, pass_objs, collect_stats,
+                                           cache=rewrite_cache)
+            rewrite_ms = (time.perf_counter() - t0) * 1e3
+            counters["rewrite_ms"] += rewrite_ms
+            # BBContexts can't be reused by the next trace (fresh jaxpr
+            # objects); drop them so long-lived wrappers don't accumulate
+            # analysis state.  The sub-jaxpr memo IS reusable across
+            # traces and is bounded by distinct body structures, so it
+            # stays.
+            rewrite_cache.analysis.evict()
+            runner = jex_core.jaxpr_as_fun(closed)
+            if jit:
+                runner = jax.jit(runner)
+            entry = _TraceEntry(runner, out_tree, rewrite_ms)
+            trace_cache[key] = entry
+        else:
+            counters["trace_hits"] += 1
+        outs = entry.runner(*flat)
+        return jax.tree_util.tree_unflatten(entry.out_tree, outs)
 
+    def cache_info() -> dict:
+        return {**counters, **rewrite_cache.info(),
+                "traces": len(trace_cache)}
+
+    def cache_clear():
+        trace_cache.clear()
+        rewrite_cache.clear()
+        counters.update(trace_hits=0, trace_misses=0, rewrite_ms=0.0)
+
+    wrapped.cache_info = cache_info
+    wrapped.cache_clear = cache_clear
     return wrapped
 
 
 def optimized_jaxpr(fn, *example_args, passes=DEFAULT_PASSES,
-                    stats: list | None = None) -> ClosedJaxpr:
+                    stats: list | None = None,
+                    cache: RewriteCache | None = None) -> ClosedJaxpr:
     """Trace fn and return its SILVIA-optimized ClosedJaxpr (for inspection,
     op counting and tests)."""
     pass_objs = [p.instantiate() if isinstance(p, PassConfig) else p
                  for p in passes]
     closed = jax.make_jaxpr(fn)(*example_args)
-    return optimize_closed_jaxpr(closed, pass_objs, stats)
+    return optimize_closed_jaxpr(closed, pass_objs, stats, cache=cache)

@@ -163,12 +163,18 @@ class SILVIA:
         closed.extend(t for t in open_tuples if self.tuple_viable(t))
         return closed
 
-    def run(self, closed, loop_info=None) -> tuple[Any, dict]:
+    def run(self, closed, loop_info=None, cache=None) -> tuple[Any, dict]:
         """Apply the pass to one ClosedJaxpr; returns (new_closed, stats).
 
         loop_info: optional (num_consts, num_carry) when this BB is a scan
-        body -- enables the II-aware tuple filter (sec. 3.5.1)."""
-        ctx = BBContext(closed)
+        body -- enables the II-aware tuple filter (sec. 3.5.1).
+        cache: optional ir.AnalysisCache shared by the pass pipeline; the
+        ALAP schedule / def-use maps / width analysis bundled in BBContext
+        are then built once per BB version and reused by later passes."""
+        if cache is None:
+            ctx = BBContext(closed)
+        else:
+            ctx = cache.get_or_build(closed.jaxpr, lambda: BBContext(closed))
         cands = self.get_candidates(ctx)
         stats = {"candidates": len(cands), "tuples": 0, "packed_ops": 0,
                  "ii_dropped": 0}

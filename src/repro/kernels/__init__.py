@@ -2,6 +2,7 @@
 SILVIA flow (paper sec. 3.3/3.4), adapted to the TPU memory/compute hierarchy.
 
 simd_add       SWAR four8/two16 add/sub        (paper sec. 2.1, SILVIAAdd)
+autotune       block-size search + on-disk cache for the matmul kernels
 muladd2        factor-2 shared-operand MAD      (paper sec. 2.2, wp486)
 mul4           factor-4 4-bit multiplications   (paper sec. 2.3, incl. the
                                                  paper's novel unsigned form)
@@ -11,7 +12,8 @@ packed_matmul  w4a8 packed-weight MXU GEMM      (the packing insight applied
 ref            pure-jnp oracles for all of the above
 ops            backend dispatch (Pallas on TPU / oracle on CPU)
 """
-from repro.kernels import common, mul4, muladd2, ops, packed_matmul, quant_matmul, ref, simd_add
+from repro.kernels import (autotune, common, mul4, muladd2, ops,
+                           packed_matmul, quant_matmul, ref, simd_add)
 
-__all__ = ["common", "mul4", "muladd2", "ops", "packed_matmul",
+__all__ = ["autotune", "common", "mul4", "muladd2", "ops", "packed_matmul",
            "quant_matmul", "ref", "simd_add"]

@@ -1,0 +1,168 @@
+"""Block-size autotuner for the packed Pallas matmul kernels.
+
+The paper's flow bakes its packing decisions in at synthesis time; the TPU
+serving analogue of that "pay once" philosophy is an AutoDSE-style search
+over the kernel tile sizes with a *persistent on-disk cache*: the first time
+a (kernel, M, K, N, backend) shape signature is seen with tuning enabled,
+every candidate block is timed and the winner is written to a JSON cache;
+every later process start reads the cache and pays nothing.
+
+    from repro.kernels import autotune
+    autotune.enable(True)                  # or REPRO_AUTOTUNE=1
+    block = autotune.resolve("quant_matmul", m, k, n)
+
+Kernels call `resolve()` when invoked with `block=None`; with tuning
+disabled and no cache entry it falls through to the kernel's static default,
+so the tuner is strictly opt-in.
+
+Cache location: $REPRO_AUTOTUNE_CACHE, else ~/.cache/repro/autotune.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_BLOCK = (256, 256, 512)
+
+# Candidate (bm, bn, bk) tiles: all keep x/w/acc blocks within a small slice
+# of the ~16 MiB VMEM budget (see quant_matmul.py header for the arithmetic).
+CANDIDATE_BLOCKS = (
+    (128, 128, 256),
+    (128, 256, 512),
+    (256, 128, 512),
+    (256, 256, 256),
+    (256, 256, 512),
+    (256, 512, 512),
+    (512, 256, 512),
+)
+
+_enabled = os.environ.get("REPRO_AUTOTUNE", "") not in ("", "0", "false")
+_cache: dict | None = None
+
+
+def enable(on: bool = True) -> None:
+    global _enabled
+    _enabled = bool(on)
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def cache_path() -> pathlib.Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+def _load() -> dict:
+    global _cache
+    if _cache is None:
+        try:
+            _cache = json.loads(cache_path().read_text())
+        except (OSError, ValueError):
+            _cache = {}
+    return _cache
+
+
+def _save() -> None:
+    global _cache
+    path = cache_path()
+    try:
+        # merge-on-save: another process may have tuned other shapes since
+        # we loaded; our in-process entries win only on key collision
+        try:
+            on_disk = json.loads(path.read_text())
+        except (OSError, ValueError):
+            on_disk = {}
+        _cache = {**on_disk, **_cache}
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(_cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS: tuning still works in-process
+
+
+def _key(kind: str, m: int, k: int, n: int) -> str:
+    return f"{kind}:{m}x{k}x{n}:{jax.default_backend()}"
+
+
+def lookup(kind: str, m: int, k: int, n: int) -> tuple | None:
+    ent = _load().get(_key(kind, m, k, n))
+    if ent is None:
+        return None
+    return tuple(ent["block"])
+
+
+def resolve(kind: str, m: int, k: int, n: int) -> tuple:
+    """Best known block for this shape: cache hit > (tune now if enabled)
+    > static default."""
+    hit = lookup(kind, m, k, n)
+    if hit is not None:
+        return hit
+    if _enabled:
+        return tune(kind, m, k, n)
+    return DEFAULT_BLOCK
+
+
+def _time_call(fn, *args, iters: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def tune(kind: str, m: int, k: int, n: int,
+         candidates=CANDIDATE_BLOCKS, iters: int = 3) -> tuple:
+    """Time every candidate block on synthetic int8 operands, persist and
+    return the winner.  Runs real kernel invocations, so only call at
+    set-up time (resolve() does, once per shape signature)."""
+    from repro.kernels import packed_matmul, quant_matmul  # lazy: no cycle
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    if kind == "packed_w4_matmul":
+        w = jnp.asarray(rng.integers(-128, 128, (k, n // 2)), jnp.int8)
+        def run(blk):
+            return packed_matmul.packed_w4_matmul_acc(x, w, block=blk)
+    elif kind == "quant_matmul":
+        w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+        def run(blk):
+            return quant_matmul.quant_matmul_acc(x, w, block=blk)
+    else:
+        raise ValueError(f"unknown autotune kind: {kind}")
+
+    best_blk, best_us = DEFAULT_BLOCK, float("inf")
+    results = {}
+    for blk in candidates:
+        try:
+            us = _time_call(jax.jit(run, static_argnums=0), blk, iters=iters)
+        except Exception:
+            continue  # candidate illegal on this backend/shape
+        results[str(blk)] = round(us, 1)
+        if us < best_us:
+            best_blk, best_us = blk, us
+    if not results:
+        # every candidate failed: don't poison the persistent cache (a hit
+        # would suppress retries forever) -- fall back without recording
+        return DEFAULT_BLOCK
+    cache = _load()
+    cache[_key(kind, m, k, n)] = {
+        "block": list(best_blk), "us": round(best_us, 1),
+        "candidates": results,
+    }
+    _save()
+    return best_blk

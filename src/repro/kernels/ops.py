@@ -14,6 +14,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels import mul4 as _mul4
 from repro.kernels import muladd2 as _muladd2
 from repro.kernels import packed_matmul as _pmm
@@ -27,6 +28,12 @@ def _use_pallas() -> bool:
     if env is not None:
         return env not in ("0", "false", "")
     return jax.default_backend() == "tpu"
+
+
+def set_autotune(on: bool = True) -> None:
+    """Enable block-size autotuning for the matmul kernels (see
+    kernels/autotune.py; results persist in an on-disk cache)."""
+    autotune.enable(on)
 
 
 def simd_add(xs, ys, *, lane_bits: int = 8, sub: bool = False):

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import common
+from repro.kernels import autotune, common
 
 
 def _unpack_w4_block(wp):
@@ -43,14 +43,19 @@ def _pmm_kernel(x_ref, wp_ref, o_ref):
     o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.int32)
 
 
-def packed_w4_matmul_acc(x_q, w_packed, *, block=(256, 256, 512),
+def packed_w4_matmul_acc(x_q, w_packed, *, block=None,
                          interpret: bool | None = None):
-    """int8[M,K] @ packed-int4[K,N] (stored int8[K,N//2]) -> int32[M,N]."""
+    """int8[M,K] @ packed-int4[K,N] (stored int8[K,N//2]) -> int32[M,N].
+
+    block=None resolves through kernels/autotune.py: persisted best block
+    for this (M,K,N) if one exists, else the static default."""
     interpret = common.interpret_default() if interpret is None else interpret
     m, k = x_q.shape
     k2, n_half = w_packed.shape
     assert k == k2
     n = 2 * n_half
+    if block is None:
+        block = autotune.resolve("packed_w4_matmul", m, k, n)
     bm = min(block[0], max(8, m))
     bn = min(block[1], max(256, n))
     bn -= bn % 2
@@ -76,7 +81,7 @@ def packed_w4_matmul_acc(x_q, w_packed, *, block=(256, 256, 512),
 
 
 def packed_w4_matmul(x_q, w_packed, x_scale, w_scale, *,
-                     out_dtype=jnp.float32, block=(256, 256, 512),
+                     out_dtype=jnp.float32, block=None,
                      interpret: bool | None = None):
     acc = packed_w4_matmul_acc(x_q, w_packed, block=block,
                                interpret=interpret)

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import common
+from repro.kernels import autotune, common
 
 
 def _qmm_kernel(x_ref, w_ref, o_ref):
@@ -28,13 +28,18 @@ def _qmm_kernel(x_ref, w_ref, o_ref):
                           preferred_element_type=jnp.int32)
 
 
-def quant_matmul_acc(x_q, w_q, *, block=(256, 256, 512),
+def quant_matmul_acc(x_q, w_q, *, block=None,
                      interpret: bool | None = None):
-    """int8[M,K] @ int8[K,N] -> int32[M,N] accumulator."""
+    """int8[M,K] @ int8[K,N] -> int32[M,N] accumulator.
+
+    block=None resolves through kernels/autotune.py: persisted best block
+    for this (M,K,N) if one exists, else the static default."""
     interpret = common.interpret_default() if interpret is None else interpret
     m, k = x_q.shape
     k2, n = w_q.shape
     assert k == k2
+    if block is None:
+        block = autotune.resolve("quant_matmul", m, k, n)
     bm = min(block[0], max(8, m))
     bn = min(block[1], max(128, n))
     bk = min(block[2], max(128, k))
@@ -57,6 +62,6 @@ def quant_matmul_acc(x_q, w_q, *, block=(256, 256, 512),
 
 
 def quant_matmul(x_q, w_q, x_scale, w_scale, *, out_dtype=jnp.float32,
-                 block=(256, 256, 512), interpret: bool | None = None):
+                 block=None, interpret: bool | None = None):
     acc = quant_matmul_acc(x_q, w_q, block=block, interpret=interpret)
     return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)

@@ -75,20 +75,35 @@ def _elems(dims: str) -> int:
 
 def _dot_flops(line: str, shape_env: dict) -> float:
     """2 * |out| * contracted-dim size.  Operand shapes come from the
-    computation-local name->shape environment (HLO prints operand names,
-    not shapes, inside bodies)."""
+    operand tokens themselves when the HLO prints them inline
+    (`dot(f32[4,32] %a, ...)`, newer XLA) and from the computation-local
+    name->shape environment otherwise."""
     shapes = _all_shapes(line)
     if not shapes:
         return 0.0
     out_elems = _elems(shapes[0][1])
     ops = _DOT_OPERANDS_RE.search(line)
-    names = [s.strip().lstrip("%") for s in ops.group(1).split(",")] if ops else []
+    inline, names = [], []
+    if ops:
+        arg_str = ops.group(1)
+        arg_shapes = list(_SHAPE_RE.finditer(arg_str))
+        if arg_shapes:
+            # newer XLA prints operand shapes inline:
+            #   dot(f32[4,32]{1,0} %a, f32[32,32]{1,0} %b)
+            inline = [m.group(2) for m in arg_shapes]
+        else:
+            names = [s.strip().lstrip("%") for s in arg_str.split(",")]
     contract = None
     for side, idx in (("lhs", 0), ("rhs", 1)):
         m = re.search(side + r"_contracting_dims=\{([0-9,]*)\}", line)
-        if not (m and m.group(1)) or idx >= len(names):
+        if not (m and m.group(1)):
             continue
-        dims_str = shape_env.get(names[idx])
+        if idx < len(inline):
+            dims_str = inline[idx]
+        elif idx < len(names):
+            dims_str = shape_env.get(names[idx])
+        else:
+            continue
         if dims_str is None:
             continue
         dims = dims_str.split(",") if dims_str else []

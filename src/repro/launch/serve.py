@@ -1,19 +1,32 @@
 """Serving driver: quantized weights + batched prefill/decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
-        --quant w4a8 --batch 4 --prompt-len 64 --gen 32 [--silvia all]
+        --quant w4a8 --batch 4 --prompt-len 64 --gen 32 \
+        [--silvia all] [--autotune] [--no-fused-decode]
 
 The serving path is where the paper's technique lives end to end:
 
 * weights are quantized offline (w8a8 / w4a8 packed -- two int4 per int8
   word, the DSP-packing insight applied to HBM);
-* with --silvia, the decode step function is rewritten by the SILVIA passes
-  (core/pipeline.py) before jit, packing any narrow-int ops the quantized
-  graph exposes -- the `SILVIA::csynth_design` drop-in, one flag.
+* with ``--silvia {off,add,muladd,all}``, the decode step function is
+  rewritten by the SILVIA passes (core/pipeline.py) before jit, packing any
+  narrow-int ops the quantized graph exposes -- the
+  `SILVIA::csynth_design` drop-in, one flag.  The pass pipeline's trace
+  cache makes this compile-once/run-many: repeated `generate()` calls with
+  the same shapes never re-run the passes;
+* decode runs as a **fused `jax.lax.scan` loop**: the whole decode phase is
+  ONE dispatch with the KV cache donated to the loop, instead of one
+  python-level dispatch per generated token (``--no-fused-decode`` restores
+  the per-step loop for A/B measurement -- benchmarks/pipeline_overhead.py
+  reports both);
+* with ``--autotune``, the Pallas matmul kernels search their block sizes
+  on first use and persist the winners on disk (kernels/autotune.py;
+  cache at $REPRO_AUTOTUNE_CACHE or ~/.cache/repro/autotune.json).
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -22,6 +35,7 @@ import numpy as np
 
 from repro import configs
 from repro import core as silvia
+from repro.kernels import ops as kops
 from repro.models import lm
 from repro.quant.qtensor import quantize_tree_for_serving
 
@@ -33,24 +47,67 @@ SILVIA_PASS_SETS = {
     "all": list(silvia.DEFAULT_PASSES),
 }
 
+# (cfg, silvia_passes) -> (step_fn, jitted step, jitted fused loop).
+# ModelConfig is a frozen dataclass, so this composes with the SILVIA trace
+# cache to give compile-once/run-many across generate() calls.
+_DECODE_CACHE: dict = {}
+
+
+def _decode_bundle(cfg, silvia_passes: str):
+    key = (cfg, silvia_passes)
+    if key not in _DECODE_CACHE:
+        def decode_fn(p, tok, kv, pos):
+            return lm.decode_step(p, tok, kv, pos, cfg)
+
+        passes = SILVIA_PASS_SETS[silvia_passes]
+        if passes:
+            decode_fn = silvia.optimize(decode_fn, passes)
+
+        @functools.partial(jax.jit, static_argnums=(4,), donate_argnums=(2,))
+        def fused_loop(params, tok0, cache, pos0, n_steps):
+            def step(carry, i):
+                tok, kv = carry
+                logits, kv = decode_fn(params, tok, kv, pos0 + i)
+                nxt = jnp.argmax(logits[:, -1, :], axis=-1)
+                nxt = nxt.astype(jnp.int32)[:, None]
+                return (nxt, kv), nxt
+
+            (_, kv), seq = jax.lax.scan(step, (tok0, cache),
+                                        jnp.arange(n_steps))
+            return seq, kv
+
+        decode_jit = jax.jit(decode_fn, donate_argnums=(2,))
+        _DECODE_CACHE[key] = (decode_fn, decode_jit, fused_loop)
+    return _DECODE_CACHE[key]
+
+
+def get_decode_step(cfg, silvia_passes: str = "off"):
+    """The (possibly SILVIA-rewritten) single-token decode step for cfg.
+
+    Cached per (cfg, pass set); the SILVIA wrapper's own trace cache then
+    guarantees the passes run once per input-shape signature (inspect via
+    `get_decode_step(...).cache_info()` when passes are on)."""
+    return _decode_bundle(cfg, silvia_passes)[0]
+
 
 def generate(params, prompts, cfg, *, gen: int, cache_len: int,
-             silvia_passes="off"):
-    """Greedy generation: prefill + gen decode steps."""
+             silvia_passes="off", fused: bool = True):
+    """Greedy generation: prefill + gen decode steps.
+
+    fused=True runs the whole decode phase as one `jax.lax.scan` dispatch
+    (KV cache donated); fused=False is the per-step reference loop."""
     b, s = prompts.shape
     logits, cache = lm.prefill(params, prompts, cfg, cache_len=cache_len)
-
-    def decode_fn(p, tok, kv, pos):
-        return lm.decode_step(p, tok, kv, pos, cfg)
-
-    passes = SILVIA_PASS_SETS[silvia_passes]
-    if passes:
-        decode_fn = silvia.optimize(decode_fn, passes)
-    decode_jit = jax.jit(decode_fn, donate_argnums=(2,))
+    _, decode_jit, fused_loop = _decode_bundle(cfg, silvia_passes)
 
     tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
-    out = [tok]
     pos = jnp.full((b,), s, jnp.int32)
+    if fused:
+        seq, _ = fused_loop(params, tok, cache, pos, gen - 1)
+        # seq: [gen-1, B, 1] of generated tokens, in step order
+        return jnp.concatenate([tok, jnp.moveaxis(seq[:, :, 0], 0, 1)],
+                               axis=1)
+    out = [tok]
     for i in range(gen - 1):
         logits, cache = decode_jit(params, tok, cache, pos + i)
         tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
@@ -66,6 +123,12 @@ def main():
                     choices=["bf16", "w8a8", "w4a8"])
     ap.add_argument("--silvia", default="off",
                     choices=list(SILVIA_PASS_SETS))
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune + persist Pallas matmul block sizes "
+                         "(kernels/autotune.py)")
+    ap.add_argument("--no-fused-decode", action="store_true",
+                    help="per-step decode dispatch instead of the fused "
+                         "lax.scan loop (for A/B comparison)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
@@ -75,6 +138,8 @@ def main():
     cfg = configs.get_reduced_config(args.arch) if args.reduced \
         else configs.get_config(args.arch)
     assert cfg.family != "encdec", "use --arch with a decoder-only model"
+    if args.autotune:
+        kops.set_autotune(True)
     rng = jax.random.PRNGKey(args.seed)
     cache_len = args.prompt_len + args.gen
     params = lm.init_params(rng, cfg, max_seq=cache_len + 8)
@@ -85,7 +150,8 @@ def main():
                                  cfg.vocab, dtype=jnp.int32)
     t0 = time.time()
     toks = generate(params, prompts, cfg, gen=args.gen, cache_len=cache_len,
-                    silvia_passes=args.silvia)
+                    silvia_passes=args.silvia,
+                    fused=not args.no_fused_decode)
     dt = time.time() - t0
     n_tok = args.batch * args.gen
     print(f"generated {toks.shape} in {dt:.2f}s "

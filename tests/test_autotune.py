@@ -1,0 +1,43 @@
+"""Block-size autotuner: tune -> persist -> reload, and kernel integration
+via block=None (opt-in: defaults stay untouched when disabled)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import autotune, quant_matmul
+
+
+@pytest.fixture
+def tuner_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    monkeypatch.setattr(autotune, "_cache", None)
+    yield
+    autotune._cache = None   # don't leak tmp cache into other tests
+
+
+def test_disabled_resolve_is_default(tuner_cache, monkeypatch):
+    monkeypatch.setattr(autotune, "_enabled", False)
+    assert autotune.resolve("quant_matmul", 8, 128, 256) == \
+        autotune.DEFAULT_BLOCK
+
+
+def test_tune_persists_and_reloads(tuner_cache):
+    fast = ((128, 128, 256), (256, 256, 512))
+    blk = autotune.tune("quant_matmul", 8, 128, 256, candidates=fast,
+                        iters=1)
+    assert blk in fast
+    assert autotune.lookup("quant_matmul", 8, 128, 256) == blk
+    autotune._cache = None                       # force re-read from disk
+    assert autotune.lookup("quant_matmul", 8, 128, 256) == blk
+    # resolve() now serves the persisted winner even with tuning disabled
+    assert autotune.resolve("quant_matmul", 8, 128, 256) == blk
+
+
+def test_block_none_uses_tuned_block_and_stays_correct(tuner_cache, rng):
+    autotune.tune("quant_matmul", 8, 128, 256,
+                  candidates=((128, 128, 256),), iters=1)
+    x = jnp.asarray(rng.integers(-128, 128, (8, 128)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (128, 256)), jnp.int8)
+    got = quant_matmul.quant_matmul_acc(x, w)    # block=None -> tuned
+    want = np.asarray(x, np.int64) @ np.asarray(w, np.int64)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)

@@ -3,6 +3,8 @@ swept over shapes and value ranges (hypothesis drives the sweep)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import (mul4, muladd2, packed_matmul, quant_matmul, ref,

@@ -1,0 +1,213 @@
+"""The caching pass-manager contract (compile-once / run-many):
+
+* `optimize()` traces + rewrites ONCE across repeated calls with identical
+  avals and re-traces on a shape (or structure) change,
+* structurally identical sub-jaxprs are rewritten once (sub-jaxpr memo),
+* the 4 default passes build each BB analysis (ALAP/def-use/width bundled
+  in BBContext) exactly once per BB version and share it afterwards,
+* the fused scan decode loop generates the same tokens as the per-step
+  dispatch loop.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro import core as silvia
+from repro.core import pipeline
+from repro.launch.serve import generate
+from repro.models import lm
+from repro.quant.qtensor import quantize_tree_for_serving
+
+
+def i8(rng, shape, lo=-100, hi=100):
+    return jnp.asarray(rng.integers(lo, hi, shape), jnp.int8)
+
+
+def muls(a0, a1, b):
+    return (a0.astype(jnp.int32) * b.astype(jnp.int32),
+            a1.astype(jnp.int32) * b.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# trace cache
+# ---------------------------------------------------------------------------
+
+def test_trace_cache_single_trace_across_calls(rng):
+    opt = silvia.optimize(muls, [silvia.PassConfig(op="muladd")])
+    args = [i8(rng, (16,)) for _ in range(3)]
+    for _ in range(5):
+        got = opt(*args)
+    info = opt.cache_info()
+    assert info["trace_misses"] == 1
+    assert info["trace_hits"] == 4
+    assert info["traces"] == 1
+    for g, want in zip(got, muls(*args)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(want))
+
+
+def test_trace_cache_retraces_on_shape_change(rng):
+    opt = silvia.optimize(muls, [silvia.PassConfig(op="muladd")])
+    opt(*[i8(rng, (16,)) for _ in range(3)])
+    opt(*[i8(rng, (32,)) for _ in range(3)])
+    opt(*[i8(rng, (32,)) for _ in range(3)])   # second 32-shape call: hit
+    info = opt.cache_info()
+    assert info["trace_misses"] == 2
+    assert info["trace_hits"] == 1
+    assert info["traces"] == 2
+
+
+def test_trace_cache_retraces_on_dtype_change(rng):
+    opt = silvia.optimize(lambda x, y: x + y)
+    opt(i8(rng, (8,)), i8(rng, (8,)))
+    opt(jnp.ones((8,), jnp.int16), jnp.ones((8,), jnp.int16))
+    assert opt.cache_info()["trace_misses"] == 2
+
+
+def test_cache_clear_forces_retrace(rng):
+    opt = silvia.optimize(muls, [silvia.PassConfig(op="muladd")])
+    args = [i8(rng, (16,)) for _ in range(3)]
+    opt(*args)
+    opt.cache_clear()
+    opt(*args)
+    info = opt.cache_info()
+    assert info["trace_misses"] == 1 and info["trace_hits"] == 0
+
+
+def test_cached_wrapper_still_jit_compatible(rng):
+    opt = silvia.optimize(muls, [silvia.PassConfig(op="muladd")])
+    args = [i8(rng, (8,)) for _ in range(3)]
+    jopt = jax.jit(opt)
+    for g, want in zip(jopt(*args), muls(*args)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# sub-jaxpr rewrite memo
+# ---------------------------------------------------------------------------
+
+def _two_identical_scans(a, b):
+    def body(c, xs):
+        x, y = xs
+        p0 = x.astype(jnp.int32) * y.astype(jnp.int32)
+        p1 = (x + 1).astype(jnp.int32) * y.astype(jnp.int32)
+        return c + p0.sum() + p1.sum(), None
+
+    s1, _ = jax.lax.scan(body, jnp.int32(0), (a, b))
+    s2, _ = jax.lax.scan(body, jnp.int32(0), (a, b))
+    return s1 + s2
+
+
+def test_identical_subjaxprs_rewritten_once(rng):
+    a, b = i8(rng, (4, 16)), i8(rng, (4, 16))
+    cache = pipeline.RewriteCache()
+    closed = jax.make_jaxpr(_two_identical_scans)(a, b)
+    passes = [silvia.PassConfig(op="muladd").instantiate()]
+    out = pipeline.optimize_closed_jaxpr(closed, passes, cache=cache)
+    assert cache.subjaxpr_misses == 1
+    assert cache.subjaxpr_hits == 1
+    # both scan bodies carry the SILVIA rewrite
+    scans = [e for e in out.jaxpr.eqns if e.primitive.name == "scan"]
+    assert len(scans) == 2
+    for e in scans:
+        inner = [q.primitive.name for q in e.params["jaxpr"].jaxpr.eqns]
+        assert "silvia_packed_muladd" in inner
+
+
+def test_subjaxpr_memo_persists_across_wrapper_calls(rng):
+    opt = silvia.optimize(_two_identical_scans,
+                          [silvia.PassConfig(op="muladd")])
+    a, b = i8(rng, (4, 16)), i8(rng, (4, 16))
+    got = opt(a, b)
+    info = opt.cache_info()
+    assert info["subjaxpr_hits"] == 1 and info["subjaxpr_misses"] == 1
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(_two_identical_scans(a, b)))
+
+
+def test_subjaxpr_memo_keyed_on_pass_list(rng):
+    """A RewriteCache shared across DIFFERENT pass lists must not serve a
+    body rewritten by the wrong passes."""
+    a, b = i8(rng, (4, 16)), i8(rng, (4, 16))
+    cache = pipeline.RewriteCache()
+    closed = jax.make_jaxpr(_two_identical_scans)(a, b)
+    muladd = [silvia.PassConfig(op="muladd").instantiate()]
+    add16 = [silvia.PassConfig(op="add", op_size=16).instantiate()]
+    out1 = pipeline.optimize_closed_jaxpr(closed, muladd, cache=cache)
+    out2 = pipeline.optimize_closed_jaxpr(closed, add16, cache=cache)
+    inner1 = [q.primitive.name
+              for e in out1.jaxpr.eqns if e.primitive.name == "scan"
+              for q in e.params["jaxpr"].jaxpr.eqns]
+    inner2 = [q.primitive.name
+              for e in out2.jaxpr.eqns if e.primitive.name == "scan"
+              for q in e.params["jaxpr"].jaxpr.eqns]
+    assert "silvia_packed_muladd" in inner1
+    assert "silvia_packed_muladd" not in inner2
+
+
+def test_cache_clear_resets_all_counters(rng):
+    opt = silvia.optimize(_two_identical_scans,
+                          [silvia.PassConfig(op="muladd")])
+    a, b = i8(rng, (4, 16)), i8(rng, (4, 16))
+    opt(a, b)
+    opt.cache_clear()
+    info = opt.cache_info()
+    assert all(info[k] == 0 for k in ("trace_hits", "trace_misses",
+                                     "subjaxpr_hits", "subjaxpr_misses",
+                                     "analysis_builds", "analysis_hits"))
+
+
+# ---------------------------------------------------------------------------
+# shared BB analysis (ALAP/def-use/width built once per BB version)
+# ---------------------------------------------------------------------------
+
+def test_bb_analysis_built_once_across_default_passes(rng):
+    """No default pass rewrites this float BB, so all 4 passes must share
+    ONE BBContext: exactly 1 build, 3 hits."""
+    def fn(x, y):
+        return x * y + jnp.sin(x)
+
+    x = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    cache = pipeline.RewriteCache()
+    closed = jax.make_jaxpr(fn)(x, x)
+    passes = [p.instantiate() for p in silvia.DEFAULT_PASSES]
+    pipeline.optimize_closed_jaxpr(closed, passes, cache=cache)
+    assert cache.analysis.builds == 1
+    assert cache.analysis.hits == len(passes) - 1
+
+
+def test_bb_analysis_invalidated_by_rewrite(rng):
+    """A pass that rewrites the BB produces a new jaxpr version; later
+    passes analyze the NEW version once -- builds == #versions, and every
+    (pass, version) pair beyond the first analysis is a hit."""
+    def fn(a0, a1, b):
+        c0, c1 = muls(a0, a1, b)
+        return c0, c1
+
+    args = [i8(rng, (16,)) for _ in range(3)]
+    cache = pipeline.RewriteCache()
+    closed = jax.make_jaxpr(fn)(*args)
+    passes = [p.instantiate() for p in silvia.DEFAULT_PASSES]
+    pipeline.optimize_closed_jaxpr(closed, passes, cache=cache)
+    # muladd rewrites (version 1 -> 2); mul4/add8/add16 find nothing more.
+    assert cache.analysis.builds == 2
+    assert cache.analysis.builds + cache.analysis.hits == len(passes)
+
+
+# ---------------------------------------------------------------------------
+# fused decode loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("silvia_passes", ["off", "all"])
+def test_fused_scan_decode_matches_stepwise(silvia_passes):
+    cfg = configs.get_reduced_config("smollm-135m")
+    rng = jax.random.PRNGKey(0)
+    params = quantize_tree_for_serving(
+        lm.init_params(rng, cfg, max_seq=64), "w8a8")
+    prompts = jax.random.randint(rng, (2, 16), 0, cfg.vocab)
+    step = generate(params, prompts, cfg, gen=8, cache_len=32,
+                    silvia_passes=silvia_passes, fused=False)
+    fused = generate(params, prompts, cfg, gen=8, cache_len=32,
+                     silvia_passes=silvia_passes, fused=True)
+    np.testing.assert_array_equal(np.asarray(step), np.asarray(fused))

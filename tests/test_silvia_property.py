@@ -11,6 +11,9 @@ patterns plus plenty of non-candidates.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro import core as silvia
