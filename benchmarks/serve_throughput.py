@@ -1,0 +1,181 @@
+"""Continuous-batching engine vs static batched generate() under ragged
+synthetic traffic (Poisson arrivals, mixed prompt/gen lengths).
+
+The engine packs an ever-changing request mix into bucketed compiled decode
+segments (launch/engine.py); the static path forms fixed batches in arrival
+order, waits for each batch to fill, pads prompts/gens to the batch max,
+and pays one compiled graph per distinct batch shape.  The gap between the
+two is the serving analogue of the DSP under-utilization the paper's passes
+reclaim.
+
+Emits one machine-readable line:  BENCH {json}  with aggregate tok/s,
+p50/p99 per-request latency, mean slot occupancy, and compiled-graph
+counts (the engine's is bounded by its bucket sets).
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
+        [--silvia {off,add,muladd,all}] [--n-requests N] [--rate R]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import scheduler, serve
+from repro.launch.engine import ServeEngine
+from repro.models import lm
+from repro.quant.qtensor import quantize_tree_for_serving
+
+
+def _percentiles(latencies) -> dict:
+    lat = np.asarray(sorted(latencies))
+    return {"p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 2),
+            "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 2)}
+
+
+def _summary(requests, elapsed: float) -> dict:
+    useful = sum(r.max_new_tokens for r in requests)
+    return {
+        "requests": len(requests),
+        "useful_tokens": useful,
+        "elapsed_s": round(elapsed, 3),
+        "agg_tok_s": round(useful / max(elapsed, 1e-9), 1),
+        **_percentiles([r.latency() for r in requests]),
+    }
+
+
+def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
+               segment_len, silvia_passes, prefill_chunk=None,
+               warmup=True) -> dict:
+    eng = ServeEngine(params, cfg, n_slots=n_slots,
+                      max_cache_len=max_cache_len, segment_len=segment_len,
+                      silvia_passes=silvia_passes,
+                      prefill_chunk=prefill_chunk)
+    if warmup:
+        # startup pre-compilation over the advertised traffic profile --
+        # the static path below gets the matching per-shape warm pass
+        eng.warmup(prompt_lens=sorted({r.prompt_len for r in requests}))
+    clock = scheduler.FastForwardClock()
+    t0 = clock.now()
+    eng.run(requests, clock)
+    elapsed = clock.now() - t0
+    info = eng.cache_info()
+    out = _summary(eng.finished, elapsed)
+    out["mean_occupancy"] = round(float(np.mean(eng.occupancy)), 3) \
+        if eng.occupancy else 0.0
+    out["graphs"] = info["graphs"]
+    out["graph_bound"] = info["graph_bound"]
+    out["graph_keys"] = [" ".join(map(str, k)) for k in info["graph_keys"]]
+    if "silvia" in info:
+        out["silvia_trace"] = {k: info["silvia"][k]
+                               for k in ("trace_hits", "trace_misses")}
+    return out
+
+
+def run_static(params, cfg, requests, *, n_slots, silvia_passes,
+               warmup=True) -> dict:
+    """PR-1 static path: batches of n_slots in arrival order; each batch
+    waits until its last request arrives, pads every prompt/gen to the
+    batch max, and decodes gen_max steps for every row."""
+    reqs = sorted(requests, key=lambda r: (r.arrival_time, r.rid))
+    batches = [reqs[i:i + n_slots] for i in range(0, len(reqs), n_slots)]
+    shapes = set()
+    for batch in batches:
+        pl = max(r.prompt_len for r in batch)
+        gen = max(r.max_new_tokens for r in batch)
+        shapes.add((len(batch), pl, gen, pl + gen))
+    if warmup:
+        for (b, pl, gen, cl) in sorted(shapes):
+            prompts = jnp.zeros((b, pl), jnp.int32)
+            jax.block_until_ready(serve.generate(
+                params, prompts, cfg, gen=gen, cache_len=cl,
+                silvia_passes=silvia_passes))
+    clock = scheduler.FastForwardClock()
+    t0 = clock.now()
+    for batch in batches:
+        clock.wait_until(max(r.arrival_time for r in batch))
+        pl = max(r.prompt_len for r in batch)
+        gen = max(r.max_new_tokens for r in batch)
+        prompts = np.zeros((len(batch), pl), np.int32)
+        for i, r in enumerate(batch):
+            prompts[i, :r.prompt_len] = r.prompt
+        toks = serve.generate(params, jnp.asarray(prompts), cfg, gen=gen,
+                              cache_len=pl + gen,
+                              silvia_passes=silvia_passes)
+        toks = np.asarray(toks)
+        done = clock.now()
+        for i, r in enumerate(batch):
+            r.tokens = [int(t) for t in toks[i, :r.max_new_tokens]]
+            r.finish_time = done
+    elapsed = clock.now() - t0
+    out = _summary(reqs, elapsed)
+    out["graphs"] = len(shapes)
+    return out
+
+
+def run(smoke: bool = False, silvia_passes: str = "off",
+        n_requests: int | None = None, rate: float | None = None) -> dict:
+    cfg = configs.get_reduced_config("smollm-135m")
+    if smoke:
+        n_req = n_requests or 8
+        rate = rate or 50.0
+        n_slots, seg, max_len = 2, 4, 64
+        prompt_lens, gen_lens = (4, 8, 12), (2, 4, 8)
+    else:
+        n_req = n_requests or 32
+        rate = rate or 20.0
+        n_slots, seg, max_len = 4, 8, 128
+        prompt_lens, gen_lens = (8, 16, 32, 48), (2, 8, 16, 32)
+    rng = jax.random.PRNGKey(0)
+    params = quantize_tree_for_serving(
+        lm.init_params(rng, cfg, max_seq=max_len + 8), "w8a8")
+
+    def traffic():
+        return scheduler.synthetic_traffic(
+            seed=0, n_requests=n_req, rate=rate,
+            prompt_lens=prompt_lens, gen_lens=gen_lens, vocab=cfg.vocab)
+
+    result = {
+        "config": {"arch": "smollm-135m(reduced)", "n_requests": n_req,
+                   "rate_req_s": rate, "n_slots": n_slots,
+                   "segment_len": seg, "max_cache_len": max_len,
+                   "prompt_lens": list(prompt_lens),
+                   "gen_lens": list(gen_lens), "quant": "w8a8",
+                   "silvia": silvia_passes,
+                   "backend": jax.default_backend()},
+        "engine": run_engine(params, cfg, traffic(), n_slots=n_slots,
+                             max_cache_len=max_len, segment_len=seg,
+                             silvia_passes=silvia_passes),
+        "static": run_static(params, cfg, traffic(), n_slots=n_slots,
+                             silvia_passes=silvia_passes),
+    }
+    result["speedup_tok_s"] = round(
+        result["engine"]["agg_tok_s"]
+        / max(result["static"]["agg_tok_s"], 1e-9), 2)
+    result["graphs_bounded"] = (result["engine"]["graphs"]
+                                <= result["engine"]["graph_bound"])
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model/traffic (CI)")
+    ap.add_argument("--silvia", default="off",
+                    choices=list(serve.SILVIA_PASS_SETS))
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate (req/s)")
+    args = ap.parse_args()
+    result = run(smoke=args.smoke, silvia_passes=args.silvia,
+                 n_requests=args.n_requests, rate=args.rate)
+    print(json.dumps(result, indent=2))
+    print("BENCH " + json.dumps(result))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,25 @@
-"""Block-size autotuner for the packed Pallas matmul kernels.
+"""Block-size autotuner for the packed Pallas kernels.
 
 The paper's flow bakes its packing decisions in at synthesis time; the TPU
 serving analogue of that "pay once" philosophy is an AutoDSE-style search
 over the kernel tile sizes with a *persistent on-disk cache*: the first time
-a (kernel, M, K, N, backend) shape signature is seen with tuning enabled,
-every candidate block is timed and the winner is written to a JSON cache;
-every later process start reads the cache and pays nothing.
+a (kernel, shape..., backend) signature is seen with tuning enabled, every
+candidate block is timed and the winner is written to a JSON cache; every
+later process start reads the cache and pays nothing.
 
     from repro.kernels import autotune
     autotune.enable(True)                  # or REPRO_AUTOTUNE=1
     block = autotune.resolve("quant_matmul", m, k, n)
+    block = autotune.resolve("simd_add", rows, cols)
 
 Kernels call `resolve()` when invoked with `block=None`; with tuning
 disabled and no cache entry it falls through to the kernel's static default,
 so the tuner is strictly opt-in.
+
+Covered kinds: the GEMMs ("quant_matmul", "packed_w4_matmul"; 3-D
+(bm, bn, bk) blocks keyed on M/K/N) and the SWAR units ("simd_add",
+"mul4", "muladd2"; 2-D (bm, bn) blocks keyed on their padded 2-D layout,
+plus the chain length for muladd2).
 
 Cache location: $REPRO_AUTOTUNE_CACHE, else ~/.cache/repro/autotune.json.
 """
@@ -42,6 +48,33 @@ CANDIDATE_BLOCKS = (
     (256, 512, 512),
     (512, 256, 512),
 )
+
+# (bm, bn) tiles for the elementwise SWAR kernels.  pad_to_2d flattens to
+# (rows, 128) -- one vreg-width column -- so only bm varies; bn is pinned
+# at 128 (a larger bn would be clamped to cols inside the kernels anyway).
+DEFAULT_BLOCK_2D = (256, 128)
+CANDIDATE_BLOCKS_2D = (
+    (32, 128),
+    (64, 128),
+    (128, 128),
+    (256, 128),
+    (512, 128),
+    (1024, 128),
+)
+
+# kind -> (default block, candidate list); the SWAR kinds use 2-D blocks
+KIND_SPECS = {
+    "quant_matmul": (DEFAULT_BLOCK, CANDIDATE_BLOCKS),
+    "packed_w4_matmul": (DEFAULT_BLOCK, CANDIDATE_BLOCKS),
+    "simd_add": (DEFAULT_BLOCK_2D, CANDIDATE_BLOCKS_2D),
+    "mul4": (DEFAULT_BLOCK_2D, CANDIDATE_BLOCKS_2D),
+    "mul4_split": (DEFAULT_BLOCK_2D, CANDIDATE_BLOCKS_2D),
+    "muladd2": (DEFAULT_BLOCK_2D, CANDIDATE_BLOCKS_2D),
+}
+
+
+def default_block(kind: str) -> tuple:
+    return KIND_SPECS[kind][0]
 
 _enabled = os.environ.get("REPRO_AUTOTUNE", "") not in ("", "0", "false")
 _cache: dict | None = None
@@ -93,26 +126,26 @@ def _save() -> None:
         pass  # read-only FS: tuning still works in-process
 
 
-def _key(kind: str, m: int, k: int, n: int) -> str:
-    return f"{kind}:{m}x{k}x{n}:{jax.default_backend()}"
+def _key(kind: str, *dims: int) -> str:
+    return f"{kind}:{'x'.join(map(str, dims))}:{jax.default_backend()}"
 
 
-def lookup(kind: str, m: int, k: int, n: int) -> tuple | None:
-    ent = _load().get(_key(kind, m, k, n))
+def lookup(kind: str, *dims: int) -> tuple | None:
+    ent = _load().get(_key(kind, *dims))
     if ent is None:
         return None
     return tuple(ent["block"])
 
 
-def resolve(kind: str, m: int, k: int, n: int) -> tuple:
+def resolve(kind: str, *dims: int) -> tuple:
     """Best known block for this shape: cache hit > (tune now if enabled)
-    > static default."""
-    hit = lookup(kind, m, k, n)
+    > the kind's static default."""
+    hit = lookup(kind, *dims)
     if hit is not None:
         return hit
     if _enabled:
-        return tune(kind, m, k, n)
-    return DEFAULT_BLOCK
+        return tune(kind, *dims)
+    return default_block(kind)
 
 
 def _time_call(fn, *args, iters: int = 3) -> float:
@@ -125,27 +158,54 @@ def _time_call(fn, *args, iters: int = 3) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def tune(kind: str, m: int, k: int, n: int,
-         candidates=CANDIDATE_BLOCKS, iters: int = 3) -> tuple:
-    """Time every candidate block on synthetic int8 operands, persist and
-    return the winner.  Runs real kernel invocations, so only call at
-    set-up time (resolve() does, once per shape signature)."""
-    from repro.kernels import packed_matmul, quant_matmul  # lazy: no cycle
+def _tune_runner(kind: str, dims: tuple):
+    """Synthetic-operand closure for one kind: run(blk) -> kernel output."""
+    # lazy imports: the kernels import this module for resolve()
+    from repro.kernels import (mul4, muladd2, packed_matmul, quant_matmul,
+                               simd_add)
 
     rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
-    if kind == "packed_w4_matmul":
-        w = jnp.asarray(rng.integers(-128, 128, (k, n // 2)), jnp.int8)
-        def run(blk):
-            return packed_matmul.packed_w4_matmul_acc(x, w, block=blk)
-    elif kind == "quant_matmul":
+    if kind in ("quant_matmul", "packed_w4_matmul"):
+        m, k, n = dims
+        x = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+        if kind == "packed_w4_matmul":
+            w = jnp.asarray(rng.integers(-128, 128, (k, n // 2)), jnp.int8)
+            return lambda blk: packed_matmul.packed_w4_matmul_acc(
+                x, w, block=blk)
         w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
-        def run(blk):
-            return quant_matmul.quant_matmul_acc(x, w, block=blk)
-    else:
-        raise ValueError(f"unknown autotune kind: {kind}")
+        return lambda blk: quant_matmul.quant_matmul_acc(x, w, block=blk)
+    if kind == "simd_add":
+        rows, cols = dims
+        x = jnp.asarray(rng.integers(0, 1 << 32, (rows, cols),
+                                     dtype=np.uint32))
+        y = jnp.asarray(rng.integers(0, 1 << 32, (rows, cols),
+                                     dtype=np.uint32))
+        return lambda blk: simd_add.simd_add_packed(x, y, block=blk)
+    if kind in ("mul4", "mul4_split"):
+        rows, cols = dims
+        a = jnp.asarray(rng.integers(-8, 8, (4, rows, cols)), jnp.int8)
+        b = jnp.asarray(rng.integers(-8, 8, (rows, cols)), jnp.int8)
+        if kind == "mul4_split":
+            return lambda blk: mul4.mul4_split(a, b, block=blk)
+        return lambda blk: mul4.mul4_full32(a, b, block=blk)
+    if kind == "muladd2":
+        nc, rows, cols = dims
+        a = jnp.asarray(rng.integers(-8, 8, (nc, rows, cols)), jnp.int8)
+        b = jnp.asarray(rng.integers(-8, 8, (nc, rows, cols)), jnp.int8)
+        c = jnp.asarray(rng.integers(-128, 128, (nc, rows, cols)), jnp.int8)
+        return lambda blk: muladd2.muladd2(a, b, c, block=blk)
+    raise ValueError(f"unknown autotune kind: {kind}")
 
-    best_blk, best_us = DEFAULT_BLOCK, float("inf")
+
+def tune(kind: str, *dims: int, candidates=None, iters: int = 3) -> tuple:
+    """Time every candidate block on synthetic operands, persist and
+    return the winner.  Runs real kernel invocations, so only call at
+    set-up time (resolve() does, once per shape signature)."""
+    if candidates is None:
+        candidates = KIND_SPECS[kind][1]
+    run = _tune_runner(kind, dims)
+
+    best_blk, best_us = default_block(kind), float("inf")
     results = {}
     for blk in candidates:
         try:
@@ -158,9 +218,9 @@ def tune(kind: str, m: int, k: int, n: int,
     if not results:
         # every candidate failed: don't poison the persistent cache (a hit
         # would suppress retries forever) -- fall back without recording
-        return DEFAULT_BLOCK
+        return default_block(kind)
     cache = _load()
-    cache[_key(kind, m, k, n)] = {
+    cache[_key(kind, *dims)] = {
         "block": list(best_blk), "us": round(best_us, 1),
         "candidates": results,
     }

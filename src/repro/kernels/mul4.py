@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import common
+from repro.kernels import autotune, common
 
 
 def _extract_lane(p, signed: bool = True):
@@ -79,13 +79,15 @@ def _mul4_split_kernel(a_ref, b_ref, p_ref, *, signed: bool):
     p_ref[...] = jnp.stack([p0, p1, p2, p3])
 
 
-def _run(kernel, a, b, block, interpret, signed=True):
+def _run(kernel, a, b, block, interpret, signed=True, kind="mul4"):
     kernel = functools.partial(kernel, signed=signed)
     interpret = common.interpret_default() if interpret is None else interpret
     assert a.shape[0] == 4 and a.shape[1:] == b.shape
     inner = b.shape
     b2, shape, cnt = common.pad_to_2d(b, common.TILE_8)
     rows, cols = b2.shape
+    if block is None:
+        block = autotune.resolve(kind, rows, cols)
     bm = max(common.TILE_8[0], min(block[0], rows) // common.TILE_8[0] * common.TILE_8[0])
     bn = max(common.TILE_8[1], min(block[1], cols) // common.TILE_8[1] * common.TILE_8[1])
     rows = common.cdiv(rows, bm) * bm
@@ -107,15 +109,19 @@ def _run(kernel, a, b, block, interpret, signed=True):
     return [common.unpad_from_2d(out[i], inner, cnt) for i in range(4)]
 
 
-def mul4_full32(a, b, *, block=(256, 512), interpret: bool | None = None,
+def mul4_full32(a, b, *, block=None, interpret: bool | None = None,
                 signed: bool = True):
     """a: (4, ...) 4-bit-valued int8; b: (...) 4-bit-valued int8.
     Returns [p0..p3] int32.  TPU-native full 32-bit lane layout.
-    `signed=False` only when ALL products are provably non-negative."""
+    `signed=False` only when ALL products are provably non-negative.
+    block=None resolves through kernels/autotune.py."""
     return _run(_mul4_full32_kernel, a, b, block, interpret, signed)
 
 
-def mul4_split(a, b, *, block=(256, 512), interpret: bool | None = None,
+def mul4_split(a, b, *, block=None, interpret: bool | None = None,
                signed: bool = True):
-    """Paper-faithful Fig. 3 / Eq. 4 variant (27-bit port + correction)."""
-    return _run(_mul4_split_kernel, a, b, block, interpret, signed)
+    """Paper-faithful Fig. 3 / Eq. 4 variant (27-bit port + correction).
+    block=None resolves through its own "mul4_split" autotune kind (the
+    split layout has a different cost profile than full32)."""
+    return _run(_mul4_split_kernel, a, b, block, interpret, signed,
+                kind="mul4_split")

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import common
+from repro.kernels import autotune, common
 
 
 def _muladd2_kernel(a_ref, b_ref, c_ref, pa_ref, pb_ref):
@@ -38,19 +38,22 @@ def _muladd2_kernel(a_ref, b_ref, c_ref, pa_ref, pb_ref):
     pb_ref[...] = p_b
 
 
-def muladd2(a, b, c, *, block=(256, 512), interpret: bool | None = None):
+def muladd2(a, b, c, *, block=None, interpret: bool | None = None):
     """a, b, c: (n, ...) int8 stacks (n = chain length within the Eq. 2
     bound).  Returns (p_a, p_b) int32 of shape (...).
 
     The caller (core pass / ops.py) is responsible for n <= Eq. 2 bound;
     violating it overflows the low lane exactly as it would on the DSP.
-    """
+    block=None resolves through kernels/autotune.py (keyed on chain length
+    and the padded 2-D layout)."""
     interpret = common.interpret_default() if interpret is None else interpret
     assert a.shape == b.shape == c.shape and a.ndim >= 1
     n = a.shape[0]
     inner = a.shape[1:]
     a2, shape, cnt = common.pad_to_2d(a.reshape(n, -1)[0], common.TILE_8)
     rows, cols = a2.shape
+    if block is None:
+        block = autotune.resolve("muladd2", n, rows, cols)
 
     def prep(x):
         flat = x.reshape(n, -1)

@@ -31,8 +31,9 @@ def _use_pallas() -> bool:
 
 
 def set_autotune(on: bool = True) -> None:
-    """Enable block-size autotuning for the matmul kernels (see
-    kernels/autotune.py; results persist in an on-disk cache)."""
+    """Enable block-size autotuning for the Pallas kernels -- the matmuls
+    and the SWAR units (see kernels/autotune.py; results persist in an
+    on-disk cache)."""
     autotune.enable(on)
 
 

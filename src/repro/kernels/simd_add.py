@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import common
+from repro.kernels import autotune, common
 
 
 def _swar_kernel(x_ref, y_ref, o_ref, *, lane_bits: int, sub: bool):
@@ -34,19 +34,23 @@ def _swar_kernel(x_ref, y_ref, o_ref, *, lane_bits: int, sub: bool):
 
 
 def simd_add_packed(x_packed, y_packed, *, lane_bits: int = 8,
-                    sub: bool = False, block=(256, 512),
+                    sub: bool = False, block=None,
                     interpret: bool | None = None):
     """Lane-wise add/sub on SWAR-packed u32 words: the packed fast path.
 
     x_packed, y_packed: uint32 tensors of identical shape (each word holds
     32//lane_bits logical operands).  One VPU op per word -> 4x (8-bit) or
     2x (16-bit) op-density, the paper's four12/two24 rescaled to 32 bits.
-    """
+
+    block=None resolves through kernels/autotune.py (persisted winner for
+    this padded 2-D layout, else the static default)."""
     assert x_packed.dtype == jnp.uint32 and y_packed.dtype == jnp.uint32
     interpret = common.interpret_default() if interpret is None else interpret
     x2, shape, n = common.pad_to_2d(x_packed, common.TILE_32)
     y2, _, _ = common.pad_to_2d(y_packed, common.TILE_32)
     rows, cols = x2.shape
+    if block is None:
+        block = autotune.resolve("simd_add", rows, cols)
     bm = min(block[0], rows)
     bn = min(block[1], cols)
     # round block to tile multiples

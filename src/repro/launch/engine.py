@@ -1,0 +1,458 @@
+"""Continuous-batching serve engine over the cached fused decode loop.
+
+SILVIA packs independent narrow ops into one wide DSP; this engine packs
+independent requests into one compiled decode dispatch.  Decode runs in
+fixed-length **scan segments** (one dispatch for `segment_len` tokens across
+all slots); between segments the scheduler admits queued requests into free
+slots and evicts finished ones, so ONE compiled graph serves an
+ever-changing request mix:
+
+* **bucketed shape cache** -- segment batch size and attended cache length
+  are rounded up to power-of-two buckets (launch/scheduler.py), so the
+  SILVIA trace cache and `jax.jit` compile a handful of graphs, bounded by
+  the bucket-set product (`cache_info()["graphs"]`); `warmup()` pre-compiles
+  the whole grid at startup.
+* **slot-based paged KV cache** -- the KV buffers carry a leading slot
+  dimension ([layers, n_slots, max_cache_len, ...]); each slot is a page
+  with its own position and active flag, threaded through
+  `lm.decode_step`/`attn_decode` so inactive slots neither mutate their
+  page nor contribute sampled tokens.  Pages are reused WITHOUT scrubbing:
+  the per-row causal mask (`t <= pos`) makes stale positions exact-zero
+  softmax terms, so reuse is bit-safe.
+* **chunked prefill** -- with `prefill_chunk=C`, prompts are fed through the
+  same decode path C tokens at a time (same bucket shapes, same compiled
+  family), so prefill work can interleave between decode segments instead
+  of monopolizing a dispatch.
+* decode bundles live in launch/serve.py's LRU decode cache, keyed
+  (cfg, pass set, "engine"); greedy outputs are token-identical to the
+  static `serve.generate()` path, including with SILVIA passes on
+  (tests/test_engine.py asserts bitwise equality).
+
+Slot arithmetic invariants (why masking is exact, not approximate): a slot
+row only ever attends cache positions `<= pos`, every position `<= pos` was
+written by the CURRENT request (prefill wrote 0..prompt_len-1, decode writes
+sequentially at pos before attending it), and masked score entries become
+exact float zeros after softmax -- so neither stale pages, batch padding,
+nor length padding can perturb an active row by even one ULP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as silvia
+from repro.launch import scheduler
+from repro.launch import serve
+from repro.models import lm
+
+_CACHE_FAMILIES = ("dense", "vlm", "moe")
+
+
+@dataclasses.dataclass(frozen=True)
+class _EngineBundle:
+    """Compiled callables shared by every engine with the same (cfg, pass
+    set); stored in serve.py's LRU decode cache."""
+    decode_fn: object      # (params, tok [B,C], cache, pos, active) -> ...
+    segment: object        # jitted segment loop (static n_steps)
+    chunk_step: object     # jitted single chunk-decode dispatch
+    prefill: object        # jitted bucketed full prefill (static cache_len)
+
+
+def _build_bundle(cfg, silvia_passes: str) -> _EngineBundle:
+    passes = serve.SILVIA_PASS_SETS[silvia_passes]
+
+    def decode_fn(p, tok, kv, pos, active):
+        return lm.decode_step(p, tok, kv, pos, cfg, active=active)
+
+    if passes:
+        decode_fn = silvia.optimize(decode_fn, passes)
+
+    @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(2,))
+    def segment(params, tok, cache, pos, active, n_steps):
+        def step(carry, _):
+            tok, kv, pos = carry
+            logits, kv = decode_fn(params, tok, kv, pos, active)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1)
+            nxt = nxt.astype(jnp.int32)[:, None]
+            nxt = jnp.where(active[:, None], nxt, 0)
+            # unclamped advance, exactly matching the static loop's pos0+i:
+            # every write this segment lands below t_b (the engine sizes
+            # t_b >= max(pos)+n_steps), and a slot that finished
+            # mid-segment only overruns into its own discarded row (XLA
+            # clamps the slice start) before eviction at harvest
+            pos = jnp.where(active, pos + 1, pos)
+            return (nxt, kv, pos), nxt
+
+        (tok, cache, pos), seq = jax.lax.scan(step, (tok, cache, pos),
+                                              None, length=n_steps)
+        return seq[:, :, 0], tok, cache, pos
+
+    chunk_step = jax.jit(decode_fn, donate_argnums=(2,))
+
+    @functools.partial(jax.jit, static_argnums=(3,))
+    def prefill(params, prompts, last_positions, cache_len):
+        logits, cache = lm.prefill(params, prompts, cfg, cache_len=cache_len,
+                                   last_positions=last_positions)
+        tok0 = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return tok0, cache
+
+    return _EngineBundle(decode_fn, segment, chunk_step, prefill)
+
+
+def _engine_bundle(cfg, silvia_passes: str) -> _EngineBundle:
+    return serve._DECODE_CACHE.get_or_build(
+        (cfg, silvia_passes, "engine"),
+        lambda: _build_bundle(cfg, silvia_passes))
+
+
+class ServeEngine:
+    """Continuous-batching greedy-decode engine (see module docstring).
+
+    Parameters
+    ----------
+    n_slots:        KV pages / maximum in-flight requests.
+    max_cache_len:  page length; every request needs
+                    prompt_len + max_new_tokens <= max_cache_len.
+    segment_len:    decode steps per dispatch.  Longer segments amortize
+                    dispatch overhead; shorter ones admit/evict sooner --
+                    the classic continuous-batching latency/throughput dial.
+    silvia_passes:  serve.SILVIA_PASS_SETS key ("off" | "add" | "muladd"
+                    | "all").
+    prefill_chunk:  if set (power of two), prompts are prefilled through
+                    the chunked decode path this many tokens per dispatch;
+                    None uses one bucketed full-prefill dispatch.
+    min_len_bucket / min_batch_bucket: smallest cache-length / batch
+                    buckets (both clamped up to the physical maxima).
+    """
+
+    def __init__(self, params, cfg, *, n_slots: int = 8,
+                 max_cache_len: int = 256, segment_len: int = 16,
+                 silvia_passes: str = "off",
+                 prefill_chunk: Optional[int] = None,
+                 min_len_bucket: int = 32, min_batch_bucket: int = 1):
+        if cfg.family not in _CACHE_FAMILIES:
+            raise ValueError(
+                f"ServeEngine needs a KV-cache family {_CACHE_FAMILIES}, "
+                f"got {cfg.family!r} (SSM/hybrid state is not sliceable "
+                "along a cache-length axis)")
+        if segment_len < 1:
+            raise ValueError("segment_len must be >= 1")
+        if prefill_chunk is not None and prefill_chunk & (prefill_chunk - 1):
+            raise ValueError("prefill_chunk must be a power of two")
+        if prefill_chunk is not None and max_cache_len % prefill_chunk:
+            # a prompt bucket clamped to the cap must still split into
+            # whole chunks, or the prompt tail would be silently dropped
+            raise ValueError("max_cache_len must be a multiple of "
+                             "prefill_chunk")
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_cache_len = max_cache_len
+        self.segment_len = segment_len
+        self.silvia_passes = silvia_passes
+        self.prefill_chunk = prefill_chunk
+        self.min_len_bucket = min(min_len_bucket, max_cache_len)
+        self.min_batch_bucket = min(min_batch_bucket, n_slots)
+        # smallest prompt bucket: chunked prefill needs chunk-aligned
+        # buckets; full prefill just avoids degenerate tiny graphs
+        self.min_prompt_bucket = min(prefill_chunk or 8, max_cache_len)
+        self.batch_buckets = scheduler.bucket_set(self.min_batch_bucket,
+                                                  n_slots)
+        self.len_buckets = scheduler.bucket_set(self.min_len_bucket,
+                                                max_cache_len)
+
+        self._bundle = _engine_bundle(cfg, silvia_passes)
+        self._queue = scheduler.RequestQueue()
+        self._cache = lm.init_cache(cfg, n_slots, max_cache_len)
+        self._tok = np.zeros((n_slots, 1), np.int32)
+        self._pos = np.zeros((n_slots,), np.int32)
+        self._active = np.zeros((n_slots,), bool)
+        self._slot_req: List[Optional[scheduler.Request]] = [None] * n_slots
+        self._remaining = np.zeros((n_slots,), np.int64)
+        self.finished: List[scheduler.Request] = []
+        self.total_generated = 0
+        self.occupancy: List[float] = []
+        self._graphs: set = set()
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, req: scheduler.Request) -> None:
+        if req.total_len > self.max_cache_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+gen {req.total_len} exceeds "
+                f"max_cache_len {self.max_cache_len}")
+        self._queue.submit(req)
+
+    def _finish(self, req: scheduler.Request, now: float) -> None:
+        req.finish_time = now
+        self.finished.append(req)
+
+    def _evict(self, slot: int) -> None:
+        """Free a page: no scrubbing needed (see module docstring)."""
+        self._active[slot] = False
+        self._slot_req[slot] = None
+        self._remaining[slot] = 0
+        self._pos[slot] = 0
+        self._tok[slot] = 0
+
+    # -- admission / prefill ------------------------------------------------
+
+    def _admit(self, now: float) -> int:
+        free = [i for i in range(self.n_slots) if not self._active[i]]
+        ready = self._queue.pop_ready(now, limit=len(free))
+        if not ready:
+            return 0
+        # group by prompt-length bucket so one compiled prefill graph per
+        # (batch bucket, prompt bucket) covers the mix
+        groups: Dict[int, List[scheduler.Request]] = {}
+        for r in ready:
+            sb = scheduler.bucket_pow2(r.prompt_len,
+                                       minimum=self.min_prompt_bucket,
+                                       maximum=self.max_cache_len)
+            groups.setdefault(sb, []).append(r)
+        for sb, group in sorted(groups.items()):
+            self._admit_group(group, sb, free, now)
+        return len(ready)
+
+    def _admit_group(self, group: List[scheduler.Request], sb: int,
+                     free: List[int], now: float) -> None:
+        g = len(group)
+        bb = scheduler.bucket_pow2(g, minimum=1, maximum=self.n_slots)
+        t_pre = scheduler.bucket_pow2(sb, minimum=self.min_len_bucket,
+                                      maximum=self.max_cache_len)
+        prompts = np.zeros((bb, sb), np.int32)
+        lens = np.ones((bb,), np.int32)
+        for i, r in enumerate(group):
+            prompts[i, :r.prompt_len] = r.prompt
+            lens[i] = r.prompt_len
+        if self.prefill_chunk is None:
+            self._graphs.add(("prefill", bb, sb, t_pre))
+            tok0, rows = self._bundle.prefill(self.params,
+                                              jnp.asarray(prompts),
+                                              jnp.asarray(lens - 1), t_pre)
+        else:
+            tok0, rows = self._chunked_prefill(prompts, lens, t_pre)
+        tok0 = np.asarray(tok0)
+        slots = np.asarray([free.pop(0) for _ in range(g)], np.int32)
+        # scatter the admitted pages into their slots
+        self._cache = jax.tree_util.tree_map(
+            lambda big, new: big.at[:, slots, :t_pre].set(new[:, :g]),
+            self._cache, rows)
+        for i, r in enumerate(group):
+            slot = int(slots[i])
+            r.tokens = [int(tok0[i, 0])]
+            r.first_token_time = now
+            self.total_generated += 1
+            if r.max_new_tokens == 1:
+                self._finish(r, now)
+                self._evict(slot)
+                free.append(slot)
+                free.sort()
+                continue
+            self._slot_req[slot] = r
+            self._active[slot] = True
+            self._pos[slot] = r.prompt_len
+            self._tok[slot] = tok0[i]
+            self._remaining[slot] = r.max_new_tokens - 1
+
+    def _chunked_prefill(self, prompts: np.ndarray, lens: np.ndarray,
+                         t_pre: int):
+        """Prefill through the decode path, `prefill_chunk` tokens per
+        dispatch -- the same compiled family (and bucket shapes) as decode
+        segments, so prefill work interleaves instead of needing its own
+        wide graphs."""
+        bb, sb = prompts.shape
+        c = min(self.prefill_chunk, sb)
+        assert sb % c == 0, (sb, c)
+        cache = lm.init_cache(self.cfg, bb, t_pre)
+        active = jnp.ones((bb,), bool)
+        # only each row's last-real-position logits are needed; harvest
+        # them per chunk so one [bb, c, V] block is ever live
+        last = [None] * bb
+        self._graphs.add(("chunk", bb, c, t_pre))
+        for k in range(sb // c):
+            toks = jnp.asarray(prompts[:, k * c:(k + 1) * c])
+            pos = jnp.full((bb,), k * c, jnp.int32)
+            logits, cache = self._bundle.chunk_step(self.params, toks,
+                                                    cache, pos, active)
+            hit = np.nonzero((lens - 1) // c == k)[0]
+            if hit.size:
+                sel = logits[jnp.asarray(hit),
+                             jnp.asarray((lens[hit] - 1) % c)]
+                for j, b in enumerate(hit):
+                    last[b] = sel[j]
+        tok0 = jnp.argmax(jnp.stack(last), axis=-1)
+        return tok0.astype(jnp.int32)[:, None], cache
+
+    # -- decode segments ----------------------------------------------------
+
+    def _segment(self) -> np.ndarray:
+        """Run one fused decode segment over the bucketed active prefix;
+        returns the [n_steps, bb] token block."""
+        hi = int(np.max(np.nonzero(self._active)[0])) + 1
+        bb = scheduler.bucket_pow2(hi, minimum=self.min_batch_bucket,
+                                   maximum=self.n_slots)
+        n_steps = self.segment_len
+        need = int(np.max(self._pos[:bb][self._active[:bb]])) + n_steps
+        t_b = scheduler.bucket_pow2(min(need, self.max_cache_len),
+                                    minimum=self.min_len_bucket,
+                                    maximum=self.max_cache_len)
+        self._graphs.add(("segment", bb, t_b, n_steps))
+        fast = bb == self.n_slots and t_b == self.max_cache_len
+        cache_in = self._cache if fast else jax.tree_util.tree_map(
+            lambda t: t[:, :bb, :t_b], self._cache)
+        seq, tok, cache_out, pos = self._bundle.segment(
+            self.params, jnp.asarray(self._tok[:bb]), cache_in,
+            jnp.asarray(self._pos[:bb]), jnp.asarray(self._active[:bb]),
+            n_steps)
+        if fast:
+            self._cache = cache_out
+        else:
+            self._cache = jax.tree_util.tree_map(
+                lambda big, s: big.at[:, :bb, :t_b].set(s),
+                self._cache, cache_out)
+        self._tok[:bb] = np.asarray(tok)
+        self._pos[:bb] = np.asarray(pos)
+        self.occupancy.append(float(np.sum(self._active)) / self.n_slots)
+        return np.asarray(seq)
+
+    def _harvest(self, seq: np.ndarray, now: float) -> None:
+        n_steps, bb = seq.shape
+        for slot in range(bb):
+            req = self._slot_req[slot]
+            if req is None:
+                continue
+            take = int(min(self._remaining[slot], n_steps))
+            req.tokens.extend(int(t) for t in seq[:take, slot])
+            self.total_generated += take
+            self._remaining[slot] -= take
+            if self._remaining[slot] == 0:
+                self._finish(req, now)
+                self._evict(slot)
+
+    # -- driver -------------------------------------------------------------
+
+    def step(self, clock: Optional[scheduler.Clock] = None) -> bool:
+        """Admit what has arrived, then run one decode segment.  Returns
+        False when there was nothing to do (caller should wait for the next
+        arrival)."""
+        clock = clock or scheduler.Clock()
+        now = clock.now()
+        admitted = self._admit(now)
+        if not self._active.any():
+            return admitted > 0
+        seq = self._segment()
+        self._harvest(seq, clock.now())
+        return True
+
+    def run(self, requests: Sequence[scheduler.Request] = (),
+            clock: Optional[scheduler.Clock] = None) -> Dict[int, np.ndarray]:
+        """Serve until the queue drains; returns {rid: generated tokens}."""
+        for r in requests:
+            self.submit(r)
+        clock = clock or scheduler.Clock()
+        while True:
+            if not self.step(clock):
+                nxt = self._queue.next_arrival(clock.now())
+                if nxt is not None:
+                    clock.wait_until(nxt)
+                    continue
+                if not len(self._queue) and not self._active.any():
+                    break
+        return {r.rid: np.asarray(r.tokens, np.int32) for r in self.finished}
+
+    # -- observability ------------------------------------------------------
+
+    @property
+    def prompt_buckets(self) -> tuple:
+        return scheduler.bucket_set(self.min_prompt_bucket,
+                                    self.max_cache_len)
+
+    @property
+    def admission_batch_buckets(self) -> tuple:
+        return scheduler.bucket_set(1, self.n_slots)
+
+    def graph_bound(self) -> int:
+        """Upper bound on distinct compiled graphs: the segment bucket grid
+        plus one prefill (or chunk) graph per (admission batch bucket,
+        prompt bucket) -- what `warmup()` walks."""
+        seg = len(self.batch_buckets) * len(self.len_buckets)
+        pre = len(self.admission_batch_buckets) * len(self.prompt_buckets)
+        return seg + pre
+
+    def warmup(self, prompt_lens: Optional[Sequence[int]] = None) -> int:
+        """Pre-compile the (batch bucket x length bucket) segment grid on
+        throwaway state, plus -- when the expected prompt-length mix is
+        known -- the prefill graphs it maps to; returns the number of
+        graphs compiled."""
+        n = 0
+        for bb in self.batch_buckets:
+            for t_b in self.len_buckets:
+                key = ("segment", bb, t_b, self.segment_len)
+                if key in self._graphs:
+                    continue
+                cache = lm.init_cache(self.cfg, bb, t_b)
+                out = self._bundle.segment(
+                    self.params, jnp.zeros((bb, 1), jnp.int32), cache,
+                    jnp.zeros((bb,), jnp.int32), jnp.zeros((bb,), bool),
+                    self.segment_len)
+                jax.block_until_ready(out[0])
+                self._graphs.add(key)
+                n += 1
+        if prompt_lens is None:
+            return n
+        sbs = sorted({scheduler.bucket_pow2(pl,
+                                            minimum=self.min_prompt_bucket,
+                                            maximum=self.max_cache_len)
+                      for pl in prompt_lens})
+        for bb in self.admission_batch_buckets:
+            for sb in sbs:
+                t_pre = scheduler.bucket_pow2(sb, minimum=self.min_len_bucket,
+                                              maximum=self.max_cache_len)
+                prompts = np.zeros((bb, sb), np.int32)
+                lens = np.ones((bb,), np.int32)
+                if self.prefill_chunk is None:
+                    key = ("prefill", bb, sb, t_pre)
+                    if key in self._graphs:
+                        continue
+                    out = self._bundle.prefill(self.params,
+                                               jnp.asarray(prompts),
+                                               jnp.asarray(lens - 1), t_pre)
+                else:
+                    key = ("chunk", bb, min(self.prefill_chunk, sb), t_pre)
+                    if key in self._graphs:
+                        continue
+                    out = self._chunked_prefill(prompts, lens, t_pre)
+                jax.block_until_ready(out[0])
+                self._graphs.add(key)
+                n += 1
+        return n
+
+    def cache_info(self) -> dict:
+        """Compiled-graph census: engine shape keys (bounded by the bucket
+        sets), the serve-module decode-bundle LRU, and -- with SILVIA
+        passes on -- the pass pipeline's own trace-cache counters."""
+        info = {
+            "graphs": len(self._graphs),
+            "graph_bound": self.graph_bound(),
+            "graph_keys": sorted(self._graphs),
+            "batch_buckets": list(self.batch_buckets),
+            "len_buckets": list(self.len_buckets),
+            "decode_bundle_lru": serve.decode_cache_info(),
+        }
+        if hasattr(self._bundle.decode_fn, "cache_info"):
+            info["silvia"] = self._bundle.decode_fn.cache_info()
+        return info
+
+    @property
+    def n_active(self) -> int:
+        return int(np.sum(self._active))
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)

@@ -1,0 +1,187 @@
+"""Request-level scheduling for the continuous-batching serve engine.
+
+The paper's economy is packing independent narrow ops into one wide DSP;
+the serving analogue packs independent requests into one compiled decode
+dispatch.  This module owns the request-side half of that analogy:
+
+* `Request` / `RequestQueue`: FIFO admission with arrival-time gating, so
+  synthetic Poisson traffic (or a real frontend) can feed the engine.
+* shape **buckets**: batch sizes and cache/prompt lengths are rounded up to
+  a small power-of-two set, so the trace cache and `jax.jit` only ever see
+  a handful of aval signatures -- the AutoDSE-style "pay once" philosophy
+  applied to compiled-graph count instead of synthesis runs.
+* `synthetic_traffic`: Poisson arrivals with mixed prompt/gen lengths, the
+  ragged mix that leaves a static batch (one wide "DSP") mostly idle.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# shape buckets
+# ---------------------------------------------------------------------------
+
+def bucket_pow2(n: int, minimum: int = 1, maximum: Optional[int] = None) -> int:
+    """Smallest power of two >= n, clamped to [minimum, maximum].
+
+    `minimum` must itself be a power of two; `maximum` need not be -- it is
+    an inclusive cap (the physical slot count / cache capacity)."""
+    if n < 0:
+        raise ValueError(f"bucket_pow2: negative size {n}")
+    b = max(minimum, 1)
+    while b < n:
+        b *= 2
+    if maximum is not None:
+        if n > maximum:
+            raise ValueError(f"size {n} exceeds bucket cap {maximum}")
+        b = min(b, maximum)
+    return b
+
+
+def bucket_set(minimum: int, maximum: int) -> tuple:
+    """All buckets bucket_pow2 can produce in [minimum, maximum]: the
+    powers of two in range plus the cap itself.  The compiled-graph count
+    is bounded by products of these sets."""
+    out = []
+    b = max(minimum, 1)
+    while b < maximum:
+        out.append(b)
+        b *= 2
+    out.append(maximum)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  `prompt` is a 1-D int token array; the
+    engine generates exactly `max_new_tokens` greedy tokens (the synthetic
+    workload has no EOS; a real tokenizer would also stop early)."""
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    # filled in by the engine:
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+    def latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+
+class RequestQueue:
+    """FIFO queue with arrival-time gating."""
+
+    _ORDER = staticmethod(lambda r: (r.arrival_time, r.rid))
+
+    def __init__(self, requests: Sequence[Request] = ()):
+        self._pending: List[Request] = sorted(requests, key=self._ORDER)
+
+    def submit(self, req: Request) -> None:
+        bisect.insort(self._pending, req, key=self._ORDER)
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def next_arrival(self, now: float) -> Optional[float]:
+        """Earliest arrival time still in the future (None if the queue is
+        empty or something is already ready)."""
+        if not self._pending:
+            return None
+        t = self._pending[0].arrival_time
+        return None if t <= now else t
+
+    def pop_ready(self, now: float, limit: int) -> List[Request]:
+        """Up to `limit` requests whose arrival_time <= now, FIFO order."""
+        out: List[Request] = []
+        while self._pending and len(out) < limit \
+                and self._pending[0].arrival_time <= now:
+            out.append(self._pending.pop(0))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# synthetic traffic
+# ---------------------------------------------------------------------------
+
+def synthetic_traffic(seed: int, n_requests: int, rate: float,
+                      prompt_lens: Sequence[int], gen_lens: Sequence[int],
+                      vocab: int) -> List[Request]:
+    """Poisson arrivals (exponential inter-arrival gaps at `rate` req/s)
+    with prompt/gen lengths drawn uniformly from the given mixes."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        pl = int(rng.choice(np.asarray(prompt_lens)))
+        gl = int(rng.choice(np.asarray(gen_lens)))
+        prompt = rng.integers(0, vocab, size=pl, dtype=np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=gl,
+                            arrival_time=t))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# clocks (real serving vs fast-forward benchmarking)
+# ---------------------------------------------------------------------------
+
+class Clock:
+    """Wall clock: now() advances with real time, wait_until() sleeps."""
+
+    def __init__(self):
+        import time
+        self._time = time
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return self._time.monotonic() - self._t0
+
+    def wait_until(self, t: float) -> None:
+        dt = t - self.now()
+        if dt > 0:
+            self._time.sleep(dt)
+
+
+class FastForwardClock(Clock):
+    """Clock for benchmarks: compute time is measured for real, but idle
+    waits (no request in flight, none arrived yet) are skipped by jumping
+    the clock forward, so a simulated Poisson trace replays instantly."""
+
+    def __init__(self):
+        super().__init__()
+        self._skew = 0.0
+
+    def now(self) -> float:
+        return super().now() + self._skew
+
+    def wait_until(self, t: float) -> None:
+        dt = t - self.now()
+        if dt > 0:
+            self._skew += dt

@@ -19,14 +19,33 @@ The serving path is where the paper's technique lives end to end:
   python-level dispatch per generated token (``--no-fused-decode`` restores
   the per-step loop for A/B measurement -- benchmarks/pipeline_overhead.py
   reports both);
-* with ``--autotune``, the Pallas matmul kernels search their block sizes
-  on first use and persist the winners on disk (kernels/autotune.py;
-  cache at $REPRO_AUTOTUNE_CACHE or ~/.cache/repro/autotune.json).
+* with ``--autotune``, the Pallas kernels (matmuls AND the SWAR units)
+  search their block sizes on first use and persist the winners on disk
+  (kernels/autotune.py; cache at $REPRO_AUTOTUNE_CACHE or
+  ~/.cache/repro/autotune.json).
+
+For ragged multi-request traffic, use the continuous-batching engine
+instead of calling `generate()` per batch (see launch/engine.py and
+examples/serve_engine.py)::
+
+    from repro.launch.engine import ServeEngine
+    from repro.launch.scheduler import Request
+
+    eng = ServeEngine(params, cfg, n_slots=8, max_cache_len=256,
+                      segment_len=16, silvia_passes="all")
+    eng.submit(Request(rid=0, prompt=prompt_tokens, max_new_tokens=64))
+    done = eng.run()          # {rid: np.ndarray of generated tokens}
+
+The engine shares this module's decode-bundle cache: one compiled segment
+graph per (batch bucket, cache-length bucket) serves an ever-changing
+request mix, token-identically to `generate()`.
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import functools
+import os
 import time
 
 import jax
@@ -47,15 +66,66 @@ SILVIA_PASS_SETS = {
     "all": list(silvia.DEFAULT_PASSES),
 }
 
-# (cfg, silvia_passes) -> (step_fn, jitted step, jitted fused loop).
-# ModelConfig is a frozen dataclass, so this composes with the SILVIA trace
-# cache to give compile-once/run-many across generate() calls.
-_DECODE_CACHE: dict = {}
+
+class LRUCache:
+    """Bounded LRU keyed cache with cache_info()/cache_clear() counters
+    mirroring core/pipeline.py's trace-cache bookkeeping.
+
+    Decode bundles hold compiled executables (and, with SILVIA passes on,
+    their own trace caches), so an unbounded dict leaks a full compiled
+    graph per distinct (cfg, pass set) forever; serving fleets cycle
+    through many configs.  Default bound via $REPRO_DECODE_CACHE_SIZE."""
+
+    def __init__(self, maxsize: int = 16):
+        self.maxsize = max(1, int(maxsize))
+        self._store: collections.OrderedDict = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get_or_build(self, key, builder):
+        ent = self._store.get(key)
+        if ent is not None:
+            self.hits += 1
+            self._store.move_to_end(key)
+            return ent
+        self.misses += 1
+        ent = builder()
+        self._store[key] = ent
+        while len(self._store) > self.maxsize:
+            self._store.popitem(last=False)
+            self.evictions += 1
+        return ent
+
+    def info(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._store),
+                "maxsize": self.maxsize}
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.hits = self.misses = self.evictions = 0
+
+
+# (cfg, silvia_passes[, variant]) -> decode bundle.  ModelConfig is a frozen
+# dataclass, so this composes with the SILVIA trace cache to give
+# compile-once/run-many across generate() calls; the serve engine stores its
+# segment bundles here too under a "engine" variant key.
+_DECODE_CACHE = LRUCache(
+    maxsize=int(os.environ.get("REPRO_DECODE_CACHE_SIZE", "16")))
+
+
+def decode_cache_info() -> dict:
+    """Counters for the decode-bundle LRU (hits/misses/evictions/size)."""
+    return _DECODE_CACHE.info()
+
+
+def decode_cache_clear() -> None:
+    _DECODE_CACHE.clear()
 
 
 def _decode_bundle(cfg, silvia_passes: str):
-    key = (cfg, silvia_passes)
-    if key not in _DECODE_CACHE:
+    def build():
         def decode_fn(p, tok, kv, pos):
             return lm.decode_step(p, tok, kv, pos, cfg)
 
@@ -77,8 +147,9 @@ def _decode_bundle(cfg, silvia_passes: str):
             return seq, kv
 
         decode_jit = jax.jit(decode_fn, donate_argnums=(2,))
-        _DECODE_CACHE[key] = (decode_fn, decode_jit, fused_loop)
-    return _DECODE_CACHE[key]
+        return (decode_fn, decode_jit, fused_loop)
+
+    return _DECODE_CACHE.get_or_build((cfg, silvia_passes), build)
 
 
 def get_decode_step(cfg, silvia_passes: str = "off"):
@@ -124,8 +195,8 @@ def main():
     ap.add_argument("--silvia", default="off",
                     choices=list(SILVIA_PASS_SETS))
     ap.add_argument("--autotune", action="store_true",
-                    help="tune + persist Pallas matmul block sizes "
-                         "(kernels/autotune.py)")
+                    help="tune + persist Pallas kernel block sizes -- "
+                         "matmuls and SWAR units (kernels/autotune.py)")
     ap.add_argument("--no-fused-decode", action="store_true",
                     help="per-step decode dispatch instead of the fused "
                          "lax.scan loop (for A/B comparison)")

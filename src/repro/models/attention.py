@@ -171,27 +171,44 @@ def attn_full(p, x, cfg: ModelConfig, positions=None, causal: bool = True,
     return out, {"k": kp, "v": vp}
 
 
-def attn_decode(p, x_t, cache, pos, cfg: ModelConfig):
-    """One-token decode: x_t [B, 1, d]; pos [B] int32 next position.
+def _mask_inactive(new, old, active):
+    """Keep `old` rows wherever active is False (slot not serving a
+    request): inactive slots must not mutate their KV pages."""
+    m = active.reshape((active.shape[0],) + (1,) * (new.ndim - 1))
+    return jnp.where(m, new, old)
 
-    Returns (out [B,1,d], new_cache)."""
-    b = x_t.shape[0]
-    posb = pos[:, None]                     # [B,1]
+
+def attn_decode(p, x_t, cache, pos, cfg: ModelConfig, active=None):
+    """Decode C new tokens against the cache: x_t [B, C, d] (C=1 is the
+    classic single-token step; C>1 is a chunked-prefill step); pos [B] int32
+    position of the FIRST new token per row; active: optional [B] bool slot
+    mask -- inactive rows leave their cache untouched.
+
+    Returns (out [B,C,d], new_cache).  Token c of row b is written at cache
+    position pos[b]+c and attends causally to positions <= pos[b]+c."""
+    b, c = x_t.shape[:2]
+    qpos = pos[:, None] + jnp.arange(c, dtype=pos.dtype)    # [B,C]
     if cfg.m_rope_sections is not None:
-        posq = jnp.broadcast_to(posb[None], (3, b, 1))
+        posq = jnp.broadcast_to(qpos[None], (3, b, c))
     else:
-        posq = posb
+        posq = qpos
     q = _project_q(p, x_t, cfg)
     k_t, v_t = _project_kv(p, x_t, cfg)
     if not cfg.learned_pos:
         q = common.apply_rope(q, posq, cfg.rope_theta, cfg.m_rope_sections)
         k_t = common.apply_rope(k_t, posq, cfg.rope_theta, cfg.m_rope_sections)
-    # insert at pos (same pos for every batch row in this serving step)
+    # insert the C new rows at per-row positions pos..pos+C-1
     quantized = cfg.serve_kv_dtype == "int8"
     kc, ksc = _cache_insert(cache["k"], cache.get("k_s"), k_t, pos,
                             quantized)
     vc, vsc = _cache_insert(cache["v"], cache.get("v_s"), v_t, pos,
                             quantized)
+    if active is not None:
+        kc = _mask_inactive(kc, cache["k"], active)
+        vc = _mask_inactive(vc, cache["v"], active)
+        if quantized:
+            ksc = _mask_inactive(ksc, cache["k_s"], active)
+            vsc = _mask_inactive(vsc, cache["v_s"], active)
     if quantized:
         k = _kv_dequant(kc, ksc, x_t.dtype)
         v = _kv_dequant(vc, vsc, x_t.dtype)
@@ -200,10 +217,10 @@ def attn_decode(p, x_t, cache, pos, cfg: ModelConfig):
         k, v = kc, vc
         new_cache = {"k": kc, "v": vc}
     scale = 1.0 / np.sqrt(cfg.head_dim)
-    scores = _gqa_scores(q, k, cfg) * scale      # [B,KV,G,1,T]
+    scores = _gqa_scores(q, k, cfg) * scale      # [B,KV,G,C,T]
     t = k.shape[1]
-    valid = jnp.arange(t)[None, :] <= pos[:, None]          # [B,T]
-    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    valid = jnp.arange(t)[None, None, :] <= qpos[:, :, None]   # [B,C,T]
+    scores = jnp.where(valid[:, None, None, :, :], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1).astype(x_t.dtype)
     out = qmatmul(_gqa_out(w, v, cfg), p["wo"])
     return out, new_cache

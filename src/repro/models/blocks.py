@@ -44,10 +44,11 @@ def init_dense_block(rng, cfg: ModelConfig):
 
 
 def dense_block(p, x, cfg, *, mode="train", cache=None, pos=None,
-                positions=None, cache_len=None):
+                positions=None, cache_len=None, active=None):
     h = _norm(cfg, x, p["ln1"])
     if mode == "decode":
-        a, new_cache = attn.attn_decode(p["attn"], h, cache, pos, cfg)
+        a, new_cache = attn.attn_decode(p["attn"], h, cache, pos, cfg,
+                                        active=active)
     elif mode == "prefill":
         a, new_cache = attn.attn_full(p["attn"], h, cfg, positions,
                                       return_cache=True, cache_len=cache_len)
@@ -72,10 +73,11 @@ def init_moe_block(rng, cfg: ModelConfig):
 
 
 def moe_block(p, x, cfg, *, mode="train", cache=None, pos=None,
-              positions=None, cache_len=None):
+              positions=None, cache_len=None, active=None):
     h = _norm(cfg, x, p["ln1"])
     if mode == "decode":
-        a, new_cache = attn.attn_decode(p["attn"], h, cache, pos, cfg)
+        a, new_cache = attn.attn_decode(p["attn"], h, cache, pos, cfg,
+                                        active=active)
     elif mode == "prefill":
         a, new_cache = attn.attn_full(p["attn"], h, cfg, positions,
                                       return_cache=True, cache_len=cache_len)
@@ -98,7 +100,7 @@ def init_ssm_block(rng, cfg: ModelConfig):
 
 
 def ssm_block(p, x, cfg, *, mode="train", cache=None, pos=None,
-              positions=None, cache_len=None):
+              positions=None, cache_len=None, active=None):
     h = _norm(cfg, x, p["ln"])
     if mode == "decode":
         y, new_cache = ssm.ssd_decode(p["ssm"], h, cache, cfg)
@@ -145,7 +147,7 @@ def _tree_idx(tree, i):
 
 
 def hybrid_block(p, x, cfg, *, mode="train", cache=None, pos=None,
-                 positions=None, cache_len=None):
+                 positions=None, cache_len=None, active=None):
     """One jamba super-block: period layers, each = mixer + FFN residual."""
     hp, m = cfg.hybrid, cfg.moe
     aux_total = jnp.float32(0.0)
@@ -155,7 +157,8 @@ def hybrid_block(p, x, cfg, *, mode="train", cache=None, pos=None,
         if i == hp.attn_index:
             h = _norm(cfg, x, p["attn_ln"])
             if mode == "decode":
-                a, c = attn.attn_decode(p["attn"], h, cache["attn"], pos, cfg)
+                a, c = attn.attn_decode(p["attn"], h, cache["attn"], pos, cfg,
+                                        active=active)
             elif mode == "prefill":
                 a, c = attn.attn_full(p["attn"], h, cfg, positions,
                                       return_cache=True, cache_len=cache_len)

@@ -154,8 +154,12 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int,
 
 
 def prefill(params, inputs, cfg: ModelConfig, cache_len: int,
-            positions=None):
-    """Run the prompt, return (last-position logits, cache)."""
+            positions=None, last_positions=None):
+    """Run the prompt, return (last-position logits, cache).
+
+    last_positions: optional [B] int32 -- per-row index of the last REAL
+    prompt token (for right-padded ragged batches; the serve engine pads
+    prompts up to a shape bucket).  Default: the final column."""
     if cfg.family == "encdec":
         return encdec_prefill(params, inputs, cfg, cache_len)
     x = _embed(params, inputs, cfg)
@@ -173,24 +177,39 @@ def prefill(params, inputs, cfg: ModelConfig, cache_len: int,
 
     x, caches = jax.lax.scan(body, x, params["blocks"])
     x = common.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
-    return _lm_head(params, x[:, -1:, :], cfg), caches
+    if last_positions is None:
+        x_last = x[:, -1:, :]
+    else:
+        x_last = x[jnp.arange(x.shape[0]), last_positions][:, None, :]
+    return _lm_head(params, x_last, cfg), caches
 
 
-def decode_step(params, token_t, cache, pos, cfg: ModelConfig):
-    """token_t: [B,1] int (or [B,1,d] stub embed); pos: [B] int32 positions.
+def decode_step(params, token_t, cache, pos, cfg: ModelConfig, active=None):
+    """token_t: [B,C] int (or [B,C,d] stub embed); pos: [B] int32 position
+    of the first new token per row; active: optional [B] bool slot mask --
+    inactive rows compute but neither mutate their cache nor (at the caller)
+    contribute sampled tokens.  C=1 is the serving decode step; C>1 is a
+    chunked-prefill step over the same cache layout.
 
-    Returns (logits [B,1,V], new_cache)."""
+    Returns (logits [B,C,V], new_cache)."""
+    if active is not None and cfg.family not in ("dense", "vlm", "moe"):
+        # ssm/hybrid state and the encdec path have no masked update: the
+        # mask would be silently ignored and inactive rows corrupted
+        raise ValueError(f"active mask unsupported for family "
+                         f"{cfg.family!r}")
     if cfg.family == "encdec":
         return encdec_decode_step(params, token_t, cache, pos, cfg)
     x = _embed(params, token_t, cfg)
     if cfg.learned_pos:
-        x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None, :]
+        qpos = pos[:, None] + jnp.arange(x.shape[1], dtype=pos.dtype)
+        x = x + jnp.take(params["pos_embed"], qpos, axis=0)
     _, block_fn = BLOCK_FNS[cfg.family]
 
     def body(h, xs):
         layer_params, layer_cache = xs
         h2, new_cache, _ = block_fn(layer_params, h, cfg, mode="decode",
-                                    cache=layer_cache, pos=pos)
+                                    cache=layer_cache, pos=pos,
+                                    active=active)
         return h2, new_cache
 
     x, new_caches = jax.lax.scan(body, x, (params["blocks"], cache))

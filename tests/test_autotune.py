@@ -1,10 +1,12 @@
 """Block-size autotuner: tune -> persist -> reload, and kernel integration
-via block=None (opt-in: defaults stay untouched when disabled)."""
+via block=None (opt-in: defaults stay untouched when disabled) -- for the
+GEMMs and the SWAR kernels (simd_add / mul4 / muladd2)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels import autotune, quant_matmul
+from repro.kernels import (autotune, common, mul4, muladd2, quant_matmul,
+                           ref, simd_add)
 
 
 @pytest.fixture
@@ -41,3 +43,63 @@ def test_block_none_uses_tuned_block_and_stays_correct(tuner_cache, rng):
     got = quant_matmul.quant_matmul_acc(x, w)    # block=None -> tuned
     want = np.asarray(x, np.int64) @ np.asarray(w, np.int64)
     np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+# ---------------------------------------------------------------------------
+# SWAR kernel coverage (2-D blocks)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,dims", [
+    ("simd_add", (8, 128)),
+    ("mul4", (32, 128)),
+    ("mul4_split", (32, 128)),
+    ("muladd2", (2, 32, 128)),
+])
+def test_swar_tune_persists_and_reloads(tuner_cache, kind, dims):
+    blk = autotune.tune(kind, *dims, candidates=((64, 128),), iters=1)
+    assert blk == (64, 128)
+    assert autotune.lookup(kind, *dims) == blk
+    autotune._cache = None                       # force re-read from disk
+    assert autotune.resolve(kind, *dims) == blk
+
+
+def test_swar_disabled_resolve_is_2d_default(tuner_cache, monkeypatch):
+    monkeypatch.setattr(autotune, "_enabled", False)
+    for kind in ("simd_add", "mul4", "muladd2"):
+        assert autotune.resolve(kind, 8, 128) == autotune.DEFAULT_BLOCK_2D
+
+
+def test_simd_add_block_none_stays_correct(tuner_cache, rng):
+    autotune.tune("simd_add", 8, 128, candidates=((64, 128),), iters=1)
+    x = jnp.asarray(rng.integers(0, 1 << 32, (8, 128), dtype=np.uint32))
+    y = jnp.asarray(rng.integers(0, 1 << 32, (8, 128), dtype=np.uint32))
+    got = simd_add.simd_add_packed(x, y)         # block=None -> tuned
+    lanes = zip(common.unpack_lanes(x, 8), common.unpack_lanes(y, 8))
+    want = common.pack_lanes([a + b for a, b in lanes], 8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_muladd2_block_none_stays_correct(tuner_cache, rng):
+    autotune.tune("muladd2", 2, 32, 128, candidates=((64, 128),), iters=1)
+    a = jnp.asarray(rng.integers(-8, 8, (2, 32, 128)), jnp.int8)
+    b = jnp.asarray(rng.integers(-8, 8, (2, 32, 128)), jnp.int8)
+    c = jnp.asarray(rng.integers(-128, 128, (2, 32, 128)), jnp.int8)
+    pa, pb = muladd2.muladd2(a, b, c)            # block=None -> tuned
+    ra, rb = ref.muladd2_ref(list(a), list(b), list(c))
+    np.testing.assert_array_equal(np.asarray(pa), np.asarray(ra))
+    np.testing.assert_array_equal(np.asarray(pb), np.asarray(rb))
+
+
+def test_mul4_block_none_stays_correct(tuner_cache, rng):
+    # full32 and split tune as SEPARATE kinds (different cost profiles)
+    autotune.tune("mul4", 32, 128, candidates=((64, 128),), iters=1)
+    autotune.tune("mul4_split", 32, 128, candidates=((128, 256),), iters=1)
+    assert autotune.lookup("mul4", 32, 128) == (64, 128)
+    assert autotune.lookup("mul4_split", 32, 128) == (128, 256)
+    a = jnp.asarray(rng.integers(-8, 8, (4, 32, 128)), jnp.int8)
+    b = jnp.asarray(rng.integers(-8, 8, (32, 128)), jnp.int8)
+    want = ref.mul4_ref(list(a), b)
+    for got in (mul4.mul4_full32(a, b),          # block=None -> tuned
+                mul4.mul4_split(a, b)):
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
