@@ -8,12 +8,18 @@ and pays one compiled graph per distinct batch shape.  The gap between the
 two is the serving analogue of the DSP under-utilization the paper's passes
 reclaim.
 
-Emits one machine-readable line:  BENCH {json}  with aggregate tok/s,
-p50/p99 per-request latency, mean slot occupancy, and compiled-graph
+`--family {dense,ssm,hybrid}` picks the model family served through the
+SAME engine (the slot-state registry, models/slot_state.py); ssm/hybrid
+rows demonstrate the family-agnostic slot layer (ssm: constant-size pages,
+batch-bucket-only graph growth).
+
+Emits one machine-readable line:  BENCH {json}  with the family, aggregate
+tok/s, p50/p99 per-request latency, mean slot occupancy, and compiled-graph
 counts (the engine's is bounded by its bucket sets).
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
-        [--silvia {off,add,muladd,all}] [--n-requests N] [--rate R]
+        [--family {dense,ssm,hybrid}] [--silvia {off,add,muladd,all}]
+        [--n-requests N] [--rate R]
 """
 from __future__ import annotations
 
@@ -70,6 +76,8 @@ def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
     out["graphs"] = info["graphs"]
     out["graph_bound"] = info["graph_bound"]
     out["graph_keys"] = [" ".join(map(str, k)) for k in info["graph_keys"]]
+    out["has_length_axis"] = info["has_length_axis"]
+    out["compactions"] = info["compactions"]
     if "silvia" in info:
         out["silvia_trace"] = {k: info["silvia"][k]
                                for k in ("trace_hits", "trace_misses")}
@@ -117,9 +125,15 @@ def run_static(params, cfg, requests, *, n_slots, silvia_passes,
     return out
 
 
+FAMILY_ARCHS = {"dense": "smollm-135m", "ssm": "mamba2-2.7b",
+                "hybrid": "jamba-v0.1-52b"}
+
+
 def run(smoke: bool = False, silvia_passes: str = "off",
-        n_requests: int | None = None, rate: float | None = None) -> dict:
-    cfg = configs.get_reduced_config("smollm-135m")
+        n_requests: int | None = None, rate: float | None = None,
+        family: str = "dense") -> dict:
+    arch = FAMILY_ARCHS[family]
+    cfg = configs.get_reduced_config(arch)
     if smoke:
         n_req = n_requests or 8
         rate = rate or 50.0
@@ -140,7 +154,8 @@ def run(smoke: bool = False, silvia_passes: str = "off",
             prompt_lens=prompt_lens, gen_lens=gen_lens, vocab=cfg.vocab)
 
     result = {
-        "config": {"arch": "smollm-135m(reduced)", "n_requests": n_req,
+        "config": {"arch": f"{arch}(reduced)", "family": family,
+                   "n_requests": n_req,
                    "rate_req_s": rate, "n_slots": n_slots,
                    "segment_len": seg, "max_cache_len": max_len,
                    "prompt_lens": list(prompt_lens),
@@ -165,6 +180,10 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny model/traffic (CI)")
+    ap.add_argument("--family", default="dense",
+                    choices=sorted(FAMILY_ARCHS),
+                    help="model family served through the engine's "
+                         "slot-state registry")
     ap.add_argument("--silvia", default="off",
                     choices=list(serve.SILVIA_PASS_SETS))
     ap.add_argument("--n-requests", type=int, default=None)
@@ -172,7 +191,8 @@ def main():
                     help="Poisson arrival rate (req/s)")
     args = ap.parse_args()
     result = run(smoke=args.smoke, silvia_passes=args.silvia,
-                 n_requests=args.n_requests, rate=args.rate)
+                 n_requests=args.n_requests, rate=args.rate,
+                 family=args.family)
     print(json.dumps(result, indent=2))
     print("BENCH " + json.dumps(result))
 

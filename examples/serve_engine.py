@@ -2,7 +2,13 @@
 through bucketed, segmented fused decode (launch/engine.py), printing
 per-request latency and the compiled-graph census.
 
+Any registered slot-state family serves through the same engine
+(models/slot_state.py): pass --arch mamba2-2.7b (pure SSM --
+constant-size pages, no length bucketing) or --arch jamba-v0.1-52b
+(hybrid mamba+attention+MoE pages).
+
     PYTHONPATH=src python examples/serve_engine.py
+    PYTHONPATH=src python examples/serve_engine.py --arch mamba2-2.7b
     PYTHONPATH=src python examples/serve_engine.py --silvia all --chunked
 """
 import argparse
@@ -44,10 +50,13 @@ def main():
               f"gen {r.max_new_tokens:3d}  latency {r.latency():6.3f}s  "
               f"tokens {out[r.rid][:6].tolist()}...")
     info = eng.cache_info()
-    print(f"\ncompiled graphs: {info['graphs']} "
+    print(f"\nfamily {info['family']} "
+          f"(length axis: {info['has_length_axis']}); "
+          f"compiled graphs: {info['graphs']} "
           f"(bound {info['graph_bound']}); "
           f"batch buckets {info['batch_buckets']}, "
-          f"len buckets {info['len_buckets']}")
+          f"len buckets {info['len_buckets']}; "
+          f"compactions {info['compactions']}")
 
 
 if __name__ == "__main__":

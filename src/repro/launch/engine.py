@@ -7,33 +7,49 @@ all slots); between segments the scheduler admits queued requests into free
 slots and evicts finished ones, so ONE compiled graph serves an
 ever-changing request mix:
 
-* **bucketed shape cache** -- segment batch size and attended cache length
-  are rounded up to power-of-two buckets (launch/scheduler.py), so the
-  SILVIA trace cache and `jax.jit` compile a handful of graphs, bounded by
-  the bucket-set product (`cache_info()["graphs"]`); `warmup()` pre-compiles
-  the whole grid at startup.
-* **slot-based paged KV cache** -- the KV buffers carry a leading slot
-  dimension ([layers, n_slots, max_cache_len, ...]); each slot is a page
-  with its own position and active flag, threaded through
-  `lm.decode_step`/`attn_decode` so inactive slots neither mutate their
-  page nor contribute sampled tokens.  Pages are reused WITHOUT scrubbing:
-  the per-row causal mask (`t <= pos`) makes stale positions exact-zero
-  softmax terms, so reuse is bit-safe.
+* **family-agnostic slot state** -- the engine never touches a concrete
+  cache layout.  Each model family (dense/vlm/moe KV pages, pure-SSM
+  recurrent state, jamba-style hybrid mixes, whisper encdec self+cross
+  caches) registers its state builder in `models/slot_state.py`; the
+  engine slices, scatters and compacts through the probed
+  `SlotStateSpec`, exactly as SILVIA's one packing transformation covers
+  add2/mul4/muladd2 behind one DSP-slot interface.
+* **bucketed shape cache** -- segment batch size and (for families with a
+  sliceable cache-length axis) attended cache length are rounded up to
+  power-of-two buckets (launch/scheduler.py), so the SILVIA trace cache
+  and `jax.jit` compile a handful of graphs, bounded by the bucket-set
+  product (`cache_info()["graphs"]`); `warmup()` pre-compiles the grid.
+  Constant-size-state families (SSM) skip length bucketing entirely:
+  their graph census grows with batch buckets only.
+* **slot-based paged state** -- state buffers carry a slot axis; each slot
+  is a page with its own position and active flag, threaded through
+  `lm.decode_step` so inactive slots neither mutate their page nor
+  contribute sampled tokens.  KV pages are reused WITHOUT scrubbing (the
+  causal mask zeroes stale positions exactly); constant-size pages (SSM
+  state) are reset-on-admit, because admission overwrites them whole.
 * **chunked prefill** -- with `prefill_chunk=C`, prompts are fed through the
   same decode path C tokens at a time (same bucket shapes, same compiled
-  family), so prefill work can interleave between decode segments instead
-  of monopolizing a dispatch.
+  family).  KV-cache families only: sequential-state families would change
+  the floating-point reduction order (see slot_state.FamilyState).
+* **stop tokens** -- a request carrying `stop_tokens` is harvested the
+  segment it emits one (the stop token ends the output), instead of
+  always running to max_new_tokens.
+* **slot compaction** -- when evictions leave holes that inflate the live
+  batch bucket, surviving slots are remapped downward on admission
+  (`permute_slots`), shrinking the next segment's compiled shape.
 * decode bundles live in launch/serve.py's LRU decode cache, keyed
   (cfg, pass set, "engine"); greedy outputs are token-identical to the
   static `serve.generate()` path, including with SILVIA passes on
-  (tests/test_engine.py asserts bitwise equality).
+  (tests/test_engine.py, tests/test_slot_state.py assert bitwise equality
+  for dense, ssm, hybrid, and encdec families).
 
-Slot arithmetic invariants (why masking is exact, not approximate): a slot
-row only ever attends cache positions `<= pos`, every position `<= pos` was
-written by the CURRENT request (prefill wrote 0..prompt_len-1, decode writes
-sequentially at pos before attending it), and masked score entries become
-exact float zeros after softmax -- so neither stale pages, batch padding,
-nor length padding can perturb an active row by even one ULP.
+Exactness invariants (why masking is exact, not approximate): an attention
+row only attends cache positions `<= pos`, every such position was written
+by the CURRENT request, and masked score entries become exact float zeros
+after softmax.  SSM/conv state is constant-size and masked wholesale
+(`jnp.where` on the full page), and serving-mode MoE routes per token
+(mlp.moe per_token), so neither stale pages, batch padding, length padding,
+nor batch COMPOSITION can perturb an active row by even one ULP.
 """
 from __future__ import annotations
 
@@ -49,8 +65,7 @@ from repro import core as silvia
 from repro.launch import scheduler
 from repro.launch import serve
 from repro.models import lm
-
-_CACHE_FAMILIES = ("dense", "vlm", "moe")
+from repro.models import slot_state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,8 +81,8 @@ class _EngineBundle:
 def _build_bundle(cfg, silvia_passes: str) -> _EngineBundle:
     passes = serve.SILVIA_PASS_SETS[silvia_passes]
 
-    def decode_fn(p, tok, kv, pos, active):
-        return lm.decode_step(p, tok, kv, pos, cfg, active=active)
+    def decode_fn(p, tok, state, pos, active):
+        return lm.decode_step(p, tok, state, pos, cfg, active=active)
 
     if passes:
         decode_fn = silvia.optimize(decode_fn, passes)
@@ -75,8 +90,8 @@ def _build_bundle(cfg, silvia_passes: str) -> _EngineBundle:
     @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(2,))
     def segment(params, tok, cache, pos, active, n_steps):
         def step(carry, _):
-            tok, kv, pos = carry
-            logits, kv = decode_fn(params, tok, kv, pos, active)
+            tok, st, pos = carry
+            logits, st = decode_fn(params, tok, st, pos, active)
             nxt = jnp.argmax(logits[:, -1, :], axis=-1)
             nxt = nxt.astype(jnp.int32)[:, None]
             nxt = jnp.where(active[:, None], nxt, 0)
@@ -86,7 +101,7 @@ def _build_bundle(cfg, silvia_passes: str) -> _EngineBundle:
             # mid-segment only overruns into its own discarded row (XLA
             # clamps the slice start) before eviction at harvest
             pos = jnp.where(active, pos + 1, pos)
-            return (nxt, kv, pos), nxt
+            return (nxt, st, pos), nxt
 
         (tok, cache, pos), seq = jax.lax.scan(step, (tok, cache, pos),
                                               None, length=n_steps)
@@ -96,6 +111,7 @@ def _build_bundle(cfg, silvia_passes: str) -> _EngineBundle:
 
     @functools.partial(jax.jit, static_argnums=(3,))
     def prefill(params, prompts, last_positions, cache_len):
+        # prompts: [B,S] tokens, or (features, [B,S]) for encdec
         logits, cache = lm.prefill(params, prompts, cfg, cache_len=cache_len,
                                    last_positions=last_positions)
         tok0 = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
@@ -115,9 +131,11 @@ class ServeEngine:
 
     Parameters
     ----------
-    n_slots:        KV pages / maximum in-flight requests.
+    n_slots:        state pages / maximum in-flight requests.
     max_cache_len:  page length; every request needs
-                    prompt_len + max_new_tokens <= max_cache_len.
+                    prompt_len + max_new_tokens <= max_cache_len.  For
+                    families without a cache-length axis (SSM) it only
+                    bounds request sizes and prompt buckets.
     segment_len:    decode steps per dispatch.  Longer segments amortize
                     dispatch overhead; shorter ones admit/evict sooner --
                     the classic continuous-batching latency/throughput dial.
@@ -125,7 +143,10 @@ class ServeEngine:
                     | "all").
     prefill_chunk:  if set (power of two), prompts are prefilled through
                     the chunked decode path this many tokens per dispatch;
-                    None uses one bucketed full-prefill dispatch.
+                    None uses one bucketed full-prefill dispatch.  Only
+                    for families whose slot state is prefill-chunkable.
+    enc_len:        encdec families only: the fixed encoder length; every
+                    request must carry `features` of [enc_len, d_model].
     min_len_bucket / min_batch_bucket: smallest cache-length / batch
                     buckets (both clamped up to the physical maxima).
     """
@@ -134,14 +155,24 @@ class ServeEngine:
                  max_cache_len: int = 256, segment_len: int = 16,
                  silvia_passes: str = "off",
                  prefill_chunk: Optional[int] = None,
+                 enc_len: Optional[int] = None,
                  min_len_bucket: int = 32, min_batch_bucket: int = 1):
-        if cfg.family not in _CACHE_FAMILIES:
-            raise ValueError(
-                f"ServeEngine needs a KV-cache family {_CACHE_FAMILIES}, "
-                f"got {cfg.family!r} (SSM/hybrid state is not sliceable "
-                "along a cache-length axis)")
+        if cfg.family == "encdec" and enc_len is None:
+            raise ValueError("encdec serving needs enc_len (the fixed "
+                             "encoder length of every request's features)")
+        if cfg.family != "encdec" and enc_len is not None:
+            raise ValueError(f"enc_len is encdec-only, got family "
+                             f"{cfg.family!r}")
+        init_kwargs = {"s_enc": enc_len} if enc_len is not None else {}
+        # raises with registry guidance for unregistered families
+        self._spec = slot_state.spec_for(cfg, **init_kwargs)
         if segment_len < 1:
             raise ValueError("segment_len must be >= 1")
+        if prefill_chunk is not None and not self._spec.prefill_chunkable:
+            raise ValueError(
+                f"family {cfg.family!r} slot state is not prefill-chunkable "
+                "(models/slot_state.py): use full prefill (prefill_chunk="
+                "None)")
         if prefill_chunk is not None and prefill_chunk & (prefill_chunk - 1):
             raise ValueError("prefill_chunk must be a power of two")
         if prefill_chunk is not None and max_cache_len % prefill_chunk:
@@ -156,6 +187,7 @@ class ServeEngine:
         self.segment_len = segment_len
         self.silvia_passes = silvia_passes
         self.prefill_chunk = prefill_chunk
+        self.enc_len = enc_len
         self.min_len_bucket = min(min_len_bucket, max_cache_len)
         self.min_batch_bucket = min(min_batch_bucket, n_slots)
         # smallest prompt bucket: chunked prefill needs chunk-aligned
@@ -164,11 +196,12 @@ class ServeEngine:
         self.batch_buckets = scheduler.bucket_set(self.min_batch_bucket,
                                                   n_slots)
         self.len_buckets = scheduler.bucket_set(self.min_len_bucket,
-                                                max_cache_len)
+                                                max_cache_len) \
+            if self._spec.has_length_axis else ()
 
         self._bundle = _engine_bundle(cfg, silvia_passes)
         self._queue = scheduler.RequestQueue()
-        self._cache = lm.init_cache(cfg, n_slots, max_cache_len)
+        self._cache = self._spec.init_state(n_slots, max_cache_len)
         self._tok = np.zeros((n_slots, 1), np.int32)
         self._pos = np.zeros((n_slots,), np.int32)
         self._active = np.zeros((n_slots,), bool)
@@ -176,6 +209,7 @@ class ServeEngine:
         self._remaining = np.zeros((n_slots,), np.int64)
         self.finished: List[scheduler.Request] = []
         self.total_generated = 0
+        self.compactions = 0
         self.occupancy: List[float] = []
         self._graphs: set = set()
 
@@ -186,6 +220,18 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.rid}: prompt+gen {req.total_len} exceeds "
                 f"max_cache_len {self.max_cache_len}")
+        if self.cfg.family == "encdec":
+            want = (self.enc_len, self.cfg.d_model)
+            if req.features is None or \
+                    np.asarray(req.features).shape != want:
+                got = None if req.features is None \
+                    else np.asarray(req.features).shape
+                raise ValueError(
+                    f"request {req.rid}: encdec serving needs features of "
+                    f"shape {want}, got {got}")
+        elif req.features is not None:
+            raise ValueError(f"request {req.rid}: features are encdec-only "
+                             f"(family {self.cfg.family!r})")
         self._queue.submit(req)
 
     def _finish(self, req: scheduler.Request, now: float) -> None:
@@ -200,9 +246,41 @@ class ServeEngine:
         self._pos[slot] = 0
         self._tok[slot] = 0
 
+    @staticmethod
+    def _stopped(req: scheduler.Request, tok: int) -> bool:
+        return bool(req.stop_tokens) and tok in req.stop_tokens
+
     # -- admission / prefill ------------------------------------------------
 
+    def _compact(self) -> bool:
+        """Remap surviving slots downward when eviction holes inflate the
+        live batch bucket (the permutation is exact: slot identity is pure
+        bookkeeping, every per-slot array moves together)."""
+        live = np.nonzero(self._active)[0]
+        if live.size == 0 or int(live[-1]) == live.size - 1:
+            return False          # already a dense prefix
+        cur = scheduler.bucket_pow2(int(live[-1]) + 1,
+                                    minimum=self.min_batch_bucket,
+                                    maximum=self.n_slots)
+        tgt = scheduler.bucket_pow2(int(live.size),
+                                    minimum=self.min_batch_bucket,
+                                    maximum=self.n_slots)
+        if cur <= tgt:
+            return False          # hole doesn't change the bucket
+        holes = np.asarray([i for i in range(self.n_slots)
+                            if not self._active[i]], np.int64)
+        perm = np.concatenate([live, holes])
+        self._cache = self._spec.permute_slots(self._cache, perm)
+        self._tok = self._tok[perm]
+        self._pos = self._pos[perm]
+        self._active = self._active[perm]
+        self._remaining = self._remaining[perm]
+        self._slot_req = [self._slot_req[i] for i in perm]
+        self.compactions += 1
+        return True
+
     def _admit(self, now: float) -> int:
+        self._compact()
         free = [i for i in range(self.n_slots) if not self._active[i]]
         ready = self._queue.pop_ready(now, limit=len(free))
         if not ready:
@@ -219,36 +297,56 @@ class ServeEngine:
             self._admit_group(group, sb, free, now)
         return len(ready)
 
-    def _admit_group(self, group: List[scheduler.Request], sb: int,
-                     free: List[int], now: float) -> None:
-        g = len(group)
-        bb = scheduler.bucket_pow2(g, minimum=1, maximum=self.n_slots)
-        t_pre = scheduler.bucket_pow2(sb, minimum=self.min_len_bucket,
-                                      maximum=self.max_cache_len)
+    def _prefill_bucket(self, sb: int) -> int:
+        """static cache_len for a prefill dispatch.  Families without a
+        length axis get cache_len == sb (the arg is unused by their
+        blocks, and tying it to the prompt bucket keeps the compiled
+        prefill census at one graph per (batch bucket, prompt bucket))."""
+        if not self._spec.has_length_axis:
+            return sb
+        return scheduler.bucket_pow2(sb, minimum=self.min_len_bucket,
+                                     maximum=self.max_cache_len)
+
+    def _prefill_inputs(self, group: List[scheduler.Request], bb: int,
+                        sb: int):
         prompts = np.zeros((bb, sb), np.int32)
         lens = np.ones((bb,), np.int32)
         for i, r in enumerate(group):
             prompts[i, :r.prompt_len] = r.prompt
             lens[i] = r.prompt_len
+        if self.cfg.family != "encdec":
+            return jnp.asarray(prompts), lens
+        feats = np.zeros((bb, self.enc_len, self.cfg.d_model), np.float32)
+        for i, r in enumerate(group):
+            feats[i] = np.asarray(r.features, np.float32)
+        audio = jnp.asarray(feats).astype(jnp.dtype(self.cfg.dtype))
+        return (audio, jnp.asarray(prompts)), lens
+
+    def _admit_group(self, group: List[scheduler.Request], sb: int,
+                     free: List[int], now: float) -> None:
+        g = len(group)
+        bb = scheduler.bucket_pow2(g, minimum=1, maximum=self.n_slots)
+        t_pre = self._prefill_bucket(sb)
+        inputs, lens = self._prefill_inputs(group, bb, sb)
         if self.prefill_chunk is None:
             self._graphs.add(("prefill", bb, sb, t_pre))
-            tok0, rows = self._bundle.prefill(self.params,
-                                              jnp.asarray(prompts),
+            tok0, rows = self._bundle.prefill(self.params, inputs,
                                               jnp.asarray(lens - 1), t_pre)
         else:
-            tok0, rows = self._chunked_prefill(prompts, lens, t_pre)
+            tok0, rows = self._chunked_prefill(np.asarray(inputs), lens,
+                                               t_pre)
         tok0 = np.asarray(tok0)
         slots = np.asarray([free.pop(0) for _ in range(g)], np.int32)
-        # scatter the admitted pages into their slots
-        self._cache = jax.tree_util.tree_map(
-            lambda big, new: big.at[:, slots, :t_pre].set(new[:, :g]),
-            self._cache, rows)
+        # scatter the admitted pages into their slots; leaves without a
+        # length axis (SSM/conv state, cross-KV) are reset wholesale
+        self._cache = self._spec.admit(self._cache, rows, slots, g,
+                                       t_pre=t_pre)
         for i, r in enumerate(group):
             slot = int(slots[i])
             r.tokens = [int(tok0[i, 0])]
             r.first_token_time = now
             self.total_generated += 1
-            if r.max_new_tokens == 1:
+            if r.max_new_tokens == 1 or self._stopped(r, r.tokens[0]):
                 self._finish(r, now)
                 self._evict(slot)
                 free.append(slot)
@@ -269,7 +367,7 @@ class ServeEngine:
         bb, sb = prompts.shape
         c = min(self.prefill_chunk, sb)
         assert sb % c == 0, (sb, c)
-        cache = lm.init_cache(self.cfg, bb, t_pre)
+        cache = self._spec.init_state(bb, t_pre)
         active = jnp.ones((bb,), bool)
         # only each row's last-real-position logits are needed; harvest
         # them per chunk so one [bb, c, V] block is ever live
@@ -291,21 +389,31 @@ class ServeEngine:
 
     # -- decode segments ----------------------------------------------------
 
-    def _segment(self) -> np.ndarray:
-        """Run one fused decode segment over the bucketed active prefix;
-        returns the [n_steps, bb] token block."""
+    def _segment_shape(self):
+        """(bb, t_b) for the next segment; t_b is None for constant-size
+        state (no length bucketing -- batch-bucket-only graph growth)."""
         hi = int(np.max(np.nonzero(self._active)[0])) + 1
         bb = scheduler.bucket_pow2(hi, minimum=self.min_batch_bucket,
                                    maximum=self.n_slots)
-        n_steps = self.segment_len
-        need = int(np.max(self._pos[:bb][self._active[:bb]])) + n_steps
+        if not self._spec.has_length_axis:
+            return bb, None
+        need = int(np.max(self._pos[:bb][self._active[:bb]])) \
+            + self.segment_len
         t_b = scheduler.bucket_pow2(min(need, self.max_cache_len),
                                     minimum=self.min_len_bucket,
                                     maximum=self.max_cache_len)
+        return bb, t_b
+
+    def _segment(self) -> np.ndarray:
+        """Run one fused decode segment over the bucketed active prefix;
+        returns the [n_steps, bb] token block."""
+        bb, t_b = self._segment_shape()
+        n_steps = self.segment_len
         self._graphs.add(("segment", bb, t_b, n_steps))
-        fast = bb == self.n_slots and t_b == self.max_cache_len
-        cache_in = self._cache if fast else jax.tree_util.tree_map(
-            lambda t: t[:, :bb, :t_b], self._cache)
+        fast = bb == self.n_slots and (t_b is None
+                                       or t_b == self.max_cache_len)
+        cache_in = self._cache if fast else \
+            self._spec.slice_live(self._cache, bb, t_b)
         seq, tok, cache_out, pos = self._bundle.segment(
             self.params, jnp.asarray(self._tok[:bb]), cache_in,
             jnp.asarray(self._pos[:bb]), jnp.asarray(self._active[:bb]),
@@ -313,9 +421,8 @@ class ServeEngine:
         if fast:
             self._cache = cache_out
         else:
-            self._cache = jax.tree_util.tree_map(
-                lambda big, s: big.at[:, :bb, :t_b].set(s),
-                self._cache, cache_out)
+            self._cache = self._spec.merge_live(self._cache, cache_out,
+                                                bb, t_b)
         self._tok[:bb] = np.asarray(tok)
         self._pos[:bb] = np.asarray(pos)
         self.occupancy.append(float(np.sum(self._active)) / self.n_slots)
@@ -328,10 +435,17 @@ class ServeEngine:
             if req is None:
                 continue
             take = int(min(self._remaining[slot], n_steps))
-            req.tokens.extend(int(t) for t in seq[:take, slot])
-            self.total_generated += take
-            self._remaining[slot] -= take
-            if self._remaining[slot] == 0:
+            toks = seq[:take, slot]
+            done = False
+            if req.stop_tokens:
+                hits = np.nonzero(np.isin(toks, req.stop_tokens))[0]
+                if hits.size:
+                    toks = toks[:int(hits[0]) + 1]   # stop token included
+                    done = True
+            req.tokens.extend(int(t) for t in toks)
+            self.total_generated += len(toks)
+            self._remaining[slot] -= len(toks)
+            if done or self._remaining[slot] == 0:
                 self._finish(req, now)
                 self._evict(slot)
 
@@ -379,11 +493,20 @@ class ServeEngine:
 
     def graph_bound(self) -> int:
         """Upper bound on distinct compiled graphs: the segment bucket grid
-        plus one prefill (or chunk) graph per (admission batch bucket,
-        prompt bucket) -- what `warmup()` walks."""
-        seg = len(self.batch_buckets) * len(self.len_buckets)
+        (batch buckets only for constant-size state) plus one prefill (or
+        chunk) graph per (admission batch bucket, prompt bucket) -- what
+        `warmup()` walks."""
+        seg = len(self.batch_buckets) * max(1, len(self.len_buckets))
         pre = len(self.admission_batch_buckets) * len(self.prompt_buckets)
         return seg + pre
+
+    def _warmup_prefill_inputs(self, bb: int, sb: int):
+        prompts = jnp.zeros((bb, sb), jnp.int32)
+        if self.cfg.family != "encdec":
+            return prompts
+        audio = jnp.zeros((bb, self.enc_len, self.cfg.d_model),
+                          jnp.dtype(self.cfg.dtype))
+        return (audio, prompts)
 
     def warmup(self, prompt_lens: Optional[Sequence[int]] = None) -> int:
         """Pre-compile the (batch bucket x length bucket) segment grid on
@@ -392,11 +515,11 @@ class ServeEngine:
         graphs compiled."""
         n = 0
         for bb in self.batch_buckets:
-            for t_b in self.len_buckets:
+            for t_b in (self.len_buckets or (None,)):
                 key = ("segment", bb, t_b, self.segment_len)
                 if key in self._graphs:
                     continue
-                cache = lm.init_cache(self.cfg, bb, t_b)
+                cache = self._spec.init_state(bb, t_b or self.max_cache_len)
                 out = self._bundle.segment(
                     self.params, jnp.zeros((bb, 1), jnp.int32), cache,
                     jnp.zeros((bb,), jnp.int32), jnp.zeros((bb,), bool),
@@ -412,22 +535,21 @@ class ServeEngine:
                       for pl in prompt_lens})
         for bb in self.admission_batch_buckets:
             for sb in sbs:
-                t_pre = scheduler.bucket_pow2(sb, minimum=self.min_len_bucket,
-                                              maximum=self.max_cache_len)
-                prompts = np.zeros((bb, sb), np.int32)
-                lens = np.ones((bb,), np.int32)
+                t_pre = self._prefill_bucket(sb)
+                lens = jnp.ones((bb,), jnp.int32)
                 if self.prefill_chunk is None:
                     key = ("prefill", bb, sb, t_pre)
                     if key in self._graphs:
                         continue
-                    out = self._bundle.prefill(self.params,
-                                               jnp.asarray(prompts),
-                                               jnp.asarray(lens - 1), t_pre)
+                    out = self._bundle.prefill(
+                        self.params, self._warmup_prefill_inputs(bb, sb),
+                        lens - 1, t_pre)
                 else:
                     key = ("chunk", bb, min(self.prefill_chunk, sb), t_pre)
                     if key in self._graphs:
                         continue
-                    out = self._chunked_prefill(prompts, lens, t_pre)
+                    out = self._chunked_prefill(np.zeros((bb, sb), np.int32),
+                                                np.asarray(lens), t_pre)
                 jax.block_until_ready(out[0])
                 self._graphs.add(key)
                 n += 1
@@ -438,11 +560,15 @@ class ServeEngine:
         sets), the serve-module decode-bundle LRU, and -- with SILVIA
         passes on -- the pass pipeline's own trace-cache counters."""
         info = {
+            "family": self.cfg.family,
+            "has_length_axis": self._spec.has_length_axis,
             "graphs": len(self._graphs),
             "graph_bound": self.graph_bound(),
-            "graph_keys": sorted(self._graphs),
+            "graph_keys": sorted(self._graphs,
+                                 key=lambda k: tuple(str(x) for x in k)),
             "batch_buckets": list(self.batch_buckets),
             "len_buckets": list(self.len_buckets),
+            "compactions": self.compactions,
             "decode_bundle_lru": serve.decode_cache_info(),
         }
         if hasattr(self._bundle.decode_fn, "cache_info"):

@@ -63,12 +63,17 @@ def bucket_set(minimum: int, maximum: int) -> tuple:
 @dataclasses.dataclass
 class Request:
     """One generation request.  `prompt` is a 1-D int token array; the
-    engine generates exactly `max_new_tokens` greedy tokens (the synthetic
-    workload has no EOS; a real tokenizer would also stop early)."""
+    engine generates up to `max_new_tokens` greedy tokens, stopping the
+    segment a token in `stop_tokens` is emitted (the stop token is the
+    last token of the output).  `features` carries per-request modality
+    inputs for encoder-decoder families (whisper: [enc_len, d_model]
+    precomputed frame embeddings)."""
     rid: int
     prompt: np.ndarray
     max_new_tokens: int
     arrival_time: float = 0.0
+    stop_tokens: Optional[Sequence[int]] = None
+    features: Optional[np.ndarray] = None
     # filled in by the engine:
     tokens: List[int] = dataclasses.field(default_factory=list)
     first_token_time: Optional[float] = None
@@ -80,6 +85,8 @@ class Request:
             raise ValueError(f"request {self.rid}: empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+        if self.stop_tokens is not None:
+            self.stop_tokens = tuple(int(t) for t in self.stop_tokens)
 
     @property
     def prompt_len(self) -> int:

@@ -26,7 +26,10 @@ The serving path is where the paper's technique lives end to end:
 
 For ragged multi-request traffic, use the continuous-batching engine
 instead of calling `generate()` per batch (see launch/engine.py and
-examples/serve_engine.py)::
+examples/serve_engine.py).  The engine serves every family registered in
+models/slot_state.py -- dense/vlm/moe KV pages, pure-SSM and hybrid
+state, and (with `enc_len` + per-request `features`) encdec -- through
+the same bucketed segment loop::
 
     from repro.launch.engine import ServeEngine
     from repro.launch.scheduler import Request
@@ -165,9 +168,11 @@ def generate(params, prompts, cfg, *, gen: int, cache_len: int,
              silvia_passes="off", fused: bool = True):
     """Greedy generation: prefill + gen decode steps.
 
+    prompts: [B,S] int tokens; encdec families take a tuple
+    (features [B,S_enc,d_model], dec_tokens [B,S]) instead.
     fused=True runs the whole decode phase as one `jax.lax.scan` dispatch
-    (KV cache donated); fused=False is the per-step reference loop."""
-    b, s = prompts.shape
+    (state cache donated); fused=False is the per-step reference loop."""
+    b, s = (prompts[1] if cfg.family == "encdec" else prompts).shape
     logits, cache = lm.prefill(params, prompts, cfg, cache_len=cache_len)
     _, decode_jit, fused_loop = _decode_bundle(cfg, silvia_passes)
 

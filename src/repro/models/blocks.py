@@ -44,7 +44,7 @@ def init_dense_block(rng, cfg: ModelConfig):
 
 
 def dense_block(p, x, cfg, *, mode="train", cache=None, pos=None,
-                positions=None, cache_len=None, active=None):
+                positions=None, cache_len=None, active=None, lengths=None):
     h = _norm(cfg, x, p["ln1"])
     if mode == "decode":
         a, new_cache = attn.attn_decode(p["attn"], h, cache, pos, cfg,
@@ -73,7 +73,7 @@ def init_moe_block(rng, cfg: ModelConfig):
 
 
 def moe_block(p, x, cfg, *, mode="train", cache=None, pos=None,
-              positions=None, cache_len=None, active=None):
+              positions=None, cache_len=None, active=None, lengths=None):
     h = _norm(cfg, x, p["ln1"])
     if mode == "decode":
         a, new_cache = attn.attn_decode(p["attn"], h, cache, pos, cfg,
@@ -85,7 +85,9 @@ def moe_block(p, x, cfg, *, mode="train", cache=None, pos=None,
         a, new_cache = attn.attn_full(p["attn"], h, cfg, positions), None
     x = x + a
     h2 = _norm(cfg, x, p["ln2"])
-    y, aux = mlp.moe(p["moe"], h2, cfg)
+    # serving (prefill/decode) routes per token -- dropless, so a row's
+    # tokens are independent of batch mates / padding (see mlp.moe)
+    y, aux = mlp.moe(p["moe"], h2, cfg, per_token=mode != "train")
     if "dense" in p:                      # arctic: parallel dense residual
         y = y + mlp.mlp(p["dense"], h2, cfg)
     return x + y, new_cache, aux
@@ -100,12 +102,13 @@ def init_ssm_block(rng, cfg: ModelConfig):
 
 
 def ssm_block(p, x, cfg, *, mode="train", cache=None, pos=None,
-              positions=None, cache_len=None, active=None):
+              positions=None, cache_len=None, active=None, lengths=None):
     h = _norm(cfg, x, p["ln"])
     if mode == "decode":
-        y, new_cache = ssm.ssd_decode(p["ssm"], h, cache, cfg)
+        y, new_cache = ssm.ssd_decode(p["ssm"], h, cache, cfg, active=active)
     elif mode == "prefill":
-        y, new_cache = ssm.ssd_forward(p["ssm"], h, cfg, return_state=True)
+        y, new_cache = ssm.ssd_forward(p["ssm"], h, cfg, return_state=True,
+                                       lengths=lengths)
     else:
         y, new_cache = ssm.ssd_forward(p["ssm"], h, cfg), None
     return x + y, new_cache, jnp.float32(0.0)
@@ -147,7 +150,7 @@ def _tree_idx(tree, i):
 
 
 def hybrid_block(p, x, cfg, *, mode="train", cache=None, pos=None,
-                 positions=None, cache_len=None, active=None):
+                 positions=None, cache_len=None, active=None, lengths=None):
     """One jamba super-block: period layers, each = mixer + FFN residual."""
     hp, m = cfg.hybrid, cfg.moe
     aux_total = jnp.float32(0.0)
@@ -171,9 +174,11 @@ def hybrid_block(p, x, cfg, *, mode="train", cache=None, pos=None,
             ln = _tree_idx(p["mamba_ln"], i_mamba)
             h = _norm(cfg, x, ln)
             if mode == "decode":
-                y, c = ssm.ssd_decode(mp, h, _tree_idx(cache["mamba"], i_mamba), cfg)
+                y, c = ssm.ssd_decode(mp, h, _tree_idx(cache["mamba"], i_mamba),
+                                      cfg, active=active)
             elif mode == "prefill":
-                y, c = ssm.ssd_forward(mp, h, cfg, return_state=True)
+                y, c = ssm.ssd_forward(mp, h, cfg, return_state=True,
+                                       lengths=lengths)
             else:
                 y, c = ssm.ssd_forward(mp, h, cfg), None
             x = x + y
@@ -182,7 +187,8 @@ def hybrid_block(p, x, cfg, *, mode="train", cache=None, pos=None,
         ln = _tree_idx(p["ffn_ln"], i)
         h2 = _norm(cfg, x, ln)
         if i % m.interleave == m.interleave - 1:
-            y, aux = mlp.moe(_tree_idx(p["moe"], i_moe), h2, cfg)
+            y, aux = mlp.moe(_tree_idx(p["moe"], i_moe), h2, cfg,
+                             per_token=mode != "train")
             aux_total = aux_total + aux
             i_moe += 1
         else:
@@ -223,11 +229,16 @@ def init_dec_block(rng, cfg: ModelConfig):
 
 
 def dec_block(p, x, cfg, *, memory=None, mode="train", cache=None,
-              pos=None, cache_len=None):
-    """cache = {self: kv-cache, cross: precomputed {k, v}} (decode)."""
+              pos=None, cache_len=None, active=None):
+    """cache = {self: kv-cache, cross: precomputed {k, v}} (decode).
+
+    active: [B] bool slot mask for decode -- the self-attn KV write is
+    masked; the cross KV is read-only during decode, so inactive slots
+    carry it through bit-identically for free."""
     h = _norm(cfg, x, p["ln1"])
     if mode == "decode":
-        a, self_c = attn.attn_decode(p["self"], h, cache["self"], pos, cfg)
+        a, self_c = attn.attn_decode(p["self"], h, cache["self"], pos, cfg,
+                                     active=active)
         cross_kv = cache["cross"]
     elif mode == "prefill":
         a, self_c = attn.attn_full(p["self"], h, cfg, return_cache=True,

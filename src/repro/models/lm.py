@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn_mod
-from repro.models import blocks, common, ssm
+from repro.models import blocks, common, slot_state, ssm
 from repro.models.config import ModelConfig
 from repro.quant.qtensor import qmatmul
 
@@ -161,7 +161,8 @@ def prefill(params, inputs, cfg: ModelConfig, cache_len: int,
     prompt token (for right-padded ragged batches; the serve engine pads
     prompts up to a shape bucket).  Default: the final column."""
     if cfg.family == "encdec":
-        return encdec_prefill(params, inputs, cfg, cache_len)
+        return encdec_prefill(params, inputs, cfg, cache_len,
+                              last_positions=last_positions)
     x = _embed(params, inputs, cfg)
     if cfg.learned_pos:
         x = x + params["pos_embed"][None, :x.shape[1], :]
@@ -169,10 +170,20 @@ def prefill(params, inputs, cfg: ModelConfig, cache_len: int,
         b, s = x.shape[:2]
         positions = jnp.broadcast_to(jnp.arange(s)[None, None, :], (3, b, s))
     _, block_fn = BLOCK_FNS[cfg.family]
+    # per-row real lengths: attention masks right-padding causally, but
+    # SSM state is sequential -- padded steps must become identity
+    # updates.  Always materialized so every prefill (static generate()
+    # and the engine's padded prompt buckets alike) runs ssd_forward on
+    # the same FIXED chunk grid -- the bit-exactness precondition
+    if last_positions is None:
+        lengths = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    else:
+        lengths = last_positions + 1
 
     def body(h, layer_params):
         h2, cache, _ = block_fn(layer_params, h, cfg, mode="prefill",
-                                positions=positions, cache_len=cache_len)
+                                positions=positions, cache_len=cache_len,
+                                lengths=lengths)
         return h2, cache
 
     x, caches = jax.lax.scan(body, x, params["blocks"])
@@ -191,14 +202,14 @@ def decode_step(params, token_t, cache, pos, cfg: ModelConfig, active=None):
     contribute sampled tokens.  C=1 is the serving decode step; C>1 is a
     chunked-prefill step over the same cache layout.
 
-    Returns (logits [B,C,V], new_cache)."""
-    if active is not None and cfg.family not in ("dense", "vlm", "moe"):
-        # ssm/hybrid state and the encdec path have no masked update: the
-        # mask would be silently ignored and inactive rows corrupted
-        raise ValueError(f"active mask unsupported for family "
-                         f"{cfg.family!r}")
+    Returns (logits [B,C,V], new_cache).  Every family has a masked state
+    update (attention: masked KV insert; SSM: masked {ssm, conv} state;
+    encdec: masked self-KV, read-only cross-KV), so inactive slots are
+    bit-identical across the step for any registered family
+    (models/slot_state.py; property-tested in tests/test_slot_state.py)."""
     if cfg.family == "encdec":
-        return encdec_decode_step(params, token_t, cache, pos, cfg)
+        return encdec_decode_step(params, token_t, cache, pos, cfg,
+                                  active=active)
     x = _embed(params, token_t, cfg)
     if cfg.learned_pos:
         qpos = pos[:, None] + jnp.arange(x.shape[1], dtype=pos.dtype)
@@ -252,7 +263,8 @@ def encdec_forward(params, inputs, cfg: ModelConfig, *, remat: bool = True):
     return _lm_head(params, x, cfg), jnp.float32(0.0)
 
 
-def encdec_prefill(params, inputs, cfg: ModelConfig, cache_len: int):
+def encdec_prefill(params, inputs, cfg: ModelConfig, cache_len: int,
+                   last_positions=None):
     audio, dec_tokens = inputs
     memory = encode(params, audio, cfg)
     x = jnp.take(params["embed"], dec_tokens, axis=0)
@@ -265,10 +277,15 @@ def encdec_prefill(params, inputs, cfg: ModelConfig, cache_len: int):
 
     x, caches = jax.lax.scan(body, x, params["dec"])
     x = common.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
-    return _lm_head(params, x[:, -1:, :], cfg), caches
+    if last_positions is None:
+        x_last = x[:, -1:, :]
+    else:
+        x_last = x[jnp.arange(x.shape[0]), last_positions][:, None, :]
+    return _lm_head(params, x_last, cfg), caches
 
 
-def encdec_decode_step(params, token_t, cache, pos, cfg: ModelConfig):
+def encdec_decode_step(params, token_t, cache, pos, cfg: ModelConfig,
+                       active=None):
     x = jnp.take(params["embed"], token_t, axis=0)
     x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None, :]
 
@@ -276,9 +293,25 @@ def encdec_decode_step(params, token_t, cache, pos, cfg: ModelConfig):
         layer_params, layer_cache = xs
         h2, new_cache, _ = blocks.dec_block(layer_params, h, cfg, memory=None,
                                             mode="decode", cache=layer_cache,
-                                            pos=pos)
+                                            pos=pos, active=active)
         return h2, new_cache
 
     x, new_caches = jax.lax.scan(body, x, (params["dec"], cache))
     x = common.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
     return _lm_head(params, x, cfg), new_caches
+
+
+# ---------------------------------------------------------------------------
+# slot-state registry (models/slot_state.py)
+# ---------------------------------------------------------------------------
+# The serve engine builds, slices, scatters and compacts per-slot decode
+# state through these registrations; axis layout is probed from init_cache,
+# so a family only ever declares its builder.  Chunked prefill is limited
+# to pure-KV families: SSM/hybrid state updates are sequential and encdec
+# prefill must run the encoder, so pushing their prompts through the decode
+# path C tokens at a time would change the floating-point reduction order
+# (or skip the encoder) and lose bit-exactness against the static path.
+for _fam in ("dense", "vlm", "moe"):
+    slot_state.register(_fam, init_cache)
+for _fam in ("ssm", "hybrid", "encdec"):
+    slot_state.register(_fam, init_cache, prefill_chunkable=False)

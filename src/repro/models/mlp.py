@@ -102,9 +102,41 @@ def _dispatch_combine(xt, top_e, top_p, p, cfg, cap):
     return jnp.zeros((t, d), xt.dtype).at[stok].add(contrib)
 
 
-def moe(p, x, cfg: ModelConfig):
-    """x: [B, S, d] -> ([B, S, d], aux_loss scalar)."""
+def moe(p, x, cfg: ModelConfig, per_token: bool = False):
+    """x: [B, S, d] -> ([B, S, d], aux_loss scalar).
+
+    per_token=True (serving: prefill/decode) routes every token dropless
+    via a dense one-hot combine: all experts run on all tokens and each
+    token keeps its top-k, so a token's output depends only on that token.
+    Capacity-factor dropping is a training throughput device; batch-coupled
+    dropping would make generations depend on which other requests share
+    the batch, which breaks the serve engine's slot-packing exactness
+    (engine output must be bit-identical to a solo run of the same
+    request).  The E/k x compute overhead is the price of exactness at
+    smoke scale; a production path would gather the k expert slices per
+    token instead."""
     m: MoEConfig = cfg.moe
+    if per_token:
+        b, s, d = x.shape
+        t = b * s
+        xt = x.reshape(t, d)
+        logits = (xt.astype(jnp.float32) @ p["router"])      # [T, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, m.top_k)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], m.n_experts,
+                                     dtype=jnp.float32), axis=0)
+        aux = m.n_experts * jnp.sum(me * ce)
+        # gate[t, e] = routing weight iff e is one of t's top-k (distinct)
+        gate = jnp.zeros((t, m.n_experts), xt.dtype)
+        gate = gate.at[jnp.arange(t)[:, None], top_e].set(
+            top_p.astype(xt.dtype))
+        xe = jnp.broadcast_to(xt[None], (m.n_experts, t, d))
+        h = jax.nn.silu(_emm(xe, p["wg"])) * _emm(xe, p["wi"])
+        eout = _emm(h, p["wo"])                              # [E, T, d]
+        yt = jnp.einsum("etd,te->td", eout, gate)
+        return yt.reshape(b, s, d), aux
     if m.dispatch == "shard_map" and not isinstance(p["wi"], QTensor):
         from repro.distributed import context
         ctx = context.current()

@@ -1,0 +1,242 @@
+"""Family-agnostic slot-state layer for the continuous-batching engine.
+
+SILVIA's packing transformation covers heterogeneous op shapes (add2, mul4,
+muladd2) behind one uniform DSP-slot interface; this module is the
+request-level analogue: every model family's decode-time state -- KV pages,
+SSM recurrent state, conv windows, hybrid mixes, encoder-decoder
+self+cross caches -- is served through ONE abstract "slot state" interface,
+so the engine (launch/engine.py) never special-cases a family.
+
+A family registers an `init(cfg, n_slots, max_cache_len, **kw)` builder
+(see the registrations at the bottom of models/lm.py).  From that builder a
+`SlotStateSpec` is derived by **shape probing**: the builder is evaluated
+under `jax.eval_shape` at two slot counts and two cache lengths, and each
+pytree leaf's
+
+* **slot axis** -- the axis that scales with `n_slots` (exactly one per
+  leaf), and
+* **length axis** -- the axis that scales with `max_cache_len`
+  (`None` for constant-size pages: SSM state, conv windows, cross-KV)
+
+are read off the shape diffs.  Probing instead of hand-written descriptors
+means a new family only supplies its init fn and the engine's slicing,
+scatter, and compaction work unchanged -- and cannot drift out of sync
+with the real state layout.
+
+The spec then exposes the four state operations the engine needs:
+
+  init_state(n_slots, t)        fresh slot pages
+  slice_live(state, n, t_b)     the bucketed live prefix for one segment
+  merge_live(big, sub, n, t_b)  write a segment's result back
+  admit(big, rows, slots, g, t) scatter freshly prefilled requests into
+                                free slots -- leaves WITHOUT a length axis
+                                are overwritten whole (reset-on-admit for
+                                constant-size pages); leaves with one are
+                                written up to the prefill bucket, the rest
+                                being stale-but-masked (engine docstring)
+  permute_slots(state, perm)    slot compaction (gather along slot axes)
+
+Masked per-step updates (inactive slots bit-identical) live with the
+models themselves -- `attn_decode`, `ssm.ssd_decode`, `blocks.dec_block`
+all take an `active` mask -- and are property-tested across every
+registered family in tests/test_slot_state.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyState:
+    """Registry entry: how to build one family's slot state.
+
+    prefill_chunkable: whether prompts may be fed through the decode path
+    C tokens at a time (engine `prefill_chunk`).  True only for families
+    whose decode step consumes multi-token chunks with the same summation
+    order as full prefill (attention KV); sequential-state families (SSM,
+    hybrid) and encdec would change the floating-point reduction order and
+    lose bit-exactness vs the static path."""
+    family: str
+    init: Callable[..., Any]
+    prefill_chunkable: bool = True
+
+
+_REGISTRY: Dict[str, FamilyState] = {}
+
+
+def register(family: str, init: Callable[..., Any], *,
+             prefill_chunkable: bool = True) -> None:
+    """Register `init(cfg, n_slots, max_cache_len, **kw) -> state pytree`
+    for a family.  Axis layout is probed, not declared (module docstring)."""
+    _REGISTRY[family] = FamilyState(family, init, prefill_chunkable)
+
+
+def families() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_family(family: str) -> FamilyState:
+    try:
+        return _REGISTRY[family]
+    except KeyError:
+        raise ValueError(
+            f"no slot-state implementation registered for family "
+            f"{family!r} (registered: {list(families())}).  Add one with "
+            f"repro.models.slot_state.register({family!r}, init_fn) -- "
+            f"init_fn(cfg, n_slots, max_cache_len, **kw) must return the "
+            f"family's stacked decode cache; see models/slot_state.py and "
+            f"the registrations at the bottom of models/lm.py.") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotStateSpec:
+    """Probed per-leaf axis layout + the engine's state operations."""
+    family: str
+    cfg: Any
+    init_kwargs: Tuple[Tuple[str, Any], ...]
+    treedef: Any
+    batch_axes: Tuple[int, ...]
+    length_axes: Tuple[Optional[int], ...]
+    prefill_chunkable: bool
+
+    @property
+    def has_length_axis(self) -> bool:
+        """False => constant-size pages: the engine skips cache-length
+        bucketing entirely (batch-bucket-only graph growth)."""
+        return any(a is not None for a in self.length_axes)
+
+    # -- construction -------------------------------------------------------
+
+    def init_state(self, n_slots: int, max_cache_len: int):
+        fam = get_family(self.family)
+        return fam.init(self.cfg, n_slots, max_cache_len,
+                        **dict(self.init_kwargs))
+
+    # -- leaf-wise application ---------------------------------------------
+
+    def _apply(self, fn, *states):
+        flats = []
+        for st in states:
+            leaves, td = jax.tree_util.tree_flatten(st)
+            if td != self.treedef:
+                raise ValueError(
+                    f"state tree mismatch for family {self.family!r}: "
+                    f"got {td}, spec has {self.treedef}")
+            flats.append(leaves)
+        out = [fn(ba, la, *ls)
+               for ba, la, *ls in zip(self.batch_axes, self.length_axes,
+                                      *flats)]
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    # -- engine operations --------------------------------------------------
+
+    def slice_live(self, state, n_live: int, t_b: Optional[int] = None):
+        """The [.., :n_live, (:t_b)] live prefix a decode segment runs on."""
+        def f(ba, la, leaf):
+            idx = [slice(None)] * leaf.ndim
+            idx[ba] = slice(0, n_live)
+            if la is not None and t_b is not None:
+                idx[la] = slice(0, t_b)
+            return leaf[tuple(idx)]
+        return self._apply(f, state)
+
+    def merge_live(self, big, sub, n_live: int, t_b: Optional[int] = None):
+        """Write a segment's updated prefix back into the full slot state.
+
+        A leaf whose prefix covers it entirely is REPLACED by the updated
+        leaf rather than scattered into: slice_live's no-op slice aliases
+        the original buffer, which a donating segment dispatch then
+        deletes -- the old leaf must not be read, and the replacement also
+        skips a same-shape copy."""
+        def f(ba, la, bleaf, sleaf):
+            covers_b = n_live == bleaf.shape[ba]
+            covers_l = (la is None or t_b is None
+                        or t_b == bleaf.shape[la])
+            if covers_b and covers_l:
+                return sleaf
+            idx = [slice(None)] * bleaf.ndim
+            idx[ba] = slice(0, n_live)
+            if la is not None and t_b is not None:
+                idx[la] = slice(0, t_b)
+            return bleaf.at[tuple(idx)].set(sleaf)
+        return self._apply(f, big, sub)
+
+    def admit(self, big, rows, slots, n_new: int,
+              t_pre: Optional[int] = None):
+        """Scatter the first n_new prefilled rows into slot indices `slots`
+        ([n_new] int array).  Constant-size leaves are replaced whole."""
+        slots = jnp.asarray(slots)
+        def f(ba, la, bleaf, rleaf):
+            dst = [slice(None)] * bleaf.ndim
+            dst[ba] = slots
+            src = [slice(None)] * rleaf.ndim
+            src[ba] = slice(0, n_new)
+            if la is not None and t_pre is not None:
+                dst[la] = slice(0, t_pre)
+                src[la] = slice(0, t_pre)
+            return bleaf.at[tuple(dst)].set(rleaf[tuple(src)])
+        return self._apply(f, big, rows)
+
+    def permute_slots(self, state, perm):
+        """Reorder slots (compaction): gather `perm` along each slot axis."""
+        perm = jnp.asarray(perm)
+        def f(ba, la, leaf):
+            return jnp.take(leaf, perm, axis=ba)
+        return self._apply(f, state)
+
+
+def _leaf_axis_diff(base, other, what: str, family: str):
+    diff = [i for i, (x, y) in enumerate(zip(base, other)) if x != y]
+    if len(diff) > 1:
+        raise ValueError(
+            f"slot-state probe for family {family!r}: leaf {base} has "
+            f"{len(diff)} {what} axes {diff}; exactly one slot axis and at "
+            f"most one length axis per leaf are supported")
+    return diff
+
+
+@functools.lru_cache(maxsize=64)
+def _spec_cached(family: str, cfg,
+                 kw_items: Tuple[Tuple[str, Any], ...]) -> SlotStateSpec:
+    fam = get_family(family)
+    kwargs = dict(kw_items)
+
+    def shapes(n, t):
+        tree = jax.eval_shape(lambda: fam.init(cfg, n, t, **kwargs))
+        leaves, td = jax.tree_util.tree_flatten(tree)
+        return [leaf.shape for leaf in leaves], td
+
+    # prime-ish probe sizes: only dims derived from the varied argument
+    # change between probes, so fixed dims can never alias
+    s0, td0 = shapes(2, 16)
+    sb, tdb = shapes(3, 16)
+    sl, tdl = shapes(2, 48)
+    if not (td0 == tdb == tdl):
+        raise ValueError(
+            f"slot-state init for family {family!r} changes tree structure "
+            f"with n_slots/max_cache_len; it must be shape-polymorphic")
+    batch_axes, length_axes = [], []
+    for base, b_sh, l_sh in zip(s0, sb, sl):
+        bd = _leaf_axis_diff(base, b_sh, "slot", family)
+        if len(bd) != 1:
+            raise ValueError(
+                f"slot-state probe for family {family!r}: leaf {base} does "
+                f"not scale with n_slots; every leaf needs a slot axis")
+        ld = _leaf_axis_diff(base, l_sh, "length", family)
+        batch_axes.append(bd[0])
+        length_axes.append(ld[0] if ld else None)
+    return SlotStateSpec(
+        family=family, cfg=cfg, init_kwargs=kw_items, treedef=td0,
+        batch_axes=tuple(batch_axes), length_axes=tuple(length_axes),
+        prefill_chunkable=fam.prefill_chunkable)
+
+
+def spec_for(cfg, **init_kwargs) -> SlotStateSpec:
+    """The (cached) SlotStateSpec for cfg's family.  Raises with registry
+    guidance when the family has no registered slot-state impl."""
+    return _spec_cached(cfg.family, cfg, tuple(sorted(init_kwargs.items())))

@@ -77,11 +77,22 @@ def _segsum_decay(da_cs):
 
 
 def ssd_forward(p, x_in, cfg: ModelConfig, initial_state=None,
-                return_state: bool = False):
-    """x_in: [B, L, d_model] -> [B, L, d_model] (+ final {ssm, conv} state)."""
+                return_state: bool = False, lengths=None):
+    """x_in: [B, L, d_model] -> [B, L, d_model] (+ final {ssm, conv} state).
+
+    lengths: optional [B] int32 per-row count of REAL tokens (ragged
+    right-padded batches; lm.prefill always passes it).  Padded positions
+    become identity steps (decay 1, zero update), so the final state is
+    the state after each row's real prompt -- bit-identical to running
+    that row unpadded, because with lengths the chunk grid is FIXED at
+    s.chunk (absolute chunk boundaries do not move with the padded
+    length; extra padded chunks multiply the state by exp(0) == 1 and add
+    exact zeros).  Training (lengths=None) keeps the adaptive grid: short
+    sequences would otherwise pay the full [B,H,chunk,chunk] intra-chunk
+    cost on pure identity steps."""
     s, d_inner, n_heads, conv_ch = dims(cfg)
     b, l_real, _ = x_in.shape
-    q = min(s.chunk, l_real)
+    q = s.chunk if lengths is not None else min(s.chunk, l_real)
     l = -(-l_real // q) * q           # pad to a chunk multiple
     if l != l_real:
         x_in = jnp.pad(x_in, ((0, 0), (0, l - l_real), (0, 0)))
@@ -96,10 +107,12 @@ def ssd_forward(p, x_in, cfg: ModelConfig, initial_state=None,
     rep = n_heads // g
     a = -jnp.exp(p["A_log"])                                 # [H]
     dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # [B,L,H]
-    if l != l_real:
-        # padded positions become identity steps (decay 1, zero update) so
-        # the carried/final state is untouched by padding
-        valid = (jnp.arange(l) < l_real)[None, :, None]
+    if lengths is not None or l != l_real:
+        # identity steps beyond each row's real length (uniform l_real
+        # when only the chunk grid padded the sequence)
+        lens = (jnp.full((b,), l_real, jnp.int32) if lengths is None
+                else lengths.astype(jnp.int32))
+        valid = jnp.arange(l)[None, :, None] < lens[:, None, None]
         dt = jnp.where(valid, dt, 0.0)
 
     # chunk the streams: [nc, B, Q, ...] for lax.scan
@@ -146,7 +159,15 @@ def ssd_forward(p, x_in, cfg: ModelConfig, initial_state=None,
     if l != l_real:
         out = out[:, :l_real, :]
     if return_state:
-        conv_state = xbc_pre[:, l_real - (s.conv_width - 1):l_real, :]
+        # last (conv_width-1) REAL inputs per row; left-pad so rows shorter
+        # than the window get the leading zeros a fresh stream would have
+        w = s.conv_width - 1
+        lens = (jnp.full((b,), l_real, jnp.int32) if lengths is None
+                else lengths.astype(jnp.int32))
+        padded = jnp.pad(xbc_pre, ((0, 0), (w, 0), (0, 0)))
+        conv_state = jax.vmap(
+            lambda t, i: jax.lax.dynamic_slice(t, (i, 0), (w, conv_ch))
+        )(padded, lens)
         return out, {"ssm": final_state, "conv": conv_state}
     return out
 
@@ -160,9 +181,13 @@ def init_ssm_state(cfg: ModelConfig, batch: int):
     }
 
 
-def ssd_decode(p, x_t, state, cfg: ModelConfig):
+def ssd_decode(p, x_t, state, cfg: ModelConfig, active=None):
     """Single-token decode.  x_t: [B, 1, d_model]; state dict from
-    init_ssm_state / prior steps.  Returns (y_t, new_state)."""
+    init_ssm_state / prior steps.  active: optional [B] bool slot mask --
+    inactive rows compute but keep their {ssm, conv} state bit-identical
+    (the SSM analogue of the masked KV-cache write: state pages are
+    constant-size, so masking the whole update is exact).
+    Returns (y_t, new_state)."""
     s, d_inner, n_heads, conv_ch = dims(cfg)
     b = x_t.shape[0]
     g, n, pd = s.n_groups, s.d_state, s.headdim
@@ -188,6 +213,10 @@ def ssd_decode(p, x_t, state, cfg: ModelConfig):
     da = jnp.exp(dt * a)                                    # [B,H]
     upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, bh, xf)
     new_ssm = da[:, :, None, None] * state["ssm"] + upd
+    if active is not None:
+        new_ssm = jnp.where(active[:, None, None, None], new_ssm,
+                            state["ssm"])
+        new_conv = jnp.where(active[:, None, None], new_conv, state["conv"])
     y = jnp.einsum("bhn,bhpn->bhp", chh, new_ssm)
     y = y + p["D"][None, :, None] * xf
     y = y.reshape(b, 1, d_inner)

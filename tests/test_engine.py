@@ -179,19 +179,30 @@ def test_slot_admission_eviction_invariants(setup):
     assert max(eng.occupancy) <= 1.0
 
 
-def test_engine_rejects_oversized_and_wrong_family(setup):
+def test_engine_rejects_oversized_and_unregistered_family(setup):
+    import dataclasses
+
     cfg, params = setup
     eng = ServeEngine(params, cfg, n_slots=2, max_cache_len=32)
     with pytest.raises(ValueError):
         eng.submit(scheduler.Request(rid=0, prompt=np.zeros(30, np.int32),
                                      max_new_tokens=8))
+    # a family with no registered slot-state impl fails with guidance
+    # pointing at the registry, not a frozen family tuple
+    alien = dataclasses.replace(cfg, family="rwkv")
+    with pytest.raises(ValueError, match="slot_state.register"):
+        ServeEngine(params, alien)
+    # ssm IS served now, but its state is not prefill-chunkable
     ssm_cfg = configs.get_reduced_config("mamba2-2.7b")
-    with pytest.raises(ValueError):
-        ServeEngine(params, ssm_cfg)
-    # the active mask is refused outright where state can't honor it
-    with pytest.raises(ValueError):
-        lm.decode_step({}, None, None, None, ssm_cfg,
-                       active=np.ones(2, bool))
+    with pytest.raises(ValueError, match="chunkable"):
+        ServeEngine(params, ssm_cfg, prefill_chunk=4)
+    # features are encdec-only; encdec engines require enc_len
+    with pytest.raises(ValueError, match="encdec"):
+        eng.submit(scheduler.Request(rid=1, prompt=np.zeros(4, np.int32),
+                                     max_new_tokens=2,
+                                     features=np.zeros((4, cfg.d_model))))
+    with pytest.raises(ValueError, match="enc_len"):
+        ServeEngine(params, configs.get_reduced_config("whisper-small"))
 
 
 def test_warmup_bounds_compiled_graphs(setup):

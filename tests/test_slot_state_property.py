@@ -1,0 +1,48 @@
+"""Hypothesis property: a masked decode step leaves every inactive slot's
+state bit-identical, for ALL registered slot-state families -- the
+invariant the serve engine's slot packing rests on (models/slot_state.py,
+models/lm.decode_step `active`)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.models import slot_state  # noqa: E402
+# pytest (prepend import mode) imports sibling test modules top-level
+from test_slot_state import (  # noqa: E402
+    MASK_FAMILIES, assert_inactive_slots_unchanged, masked_family_setup)
+
+N_SLOTS = 4
+_SETUP = {}
+
+
+def _setup(fam):
+    if fam not in _SETUP:
+        _SETUP[fam] = masked_family_setup(fam, N_SLOTS)
+    return _SETUP[fam]
+
+
+def test_all_registered_families_covered():
+    assert set(MASK_FAMILIES) >= set(slot_state.families()) - {"vlm"}
+    # vlm shares the dense block/cache path verbatim (BLOCK_FNS in lm.py)
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_masked_update_property(data):
+    fam = data.draw(st.sampled_from(MASK_FAMILIES), label="family")
+    cfg, params, spec, state, step = _setup(fam)
+    active = np.asarray(data.draw(
+        st.lists(st.booleans(), min_size=N_SLOTS, max_size=N_SLOTS),
+        label="active"))
+    toks = np.asarray(data.draw(
+        st.lists(st.integers(0, cfg.vocab - 1), min_size=N_SLOTS,
+                 max_size=N_SLOTS), label="tokens"), np.int32)[:, None]
+    pos = np.asarray(data.draw(
+        st.lists(st.integers(0, 24), min_size=N_SLOTS, max_size=N_SLOTS),
+        label="pos"), np.int32)
+    _, new_state = step(params, jnp.asarray(toks), state,
+                        jnp.asarray(pos), jnp.asarray(active))
+    assert_inactive_slots_unchanged(spec, state, new_state, active, fam)
