@@ -14,8 +14,11 @@ rows demonstrate the family-agnostic slot layer (ssm: constant-size pages,
 batch-bucket-only graph growth).
 
 Emits one machine-readable line:  BENCH {json}  with the family, aggregate
-tok/s, p50/p99 per-request latency, mean slot occupancy, and compiled-graph
-counts (the engine's is bounded by its bucket sets).
+tok/s, p50/p99 per-request latency, mean slot occupancy, compiled-graph
+counts (the engine's is bounded by its bucket sets), and the **active
+lowering census** {op: lowering id} from kernels/registry.py -- every
+throughput row is attributable to the kernel lowerings it ran on
+(REPRO_LOWERING=... rows are distinguishable from auto-resolved ones).
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
         [--family {dense,ssm,hybrid}] [--silvia {off,add,muladd,all}]
@@ -31,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.kernels import registry
 from repro.launch import scheduler, serve
 from repro.launch.engine import ServeEngine
 from repro.models import lm
@@ -78,6 +82,7 @@ def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
     out["graph_keys"] = [" ".join(map(str, k)) for k in info["graph_keys"]]
     out["has_length_axis"] = info["has_length_axis"]
     out["compactions"] = info["compactions"]
+    out["lowerings"] = info["lowerings"]
     if "silvia" in info:
         out["silvia_trace"] = {k: info["silvia"][k]
                                for k in ("trace_hits", "trace_misses")}
@@ -161,7 +166,8 @@ def run(smoke: bool = False, silvia_passes: str = "off",
                    "prompt_lens": list(prompt_lens),
                    "gen_lens": list(gen_lens), "quant": "w8a8",
                    "silvia": silvia_passes,
-                   "backend": jax.default_backend()},
+                   "backend": jax.default_backend(),
+                   "lowerings": registry.active_lowerings()},
         "engine": run_engine(params, cfg, traffic(), n_slots=n_slots,
                              max_cache_len=max_len, segment_len=seg,
                              silvia_passes=silvia_passes),

@@ -48,6 +48,11 @@ def main():
     print("numerics identical:", ok)
     assert ok
 
+    from repro.kernels import registry
+    print("active lowerings:", registry.census_str(),
+          "(the packed call above ran on its op's lowering; force with "
+          "REPRO_LOWERING)")
+
 
 if __name__ == "__main__":
     main()

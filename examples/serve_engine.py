@@ -57,6 +57,10 @@ def main():
           f"batch buckets {info['batch_buckets']}, "
           f"len buckets {info['len_buckets']}; "
           f"compactions {info['compactions']}")
+    from repro.kernels import registry
+    print("active lowerings:",
+          registry.census_str(),
+          "(force via REPRO_LOWERING=<op>=<id>,... or '*=<id>')")
 
 
 if __name__ == "__main__":

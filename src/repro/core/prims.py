@@ -5,12 +5,12 @@ tuple of narrow scalar-per-lane operations is replaced by ONE call to a packed
 implementation.  Each primitive:
 
 * counts as a single "functional unit" for the Ops/Unit metric (its params
-  carry the number of logical narrow ops it computes),
-* evaluates through the pure-jnp reference oracle on CPU (the functional
-  contract), and
-* lowers to the corresponding Pallas TPU kernel in the serving fast path
-  (kernels/ops.py dispatches; the jnp reference is itself the legal
-  "placeholder function" the paper describes in sec. 3.3).
+  carry the number of logical narrow ops it computes), and
+* binds to a concrete backend implementation through the lowering registry
+  (kernels/registry.py) -- the paper's sec. 3.3 placeholder-function ->
+  technology-library binding: Mosaic kernels on TPU, Triton-Pallas on GPU,
+  vectorized jnp on CPU, with the pure-jnp oracle (`ref`) as the
+  always-legal fallback that defines the functional contract.
 
 There is also `silvia_width_hint_p`, the analogue of the HLS frontend's width
 minimization metadata: an identity op that declares "this tensor's values fit
@@ -26,8 +26,7 @@ from jax import core as jcore
 from jax.extend import core as jex_core
 from jax.interpreters import batching, mlir
 
-from repro.kernels import ops as kops
-from repro.kernels import ref as kref
+from repro.kernels import registry
 
 # ---------------------------------------------------------------------------
 # silvia_width_hint: value-range metadata
@@ -91,7 +90,8 @@ silvia_packed_add_p = jex_core.Primitive("silvia_packed_add")
 
 def _packed_add_impl(*ops, mode, lane_bits, sub, out_dtypes, n_lanes):
     xs, ys = ops[:n_lanes], ops[n_lanes:]
-    outs = kops.simd_add(xs, ys, sub=sub, lane_bits=lane_bits)
+    outs = registry.dispatch("simd_add", xs, ys, sub=sub,
+                             lane_bits=lane_bits)
     return [o.astype(d) for o, d in zip(outs, out_dtypes)]
 
 
@@ -120,7 +120,7 @@ silvia_packed_muladd_p = jex_core.Primitive("silvia_packed_muladd")
 
 def _packed_muladd_impl(*ops, n, out_dtype, m_bits, c_bits):
     a, b, c = ops[:n], ops[n:2 * n], ops[2 * n:]
-    p_a, p_b = kops.muladd2(a, b, c)
+    p_a, p_b = registry.dispatch("muladd2", a, b, c)
     return [p_a.astype(out_dtype), p_b.astype(out_dtype)]
 
 
@@ -149,7 +149,7 @@ silvia_packed_mul4_p = jex_core.Primitive("silvia_packed_mul4")
 
 def _packed_mul4_impl(*ops, out_dtypes, a_signed, b_signed):
     a, b = ops[:4], ops[4]
-    outs = kops.mul4(a, b)
+    outs = registry.dispatch("mul4", a, b)
     return [o.astype(d) for o, d in zip(outs, out_dtypes)]
 
 

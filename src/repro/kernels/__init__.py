@@ -1,19 +1,28 @@
-"""Packed-arithmetic Pallas TPU kernels -- the "custom RTL modules" of the
-SILVIA flow (paper sec. 3.3/3.4), adapted to the TPU memory/compute hierarchy.
+"""Packed-arithmetic kernels -- the "custom RTL modules" of the SILVIA flow
+(paper sec. 3.3/3.4), adapted to each backend's memory/compute hierarchy.
 
-simd_add       SWAR four8/two16 add/sub        (paper sec. 2.1, SILVIAAdd)
-autotune       block-size search + on-disk cache for the matmul kernels
-muladd2        factor-2 shared-operand MAD      (paper sec. 2.2, wp486)
-mul4           factor-4 4-bit multiplications   (paper sec. 2.3, incl. the
-                                                 paper's novel unsigned form)
-quant_matmul   w8a8 MXU GEMM                    (serving baseline)
-packed_matmul  w4a8 packed-weight MXU GEMM      (the packing insight applied
-                                                 to the HBM-bound fast path)
-ref            pure-jnp oracles for all of the above
-ops            backend dispatch (Pallas on TPU / oracle on CPU)
+registry        lowering registry: per-op, per-backend capability-gated
+                lowerings (the paper's placeholder -> technology binding)
+lowerings       the binding table itself (registers everything below)
+simd_add        SWAR four8/two16 add/sub         (paper sec. 2.1, SILVIAAdd)
+muladd2         factor-2 shared-operand MAD      (paper sec. 2.2, wp486)
+mul4            factor-4 4-bit multiplications   (paper sec. 2.3, incl. the
+                                                  paper's novel unsigned form)
+quant_matmul    w8a8 MXU GEMM                    (serving baseline)
+packed_matmul   w4a8 packed-weight MXU GEMM      (the packing insight applied
+                                                  to the HBM-bound fast path)
+gpu_pallas      Triton-Pallas variants of the SWAR + matmul kernels
+cpu_vector      vectorized jnp lowerings (SWAR at jnp level; forced via
+                                          REPRO_LOWERING, CI-exercised)
+ref             scalar-per-lane oracles for all of the above (always-legal
+                fallback lowering)
+autotune        block-size search + on-disk cache, keyed by lowering id
+ops             thin compatibility wrappers over registry.dispatch
 """
-from repro.kernels import (autotune, common, mul4, muladd2, ops,
-                           packed_matmul, quant_matmul, ref, simd_add)
+from repro.kernels import (autotune, common, cpu_vector, gpu_pallas, mul4,
+                           muladd2, ops, packed_matmul, quant_matmul, ref,
+                           registry, simd_add)
 
-__all__ = ["autotune", "common", "mul4", "muladd2", "ops", "packed_matmul",
-           "quant_matmul", "ref", "simd_add"]
+__all__ = ["autotune", "common", "cpu_vector", "gpu_pallas", "mul4",
+           "muladd2", "ops", "packed_matmul", "quant_matmul", "ref",
+           "registry", "simd_add"]

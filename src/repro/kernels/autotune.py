@@ -9,8 +9,10 @@ later process start reads the cache and pays nothing.
 
     from repro.kernels import autotune
     autotune.enable(True)                  # or REPRO_AUTOTUNE=1
-    block = autotune.resolve("quant_matmul", m, k, n)
-    block = autotune.resolve("simd_add", rows, cols)
+    block = autotune.resolve("quant_matmul", m, k, n)   # Mosaic (default
+    block = autotune.resolve("simd_add", rows, cols,    # lowering id is
+                             lowering="gpu-pallas",     # "tpu-pallas")
+                             interpret=False)
 
 Kernels call `resolve()` when invoked with `block=None`; with tuning
 disabled and no cache entry it falls through to the kernel's static default,
@@ -20,6 +22,13 @@ Covered kinds: the GEMMs ("quant_matmul", "packed_w4_matmul"; 3-D
 (bm, bn, bk) blocks keyed on M/K/N) and the SWAR units ("simd_add",
 "mul4", "muladd2"; 2-D (bm, bn) blocks keyed on their padded 2-D layout,
 plus the chain length for muladd2).
+
+Cache keys (v2) include the **lowering id** ("tpu-pallas" / "gpu-pallas" --
+the registry families that own tunable Pallas kernels) and the **execution
+mode** ("native" / "interp") on top of kind/shape/backend.  v1 keyed on
+`jax.default_backend()` alone, so interpret-mode CPU tuning results could
+shadow real TPU timings for the same shapes; v2 entries can never collide
+across lowerings or modes, and stale v1 entries are simply never read.
 
 Cache location: $REPRO_AUTOTUNE_CACHE, else ~/.cache/repro/autotune.json.
 """
@@ -34,6 +43,8 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+CACHE_VERSION = 2   # bumped: v2 keys fold in (lowering id, interpret mode)
 
 DEFAULT_BLOCK = (256, 256, 512)
 
@@ -126,25 +137,41 @@ def _save() -> None:
         pass  # read-only FS: tuning still works in-process
 
 
-def _key(kind: str, *dims: int) -> str:
-    return f"{kind}:{'x'.join(map(str, dims))}:{jax.default_backend()}"
+def _interpret_default(lowering: str) -> bool:
+    """A Pallas lowering tunes in the same mode it runs in (the shared
+    common.interpret_default_for rule, so cache-key mode and kernel
+    defaults can never disagree)."""
+    from repro.kernels import common
+    return common.interpret_default_for(lowering)
 
 
-def lookup(kind: str, *dims: int) -> tuple | None:
-    ent = _load().get(_key(kind, *dims))
+def _key(kind: str, *dims: int, lowering: str = "tpu-pallas",
+         interpret: bool | None = None) -> str:
+    if interpret is None:
+        interpret = _interpret_default(lowering)
+    mode = "interp" if interpret else "native"
+    return (f"v{CACHE_VERSION}:{kind}:{'x'.join(map(str, dims))}:"
+            f"{jax.default_backend()}:{lowering}:{mode}")
+
+
+def lookup(kind: str, *dims: int, lowering: str = "tpu-pallas",
+           interpret: bool | None = None) -> tuple | None:
+    ent = _load().get(_key(kind, *dims, lowering=lowering,
+                           interpret=interpret))
     if ent is None:
         return None
     return tuple(ent["block"])
 
 
-def resolve(kind: str, *dims: int) -> tuple:
-    """Best known block for this shape: cache hit > (tune now if enabled)
-    > the kind's static default."""
-    hit = lookup(kind, *dims)
+def resolve(kind: str, *dims: int, lowering: str = "tpu-pallas",
+            interpret: bool | None = None) -> tuple:
+    """Best known block for this (shape, lowering, mode): cache hit >
+    (tune now if enabled) > the kind's static default."""
+    hit = lookup(kind, *dims, lowering=lowering, interpret=interpret)
     if hit is not None:
         return hit
     if _enabled:
-        return tune(kind, *dims)
+        return tune(kind, *dims, lowering=lowering, interpret=interpret)
     return default_block(kind)
 
 
@@ -158,52 +185,73 @@ def _time_call(fn, *args, iters: int = 3) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def _tune_runner(kind: str, dims: tuple):
-    """Synthetic-operand closure for one kind: run(blk) -> kernel output."""
+def _tune_runner(kind: str, dims: tuple, lowering: str, interpret: bool):
+    """Synthetic-operand closure for one (kind, lowering): run(blk) ->
+    kernel output, invoked in the same mode the cache key records."""
     # lazy imports: the kernels import this module for resolve()
-    from repro.kernels import (mul4, muladd2, packed_matmul, quant_matmul,
-                               simd_add)
+    from repro.kernels import (gpu_pallas, mul4, muladd2, packed_matmul,
+                               quant_matmul, simd_add)
 
+    gpu = lowering == "gpu-pallas"
     rng = np.random.default_rng(0)
     if kind in ("quant_matmul", "packed_w4_matmul"):
         m, k, n = dims
         x = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
         if kind == "packed_w4_matmul":
             w = jnp.asarray(rng.integers(-128, 128, (k, n // 2)), jnp.int8)
-            return lambda blk: packed_matmul.packed_w4_matmul_acc(
-                x, w, block=blk)
+            fn = gpu_pallas.packed_w4_matmul_acc if gpu else \
+                packed_matmul.packed_w4_matmul_acc
+            return lambda blk: fn(x, w, block=blk, interpret=interpret)
         w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
-        return lambda blk: quant_matmul.quant_matmul_acc(x, w, block=blk)
+        fn = gpu_pallas.quant_matmul_acc if gpu else \
+            quant_matmul.quant_matmul_acc
+        return lambda blk: fn(x, w, block=blk, interpret=interpret)
     if kind == "simd_add":
         rows, cols = dims
         x = jnp.asarray(rng.integers(0, 1 << 32, (rows, cols),
                                      dtype=np.uint32))
         y = jnp.asarray(rng.integers(0, 1 << 32, (rows, cols),
                                      dtype=np.uint32))
-        return lambda blk: simd_add.simd_add_packed(x, y, block=blk)
+        fn = gpu_pallas.simd_add_packed if gpu else simd_add.simd_add_packed
+        return lambda blk: fn(x, y, block=blk, interpret=interpret)
     if kind in ("mul4", "mul4_split"):
         rows, cols = dims
         a = jnp.asarray(rng.integers(-8, 8, (4, rows, cols)), jnp.int8)
         b = jnp.asarray(rng.integers(-8, 8, (rows, cols)), jnp.int8)
         if kind == "mul4_split":
-            return lambda blk: mul4.mul4_split(a, b, block=blk)
-        return lambda blk: mul4.mul4_full32(a, b, block=blk)
+            if gpu:
+                # no gpu-pallas mul4_split kernel exists; timing the Mosaic
+                # one here would persist a mislabeled gpu-pallas cache entry
+                raise ValueError("mul4_split has no gpu-pallas kernel")
+            return lambda blk: mul4.mul4_split(a, b, block=blk,
+                                               interpret=interpret)
+        fn = gpu_pallas.mul4 if gpu else mul4.mul4_full32
+        return lambda blk: fn(a, b, block=blk, interpret=interpret)
     if kind == "muladd2":
         nc, rows, cols = dims
         a = jnp.asarray(rng.integers(-8, 8, (nc, rows, cols)), jnp.int8)
         b = jnp.asarray(rng.integers(-8, 8, (nc, rows, cols)), jnp.int8)
         c = jnp.asarray(rng.integers(-128, 128, (nc, rows, cols)), jnp.int8)
-        return lambda blk: muladd2.muladd2(a, b, c, block=blk)
+        fn = gpu_pallas.muladd2 if gpu else muladd2.muladd2
+        return lambda blk: fn(a, b, c, block=blk, interpret=interpret)
     raise ValueError(f"unknown autotune kind: {kind}")
 
 
-def tune(kind: str, *dims: int, candidates=None, iters: int = 3) -> tuple:
+def tune(kind: str, *dims: int, candidates=None, iters: int = 3,
+         lowering: str = "tpu-pallas", interpret: bool | None = None) -> tuple:
     """Time every candidate block on synthetic operands, persist and
     return the winner.  Runs real kernel invocations, so only call at
     set-up time (resolve() does, once per shape signature)."""
+    if lowering not in ("tpu-pallas", "gpu-pallas"):
+        # only the Pallas families have tunable blocks; timing anything
+        # else here would persist a mislabeled entry to the shared cache
+        raise ValueError(f"no tunable kernels for lowering {lowering!r} "
+                         "(tunable: tpu-pallas, gpu-pallas)")
     if candidates is None:
         candidates = KIND_SPECS[kind][1]
-    run = _tune_runner(kind, dims)
+    if interpret is None:
+        interpret = _interpret_default(lowering)
+    run = _tune_runner(kind, dims, lowering, interpret)
 
     best_blk, best_us = default_block(kind), float("inf")
     results = {}
@@ -220,7 +268,7 @@ def tune(kind: str, *dims: int, candidates=None, iters: int = 3) -> tuple:
         # would suppress retries forever) -- fall back without recording
         return default_block(kind)
     cache = _load()
-    cache[_key(kind, *dims)] = {
+    cache[_key(kind, *dims, lowering=lowering, interpret=interpret)] = {
         "block": list(best_blk), "us": round(best_us, 1),
         "candidates": results,
     }

@@ -30,17 +30,7 @@ from jax.experimental import pallas as pl
 from repro.kernels import autotune, common
 
 
-def _extract_lane(p, signed: bool = True):
-    """Pop the low 8-bit lane: returns (lane, rest).
-
-    Signed products use sign-extension (borrow correction per paper sec. 2.3:
-    "adding the MSB of a product p_i to the next product" is algebraically
-    the `(p - lane) >> 8` step); unsigned products extract directly."""
-    if signed:
-        lane = ((p & 0xFF) ^ 0x80) - 0x80
-    else:
-        lane = p & 0xFF
-    return lane, (p - lane) >> 8
+_extract_lane = common.extract_lane8   # shared identity (common.py)
 
 
 def _mul4_full32_kernel(a_ref, b_ref, p_ref, *, signed: bool):
@@ -87,7 +77,8 @@ def _run(kernel, a, b, block, interpret, signed=True, kind="mul4"):
     b2, shape, cnt = common.pad_to_2d(b, common.TILE_8)
     rows, cols = b2.shape
     if block is None:
-        block = autotune.resolve(kind, rows, cols)
+        block = autotune.resolve(kind, rows, cols,
+                                 lowering="tpu-pallas", interpret=interpret)
     bm = max(common.TILE_8[0], min(block[0], rows) // common.TILE_8[0] * common.TILE_8[0])
     bn = max(common.TILE_8[1], min(block[1], cols) // common.TILE_8[1] * common.TILE_8[1])
     rows = common.cdiv(rows, bm) * bm

@@ -27,13 +27,9 @@ from repro.kernels import autotune, common
 
 def _muladd2_kernel(a_ref, b_ref, c_ref, pa_ref, pb_ref):
     # blocks: (n, bm, bn) int8 -> (bm, bn) int32
-    a = a_ref[...].astype(jnp.int32)
-    b = b_ref[...].astype(jnp.int32)
-    c = c_ref[...].astype(jnp.int32)
-    packed = (a << 16) + b                # one packed operand per chain elem
-    p = jnp.sum(packed * c, axis=0)       # ONE multiply lane per chain elem
-    p_b = ((p & 0xFFFF) ^ 0x8000) - 0x8000   # sign-extend low lane
-    p_a = (p - p_b) >> 16                     # exact: P - p_b == p_a * 2^16
+    p_a, p_b = common.madd2_reduce(a_ref[...].astype(jnp.int32),
+                                   b_ref[...].astype(jnp.int32),
+                                   c_ref[...].astype(jnp.int32))
     pa_ref[...] = p_a
     pb_ref[...] = p_b
 
@@ -53,7 +49,8 @@ def muladd2(a, b, c, *, block=None, interpret: bool | None = None):
     a2, shape, cnt = common.pad_to_2d(a.reshape(n, -1)[0], common.TILE_8)
     rows, cols = a2.shape
     if block is None:
-        block = autotune.resolve("muladd2", n, rows, cols)
+        block = autotune.resolve("muladd2", n, rows, cols,
+                                 lowering="tpu-pallas", interpret=interpret)
 
     def prep(x):
         flat = x.reshape(n, -1)

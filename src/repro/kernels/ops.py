@@ -1,81 +1,46 @@
-"""Jit'd dispatch wrappers over the packed kernels.
+"""Compatibility wrappers over the lowering registry (kernels/registry.py).
 
-This is the paper's sec. 3.3/3.4 "placeholder function -> custom RTL module"
-replacement step: the SILVIA packed primitives evaluate through these
-wrappers, which pick the Pallas TPU kernel on TPU backends and the exact
-pure-jnp reference elsewhere (CPU tests exercise the kernels explicitly in
-interpret mode).
+The boolean Pallas-or-oracle switch that used to live here (`_use_pallas()`)
+is gone: every packed op now resolves through the registry's named,
+capability-gated, per-backend lowerings (`tpu-pallas` / `gpu-pallas` /
+`cpu-vector` / `ref`), with `REPRO_LOWERING` / `registry.force()` overrides
+and cached resolution.  New call sites should use `registry.dispatch()`
+directly; these wrappers keep the historical `kernels.ops` API working.
 """
 from __future__ import annotations
 
-import functools
-import os
-
-import jax
 import jax.numpy as jnp
 
-from repro.kernels import autotune
-from repro.kernels import mul4 as _mul4
-from repro.kernels import muladd2 as _muladd2
-from repro.kernels import packed_matmul as _pmm
-from repro.kernels import quant_matmul as _qmm
-from repro.kernels import ref
-from repro.kernels import simd_add as _simd_add
-
-
-def _use_pallas() -> bool:
-    env = os.environ.get("REPRO_FORCE_PALLAS")
-    if env is not None:
-        return env not in ("0", "false", "")
-    return jax.default_backend() == "tpu"
+from repro.kernels import autotune, registry
 
 
 def set_autotune(on: bool = True) -> None:
     """Enable block-size autotuning for the Pallas kernels -- the matmuls
     and the SWAR units (see kernels/autotune.py; results persist in an
-    on-disk cache)."""
+    on-disk cache keyed by lowering id + mode)."""
     autotune.enable(on)
 
 
 def simd_add(xs, ys, *, lane_bits: int = 8, sub: bool = False):
-    if _use_pallas():
-        shape = jnp.broadcast_shapes(*[x.shape for x in (*xs, *ys)])
-        dt = jnp.int8 if lane_bits == 8 else jnp.int16
-        n8 = [jnp.broadcast_to(x, shape).astype(dt) for x in xs]
-        m8 = [jnp.broadcast_to(y, shape).astype(dt) for y in ys]
-        return _simd_add.simd_add(n8, m8, lane_bits=lane_bits, sub=sub)
-    return ref.simd_add_ref(xs, ys, sub=sub, lane_bits=lane_bits)
+    return registry.dispatch("simd_add", xs, ys, lane_bits=lane_bits,
+                             sub=sub)
 
 
 def muladd2(a, b, c):
     """Chain MAD: sequences a/b/c of tensors -> (p_a, p_b) int32."""
-    if _use_pallas():
-        shape = jnp.broadcast_shapes(*[x.shape for x in (*a, *b, *c)])
-        st = lambda seq: jnp.stack([jnp.broadcast_to(x, shape).astype(jnp.int8)
-                                    for x in seq])
-        return _muladd2.muladd2(st(a), st(b), st(c))
-    return ref.muladd2_ref(a, b, c)
+    return registry.dispatch("muladd2", a, b, c)
 
 
 def mul4(a, b):
-    if _use_pallas():
-        shape = jnp.broadcast_shapes(*[x.shape for x in a], b.shape)
-        a4 = jnp.stack([jnp.broadcast_to(x, shape).astype(jnp.int8) for x in a])
-        return _mul4.mul4_full32(a4, jnp.broadcast_to(b, shape).astype(jnp.int8))
-    return ref.mul4_ref(a, b)
+    return registry.dispatch("mul4", a, b)
 
 
 def quant_matmul(x_q, w_q, x_scale, w_scale, *, out_dtype=jnp.float32):
-    if _use_pallas():
-        return _qmm.quant_matmul(x_q, w_q, x_scale, w_scale,
-                                 out_dtype=out_dtype)
-    return ref.quant_matmul_ref(x_q, w_q, x_scale, w_scale, out_dtype)
+    return registry.dispatch("quant_matmul", x_q, w_q, x_scale, w_scale,
+                             out_dtype=out_dtype)
 
 
 def packed_w4_matmul(x_q, w_packed, x_scale, w_scale, *,
                      out_dtype=jnp.float32):
-    if _use_pallas():
-        return _pmm.packed_w4_matmul(x_q, w_packed, x_scale, w_scale,
-                                     out_dtype=out_dtype)
-    return ref.packed_w4_matmul_ref(x_q, w_packed, x_scale, w_scale,
-                                    out_dtype)
+    return registry.dispatch("packed_w4_matmul", x_q, w_packed, x_scale,
+                             w_scale, out_dtype=out_dtype)

@@ -24,22 +24,12 @@ from jax.experimental import pallas as pl
 from repro.kernels import autotune, common
 
 
-def _unpack_w4_block(wp):
-    """(bk, bn//2) int8 words -> (bk, bn) int8 weights (interleaved cols)."""
-    w32 = wp.astype(jnp.int32)
-    w_even = (w32 & 0xF) - 8          # de-bias low nibble -> [-8, 7]
-    w_odd = w32 >> 4                  # arithmetic shift -> [-8, 7]
-    bk, bnh = wp.shape
-    inter = jnp.stack([w_even, w_odd], axis=-1).reshape(bk, 2 * bnh)
-    return inter.astype(jnp.int8)
-
-
 def _pmm_kernel(x_ref, wp_ref, o_ref):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    w = _unpack_w4_block(wp_ref[...])
+    w = common.unpack_w4_words(wp_ref[...])
     o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.int32)
 
 
@@ -55,7 +45,8 @@ def packed_w4_matmul_acc(x_q, w_packed, *, block=None,
     assert k == k2
     n = 2 * n_half
     if block is None:
-        block = autotune.resolve("packed_w4_matmul", m, k, n)
+        block = autotune.resolve("packed_w4_matmul", m, k, n,
+                                 lowering="tpu-pallas", interpret=interpret)
     bm = min(block[0], max(8, m))
     bn = min(block[1], max(256, n))
     bn -= bn % 2

@@ -39,7 +39,8 @@ def quant_matmul_acc(x_q, w_q, *, block=None,
     k2, n = w_q.shape
     assert k == k2
     if block is None:
-        block = autotune.resolve("quant_matmul", m, k, n)
+        block = autotune.resolve("quant_matmul", m, k, n,
+                                 lowering="tpu-pallas", interpret=interpret)
     bm = min(block[0], max(8, m))
     bn = min(block[1], max(128, n))
     bk = min(block[2], max(128, k))

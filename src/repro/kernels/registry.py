@@ -1,0 +1,383 @@
+"""Lowering registry: pluggable per-backend kernel lowerings for packed ops.
+
+This is the paper's sec. 3.3/3.4 binding step made first-class.  SILVIA keeps
+its transformation pass target-agnostic by emitting calls to *placeholder
+functions* that a technology library later binds to concrete DSP48E2 RTL
+modules; our packed primitives (`core/prims.py`) are the placeholders, and
+this registry is the technology library.  Each packed op registers named
+lowerings:
+
+    op               lowerings (id: where it runs)
+    ---------------  -----------------------------------------------------
+    simd_add         tpu-pallas / gpu-pallas / cpu-vector / ref
+    muladd2          tpu-pallas / gpu-pallas / cpu-vector / ref
+    mul4             tpu-pallas / gpu-pallas / cpu-vector / ref
+    quant_matmul     tpu-pallas / gpu-pallas / cpu-vector / ref
+    packed_w4_matmul tpu-pallas / gpu-pallas / cpu-vector / ref
+
+Every lowering carries a **capability predicate** (backend / dtype /
+lane_bits support), a **priority** (highest legal one wins) and a stable
+string id.  `ref` (the pure-jnp oracle, `kernels/ref.py`) is always legal
+and lowest-priority: resolution can never fail.
+
+Resolution is computed once and cached per (op, backend, attrs): the env is
+read lazily on first resolve, NOT per call (the old `_use_pallas()` re-read
+`REPRO_FORCE_PALLAS` on every trace).  Overrides:
+
+* ``REPRO_LOWERING=<op>=<id>,...`` forces specific ops; ``*=<id>`` forces
+  every op (e.g. ``REPRO_LOWERING='*=ref'`` runs the whole suite on the
+  oracle).  Forcing bypasses capability predicates -- a Pallas lowering
+  forced onto a non-native backend runs in interpret mode.
+* ``REPRO_FORCE_PALLAS`` is kept as a deprecated alias: truthy maps to
+  ``*=tpu-pallas``, falsy to ``*=ref``.
+* ``with registry.force("ref"): ...`` / ``force(simd_add="cpu-vector")``
+  scopes an override to a block (tests).  Contexts nest; inner wins.
+* ``registry.invalidate()`` drops the cached resolutions AND the cached env
+  parse -- call it after mutating the env vars in-process.
+
+`fingerprint()` summarizes the active resolution; the serve-path bundle
+caches fold it into their keys so a forced-lowering change can never be
+served a stale compiled graph.
+
+Ops are dispatched with `dispatch(op, *args, **kwargs)`: a shared per-op
+**adapter** canonicalizes operands first (broadcast / stack / astype -- the
+prep that used to be duplicated inside `kernels/ops.py`'s Pallas branches),
+so every lowering sees the same canonical operand layout:
+
+    simd_add          xs, ys: k-tuples broadcast to one shape, lane dtype
+    muladd2           a, b, c: stacked (n, ...) int8
+    mul4              a: stacked (4, ...) int8; b: (...) int8
+    quant_matmul      x_q [M,K] int8, w_q [K,N] int8, scales f32
+    packed_w4_matmul  x_q [M,K] int8, w_packed [K,N//2] int8, scales f32
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+import warnings
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: the packed ops served by the registry (the paper's placeholder functions)
+OPS = ("simd_add", "muladd2", "mul4", "quant_matmul", "packed_w4_matmul")
+
+#: which lowering family runs NATIVELY on each JAX backend -- the single
+#: source for this binding (kernels/lowerings.py predicates, autotune's
+#: interpret-mode defaults, and benchmarks all derive from it)
+NATIVE_LOWERING = {"cpu": "cpu-vector", "tpu": "tpu-pallas",
+                   "gpu": "gpu-pallas"}
+
+
+def native_lowering(backend: Optional[str] = None) -> Optional[str]:
+    """The lowering id native to `backend` (default: the current one);
+    None for backends with no native family (ref still serves them)."""
+    return NATIVE_LOWERING.get(backend or jax.default_backend())
+
+
+def native_backend(lid: str) -> Optional[str]:
+    """Inverse of native_lowering: the backend a Pallas/vector family runs
+    natively on; None for backend-agnostic lowerings (ref)."""
+    for backend, native in NATIVE_LOWERING.items():
+        if native == lid:
+            return backend
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    """What a capability predicate may inspect: the JAX backend plus the
+    call-site resolution attrs (lane_bits, chain length, out dtype...)."""
+    backend: str
+    attrs: Tuple[Tuple[str, object], ...] = ()
+
+    def attr(self, key: str, default=None):
+        for k, v in self.attrs:
+            if k == key:
+                return v
+        return default
+
+
+@dataclasses.dataclass(frozen=True)
+class Lowering:
+    op: str
+    lid: str                               # stable id, e.g. "tpu-pallas"
+    fn: Callable                           # takes CANONICAL operands
+    priority: int                          # highest legal one wins
+    predicate: Optional[Callable] = None   # predicate(Env) -> bool
+    description: str = ""
+
+    def legal(self, env: Env) -> bool:
+        return self.predicate is None or bool(self.predicate(env))
+
+
+_TABLE: Dict[str, Dict[str, Lowering]] = {op: {} for op in OPS}
+_resolve_cache: Dict[tuple, Lowering] = {}
+_tls = threading.local()                           # per-thread force stack:
+_env_forced: Optional[Dict[str, str]] = None       # two engines pinned to
+_loaded = False                                    # different censuses may
+                                                   # serve from two threads
+
+
+def _force_stack() -> List[Dict[str, str]]:
+    stack = getattr(_tls, "force_stack", None)
+    if stack is None:
+        stack = _tls.force_stack = []
+    return stack
+
+
+def register(op: str, lid: str, *, priority: int,
+             predicate: Optional[Callable] = None, description: str = ""):
+    """Decorator: register `fn` as lowering `lid` of packed op `op`."""
+    if op not in _TABLE:
+        raise KeyError(f"unknown packed op {op!r} (known: {OPS})")
+
+    def deco(fn):
+        if lid in _TABLE[op]:
+            raise ValueError(f"lowering {op}:{lid} registered twice")
+        _TABLE[op][lid] = Lowering(op, lid, fn, priority, predicate,
+                                   description)
+        _resolve_cache.clear()
+        return fn
+
+    return deco
+
+
+def _ensure_loaded() -> None:
+    """Populate the table on first use (the lowering modules import the
+    kernel modules, which import autotune -- keep that out of import time
+    of this module)."""
+    global _loaded
+    if not _loaded:
+        try:
+            from repro.kernels import lowerings as _  # noqa: F401 (registers)
+        except BaseException:
+            # a partial registration must not linger: drop it so the retry
+            # re-raises the ROOT-CAUSE import error instead of a misleading
+            # "registered twice" / "no legal lowering"
+            for table in _TABLE.values():
+                table.clear()
+            _resolve_cache.clear()
+            raise
+        _loaded = True
+
+
+def ops() -> tuple:
+    return OPS
+
+
+def lowerings(op: str) -> Tuple[Lowering, ...]:
+    """All registered lowerings of `op`, highest priority first."""
+    _ensure_loaded()
+    return tuple(sorted(_TABLE[op].values(),
+                        key=lambda l: (-l.priority, l.lid)))
+
+
+def lowering_ids(op: str) -> Tuple[str, ...]:
+    return tuple(l.lid for l in lowerings(op))
+
+
+# ---------------------------------------------------------------------------
+# forced overrides: env vars (parsed once) + the force() context stack
+# ---------------------------------------------------------------------------
+
+def _parse_env() -> Dict[str, str]:
+    spec = os.environ.get("REPRO_LOWERING")
+    if spec is not None and not spec.strip():
+        spec = None   # blank (e.g. an empty CI yaml env entry) == unset,
+    if spec is not None:  # so the deprecated alias below still applies
+        forced: Dict[str, str] = {}
+        for item in spec.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            if "=" not in item:
+                raise ValueError(
+                    f"REPRO_LOWERING entry {item!r} is not <op>=<id> "
+                    f"(ops: {', '.join(OPS)} or '*')")
+            op, lid = (s.strip() for s in item.split("=", 1))
+            if op != "*" and op not in OPS:
+                raise ValueError(
+                    f"REPRO_LOWERING names unknown op {op!r} "
+                    f"(known: {', '.join(OPS)} or '*')")
+            forced[op] = lid
+        return forced
+    legacy = os.environ.get("REPRO_FORCE_PALLAS")
+    if legacy is not None:
+        warnings.warn(
+            "REPRO_FORCE_PALLAS is deprecated; use REPRO_LOWERING="
+            "'*=tpu-pallas' (or '*=ref') instead", DeprecationWarning,
+            stacklevel=2)
+        return {"*": "ref" if legacy in ("0", "false", "") else "tpu-pallas"}
+    return {}
+
+
+def _forced_id(op: str) -> Optional[str]:
+    """Forced lowering id for `op`, innermost force() layer first (a layer's
+    op-specific entry and its wildcard are equal-rank: a nested
+    force("ref") overrides an outer force(op="...")), then the env map
+    (parsed once, cached)."""
+    global _env_forced
+    if _env_forced is None:
+        _env_forced = _parse_env()
+    for layer in reversed(_force_stack()):
+        lid = layer.get(op, layer.get("*"))
+        if lid is not None:
+            return lid
+    return _env_forced.get(op, _env_forced.get("*"))
+
+
+@contextlib.contextmanager
+def force(default: Optional[str] = None, **by_op: str):
+    """Force lowering selection inside a block (tests / benchmarks).
+
+        with registry.force("ref"): ...                 # every op
+        with registry.force(simd_add="cpu-vector"): ... # one op
+
+    Forcing bypasses capability predicates; unknown ids raise at resolve
+    time.  Contexts nest (inner wins per op)."""
+    layer: Dict[str, str] = {}
+    if default is not None:
+        layer["*"] = default
+    for op, lid in by_op.items():
+        if op not in OPS:
+            raise KeyError(f"unknown packed op {op!r} (known: {OPS})")
+        layer[op] = lid
+    stack = _force_stack()
+    stack.append(layer)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def invalidate() -> None:
+    """Drop cached resolutions and the cached env parse.  Call after
+    mutating REPRO_LOWERING / REPRO_FORCE_PALLAS in-process (resolution is
+    otherwise computed once, not re-read per trace)."""
+    global _env_forced
+    _env_forced = None
+    _resolve_cache.clear()
+
+
+# ---------------------------------------------------------------------------
+# resolution
+# ---------------------------------------------------------------------------
+
+def resolve(op: str, **attrs) -> Lowering:
+    """The lowering that will serve `op` under the current (backend, env,
+    force stack), given the call-site attrs.  Cached; never fails while a
+    predicate-free lowering (ref) is registered."""
+    _ensure_loaded()
+    if op not in _TABLE:
+        raise KeyError(f"unknown packed op {op!r} (known: {OPS})")
+    backend = jax.default_backend()
+    # the force-stack CONTENTS are part of the key (not cleared on
+    # enter/exit): repeated equal force() contexts -- e.g. the serve-path
+    # bundle pinning around every dispatch -- hit the cache, and the
+    # unforced base state's entries survive any number of force blocks
+    stack_key = tuple(tuple(sorted(l.items())) for l in _force_stack())
+    key = (op, backend, tuple(sorted(attrs.items())), stack_key)
+    hit = _resolve_cache.get(key)
+    if hit is not None:
+        return hit
+    lid = _forced_id(op)
+    if lid is not None:
+        low = _TABLE[op].get(lid)
+        if low is None:
+            raise ValueError(
+                f"forced lowering {op}={lid!r} is not registered "
+                f"(registered: {', '.join(sorted(_TABLE[op]))})")
+    else:
+        env = Env(backend, key[2])
+        low = next((l for l in lowerings(op) if l.legal(env)), None)
+        if low is None:  # unreachable while ref is registered
+            raise RuntimeError(f"no legal lowering for {op} on {backend}")
+    _resolve_cache[key] = low
+    return low
+
+
+def active_lowerings() -> Dict[str, str]:
+    """Census {op: lowering id} under the current resolution -- surfaced
+    by engine/serve `cache_info()` and the benchmark BENCH JSON rows.
+
+    Resolved with DEFAULT attrs: the census (and everything derived from
+    it -- `fingerprint()`, the serve-path bundle pinning) is one id per
+    op.  A predicate that gates on call-site attrs (e.g. rejects
+    lane_bits=16) only steers per-call AUTO-selection; it cannot split one
+    op across two ids within a pinned serving bundle.  Register such a
+    case as two ops (or make the lowering handle the attr internally)
+    rather than relying on attr-dependent predicates under pinning."""
+    return {op: resolve(op).lid for op in OPS}
+
+
+def census_str() -> str:
+    """The active census as one printable line (CLI / example output)."""
+    return ", ".join(f"{op}={lid}"
+                     for op, lid in sorted(active_lowerings().items()))
+
+
+def fingerprint() -> tuple:
+    """Stable summary of the active resolution (default attrs, see
+    `active_lowerings`), for compiled-graph cache keys (launch/serve.py
+    decode bundles): two runs with different forced lowerings must never
+    share a compiled executable."""
+    return tuple(sorted(active_lowerings().items()))
+
+
+# ---------------------------------------------------------------------------
+# per-op canonicalization adapters (shared by every lowering)
+# ---------------------------------------------------------------------------
+
+def _adapt_simd_add(xs, ys, *, lane_bits: int = 8, sub: bool = False):
+    shape = jnp.broadcast_shapes(*[x.shape for x in (*xs, *ys)])
+    dt = jnp.int8 if lane_bits == 8 else jnp.int16
+    xs = tuple(jnp.broadcast_to(x, shape).astype(dt) for x in xs)
+    ys = tuple(jnp.broadcast_to(y, shape).astype(dt) for y in ys)
+    return ((xs, ys), {"lane_bits": lane_bits, "sub": sub},
+            {"lane_bits": lane_bits})
+
+
+def _adapt_muladd2(a, b, c):
+    shape = jnp.broadcast_shapes(*[x.shape for x in (*a, *b, *c)])
+    st = lambda seq: jnp.stack([jnp.broadcast_to(x, shape).astype(jnp.int8)
+                                for x in seq])
+    return ((st(a), st(b), st(c)), {}, {"n": len(a)})
+
+
+def _adapt_mul4(a, b):
+    shape = jnp.broadcast_shapes(*[x.shape for x in a], b.shape)
+    a4 = jnp.stack([jnp.broadcast_to(x, shape).astype(jnp.int8) for x in a])
+    return ((a4, jnp.broadcast_to(b, shape).astype(jnp.int8)), {}, {})
+
+
+def _adapt_quant_matmul(x_q, w_q, x_scale, w_scale, *, out_dtype=jnp.float32):
+    return ((x_q, w_q, x_scale, w_scale), {"out_dtype": out_dtype},
+            {"out_dtype": np.dtype(out_dtype).name})
+
+
+def _adapt_packed_w4_matmul(x_q, w_packed, x_scale, w_scale, *,
+                            out_dtype=jnp.float32):
+    return ((x_q, w_packed, x_scale, w_scale), {"out_dtype": out_dtype},
+            {"out_dtype": np.dtype(out_dtype).name})
+
+
+_ADAPTERS = {
+    "simd_add": _adapt_simd_add,
+    "muladd2": _adapt_muladd2,
+    "mul4": _adapt_mul4,
+    "quant_matmul": _adapt_quant_matmul,
+    "packed_w4_matmul": _adapt_packed_w4_matmul,
+}
+
+
+def dispatch(op: str, *args, **kwargs):
+    """Canonicalize operands through the op's adapter, resolve the active
+    lowering, run it.  The single entry point every packed-op call site
+    (core/prims.py, quant layers) binds through."""
+    cargs, ckwargs, attrs = _ADAPTERS[op](*args, **kwargs)
+    return resolve(op, **attrs).fn(*cargs, **ckwargs)

@@ -62,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import core as silvia
+from repro.kernels import registry
 from repro.launch import scheduler
 from repro.launch import serve
 from repro.models import lm
@@ -78,7 +79,10 @@ class _EngineBundle:
     prefill: object        # jitted bucketed full prefill (static cache_len)
 
 
-def _build_bundle(cfg, silvia_passes: str) -> _EngineBundle:
+def _build_bundle(cfg, silvia_passes: str, census: dict) -> _EngineBundle:
+    # census is REQUIRED and must be the one the caller keys the bundle
+    # LRU with -- computing it here instead would let key and pinned
+    # trace diverge
     passes = serve.SILVIA_PASS_SETS[silvia_passes]
 
     def decode_fn(p, tok, state, pos, active):
@@ -117,13 +121,17 @@ def _build_bundle(cfg, silvia_passes: str) -> _EngineBundle:
         tok0 = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
         return tok0, cache
 
-    return _EngineBundle(decode_fn, segment, chunk_step, prefill)
+    pin = lambda fn: serve._pin_lowerings(fn, census)
+    return _EngineBundle(pin(decode_fn), pin(segment), pin(chunk_step),
+                         pin(prefill))
 
 
-def _engine_bundle(cfg, silvia_passes: str) -> _EngineBundle:
+def _engine_bundle(cfg, silvia_passes: str, census: dict) -> _EngineBundle:
+    # the census keys out forced-lowering changes AND pins every (lazy)
+    # trace of the bundle callables to the resolution the key records
     return serve._DECODE_CACHE.get_or_build(
-        (cfg, silvia_passes, "engine"),
-        lambda: _build_bundle(cfg, silvia_passes))
+        (cfg, silvia_passes, tuple(sorted(census.items())), "engine"),
+        lambda: _build_bundle(cfg, silvia_passes, census))
 
 
 class ServeEngine:
@@ -199,7 +207,11 @@ class ServeEngine:
                                                 max_cache_len) \
             if self._spec.has_length_axis else ()
 
-        self._bundle = _engine_bundle(cfg, silvia_passes)
+        # pin the lowering census at construction: the bundle (and every
+        # graph compiled from it) is traced under THIS resolution, even if
+        # the process later mutates REPRO_LOWERING / uses registry.force
+        self._lowerings = registry.active_lowerings()
+        self._bundle = _engine_bundle(cfg, silvia_passes, self._lowerings)
         self._queue = scheduler.RequestQueue()
         self._cache = self._spec.init_state(n_slots, max_cache_len)
         self._tok = np.zeros((n_slots, 1), np.int32)
@@ -557,8 +569,10 @@ class ServeEngine:
 
     def cache_info(self) -> dict:
         """Compiled-graph census: engine shape keys (bounded by the bucket
-        sets), the serve-module decode-bundle LRU, and -- with SILVIA
-        passes on -- the pass pipeline's own trace-cache counters."""
+        sets), the active kernel lowering per packed op (the registry
+        resolution every compiled graph in this census was traced under),
+        the serve-module decode-bundle LRU, and -- with SILVIA passes on --
+        the pass pipeline's own trace-cache counters."""
         info = {
             "family": self.cfg.family,
             "has_length_axis": self._spec.has_length_axis,
@@ -569,6 +583,7 @@ class ServeEngine:
             "batch_buckets": list(self.batch_buckets),
             "len_buckets": list(self.len_buckets),
             "compactions": self.compactions,
+            "lowerings": dict(self._lowerings),
             "decode_bundle_lru": serve.decode_cache_info(),
         }
         if hasattr(self._bundle.decode_fn, "cache_info"):

@@ -22,7 +22,14 @@ The serving path is where the paper's technique lives end to end:
 * with ``--autotune``, the Pallas kernels (matmuls AND the SWAR units)
   search their block sizes on first use and persist the winners on disk
   (kernels/autotune.py; cache at $REPRO_AUTOTUNE_CACHE or
-  ~/.cache/repro/autotune.json).
+  ~/.cache/repro/autotune.json, keyed per lowering id + mode);
+* every packed op binds to its backend implementation through the
+  **lowering registry** (kernels/registry.py): `tpu-pallas` / `gpu-pallas`
+  / `cpu-vector` / `ref`, auto-selected per backend.
+  ``REPRO_LOWERING=<op>=<id>,...`` (or ``*=<id>``) forces specific
+  lowerings -- e.g. ``REPRO_LOWERING='*=ref'`` serves everything on the
+  pure-jnp oracle, bit-identically; the census of active lowerings is
+  printed per run and reported by the engine's ``cache_info()``.
 
 For ragged multi-request traffic, use the continuous-batching engine
 instead of calling `generate()` per batch (see launch/engine.py and
@@ -58,6 +65,7 @@ import numpy as np
 from repro import configs
 from repro import core as silvia
 from repro.kernels import ops as kops
+from repro.kernels import registry
 from repro.models import lm
 from repro.quant.qtensor import quantize_tree_for_serving
 
@@ -110,10 +118,12 @@ class LRUCache:
         self.hits = self.misses = self.evictions = 0
 
 
-# (cfg, silvia_passes[, variant]) -> decode bundle.  ModelConfig is a frozen
-# dataclass, so this composes with the SILVIA trace cache to give
-# compile-once/run-many across generate() calls; the serve engine stores its
-# segment bundles here too under a "engine" variant key.
+# (cfg, silvia_passes, lowering fingerprint[, variant]) -> decode bundle.
+# ModelConfig is a frozen dataclass, so this composes with the SILVIA trace
+# cache to give compile-once/run-many across generate() calls; the serve
+# engine stores its segment bundles here too under a "engine" variant key.
+# The registry fingerprint keys out forced-lowering changes: a bundle
+# compiled under one lowering census is never served under another.
 _DECODE_CACHE = LRUCache(
     maxsize=int(os.environ.get("REPRO_DECODE_CACHE_SIZE", "16")))
 
@@ -127,7 +137,22 @@ def decode_cache_clear() -> None:
     _DECODE_CACHE.clear()
 
 
+def _pin_lowerings(fn, census: dict):
+    """Run every call of a bundle callable under the lowering census its
+    cache key records.  jit tracing (where the registry is consulted) is
+    lazy -- a bundle may first trace, or re-trace for a new shape, long
+    after it was built, when the ambient resolution could have changed;
+    pinning makes key and trace consistent for the bundle's lifetime."""
+    @functools.wraps(fn)
+    def pinned(*args, **kwargs):
+        with registry.force(**census):
+            return fn(*args, **kwargs)
+    return pinned
+
+
 def _decode_bundle(cfg, silvia_passes: str):
+    census = registry.active_lowerings()
+
     def build():
         def decode_fn(p, tok, kv, pos):
             return lm.decode_step(p, tok, kv, pos, cfg)
@@ -150,9 +175,12 @@ def _decode_bundle(cfg, silvia_passes: str):
             return seq, kv
 
         decode_jit = jax.jit(decode_fn, donate_argnums=(2,))
-        return (decode_fn, decode_jit, fused_loop)
+        return (_pin_lowerings(decode_fn, census),
+                _pin_lowerings(decode_jit, census),
+                _pin_lowerings(fused_loop, census))
 
-    return _DECODE_CACHE.get_or_build((cfg, silvia_passes), build)
+    return _DECODE_CACHE.get_or_build(
+        (cfg, silvia_passes, tuple(sorted(census.items()))), build)
 
 
 def get_decode_step(cfg, silvia_passes: str = "off"):
@@ -224,6 +252,7 @@ def main():
         print(f"quantized weights to {args.quant}")
     prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
                                  cfg.vocab, dtype=jnp.int32)
+    print("active lowerings:", registry.census_str())
     t0 = time.time()
     toks = generate(params, prompts, cfg, gen=args.gen, cache_len=cache_len,
                     silvia_passes=args.silvia,

@@ -18,7 +18,7 @@ from typing import Any
 
 import jax.numpy as jnp
 
-from repro.kernels import ops as kops
+from repro.kernels import registry
 from repro.quant.quantize import pack_int4, quantize
 
 
@@ -54,9 +54,10 @@ def quant_linear(x, p: QuantLinearParams):
     else:
         x_q, x_s = quantize(x2, bits=8, axis=0)
         if p.fmt == "w8a8":
-            y = kops.quant_matmul(x_q, p.w, x_s, p.w_scale)
+            y = registry.dispatch("quant_matmul", x_q, p.w, x_s, p.w_scale)
         else:
-            y = kops.packed_w4_matmul(x_q, p.w, x_s, p.w_scale)
+            y = registry.dispatch("packed_w4_matmul", x_q, p.w, x_s,
+                                  p.w_scale)
     if p.bias is not None:
         y = y + p.bias
     n = y.shape[-1]

@@ -19,7 +19,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops as kops
+from repro.kernels import registry
 from repro.quant.quantize import pack_int4, quantize
 
 
@@ -63,8 +63,8 @@ def quantize_weight(w, fmt: str) -> QTensor:
 def _q2d(x2, w: QTensor):
     x_q, x_s = quantize(x2, bits=8, axis=0)
     if w.fmt == "w8a8":
-        return kops.quant_matmul(x_q, w.q, x_s, w.scale)
-    return kops.packed_w4_matmul(x_q, w.q, x_s, w.scale)
+        return registry.dispatch("quant_matmul", x_q, w.q, x_s, w.scale)
+    return registry.dispatch("packed_w4_matmul", x_q, w.q, x_s, w.scale)
 
 
 def qmatmul(x, w):

@@ -69,6 +69,38 @@ def test_swar_disabled_resolve_is_2d_default(tuner_cache, monkeypatch):
         assert autotune.resolve(kind, 8, 128) == autotune.DEFAULT_BLOCK_2D
 
 
+def test_cache_keys_separate_lowering_and_mode(tuner_cache):
+    """Regression (v1 -> v2 keys): entries tuned for one lowering or
+    execution mode must never shadow another -- interpret-mode CPU tuning
+    used to collide with real TPU timings for the same shapes."""
+    autotune.tune("quant_matmul", 8, 128, 256, candidates=((128, 128, 256),),
+                  iters=1, lowering="tpu-pallas", interpret=True)
+    # same kind+shape, different lowering / mode: all misses
+    assert autotune.lookup("quant_matmul", 8, 128, 256,
+                           lowering="gpu-pallas", interpret=True) is None
+    assert autotune.lookup("quant_matmul", 8, 128, 256,
+                           lowering="tpu-pallas", interpret=False) is None
+    assert autotune.lookup("quant_matmul", 8, 128, 256,
+                           lowering="tpu-pallas", interpret=True) == \
+        (128, 128, 256)
+    # the gpu lowering tunes into its own slot without clobbering
+    autotune.tune("quant_matmul", 8, 128, 256, candidates=((64, 64, 64),),
+                  iters=1, lowering="gpu-pallas", interpret=True)
+    assert autotune.lookup("quant_matmul", 8, 128, 256,
+                           lowering="gpu-pallas", interpret=True) == \
+        (64, 64, 64)
+    assert autotune.lookup("quant_matmul", 8, 128, 256,
+                           lowering="tpu-pallas", interpret=True) == \
+        (128, 128, 256)
+    # every persisted key carries the v2 version tag
+    assert all(k.startswith(f"v{autotune.CACHE_VERSION}:")
+               for k in autotune._load())
+    # non-Pallas lowerings have no tunable kernels: timing one would
+    # persist a mislabeled entry, so tune() refuses outright
+    with pytest.raises(ValueError, match="tunable"):
+        autotune.tune("quant_matmul", 8, 128, 256, lowering="cpu-vector")
+
+
 def test_simd_add_block_none_stays_correct(tuner_cache, rng):
     autotune.tune("simd_add", 8, 128, candidates=((64, 128),), iters=1)
     x = jnp.asarray(rng.integers(0, 1 << 32, (8, 128), dtype=np.uint32))

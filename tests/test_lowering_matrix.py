@@ -1,0 +1,272 @@
+"""Lowering parity matrix: every registered lowering of every packed op
+must match the `ref` oracle bit-exactly, across dtypes / lane_bits /
+shapes -- including the Pallas families, which run in interpret mode on
+non-native hosts.  Plus end-to-end: forced-lowering engine serving stays
+bit-identical to the static generate() path (incl. --silvia all)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref, registry
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# every lowering is exercised on this host: native ones resolve, foreign
+# Pallas ones are forced (they fall back to interpret mode)
+LOWERINGS = ("ref", "cpu-vector", "tpu-pallas", "gpu-pallas")
+SHAPES = [(7,), (64,), (8, 33)]
+
+
+def _assert_equal(got, want):
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        assert g.dtype == w.dtype
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def _simd_add_case(shape, lane_bits, sub, seed=0):
+    rng = np.random.default_rng(seed)
+    k = 32 // lane_bits
+    dt = jnp.int8 if lane_bits == 8 else jnp.int16
+    lo, hi = (-128, 128) if lane_bits == 8 else (-32768, 32768)
+    xs = [jnp.asarray(rng.integers(lo, hi, shape), dt) for _ in range(k)]
+    ys = [jnp.asarray(rng.integers(lo, hi, shape), dt) for _ in range(k)]
+    return (xs, ys), {"lane_bits": lane_bits, "sub": sub}
+
+
+def _muladd2_case(shape, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda lo, hi: [jnp.asarray(rng.integers(lo, hi, shape), jnp.int8)
+                         for _ in range(n)]
+    return (mk(-8, 8), mk(-8, 8), mk(-128, 128)), {}
+
+
+def _mul4_case(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    a = [jnp.asarray(rng.integers(-8, 8, shape), jnp.int8) for _ in range(4)]
+    b = jnp.asarray(rng.integers(-8, 8, shape), jnp.int8)
+    return (a, b), {}
+
+
+def _matmul_case(packed, mkn=(9, 96, 34), out_dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    m, k, n = mkn
+    x_q = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    x_s = jnp.asarray(rng.random((m, 1)), jnp.float32)
+    w_s = jnp.asarray(rng.random((1, n)), jnp.float32)
+    if packed:
+        w = ref.pack_w4(jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int8))
+    else:
+        w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    return (x_q, w, x_s, w_s), {"out_dtype": out_dtype}
+
+
+# ---------------------------------------------------------------------------
+# the matrix: dispatch under each forced lowering == dispatch under ref
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lid", LOWERINGS)
+@pytest.mark.parametrize("lane_bits,sub", [(8, False), (8, True),
+                                           (16, False), (16, True)])
+def test_simd_add_matrix(lid, lane_bits, sub):
+    for shape in SHAPES:
+        args, kw = _simd_add_case(shape, lane_bits, sub)
+        want = ref.simd_add_ref(args[0], args[1], sub=sub,
+                                lane_bits=lane_bits)
+        with registry.force(simd_add=lid):
+            _assert_equal(registry.dispatch("simd_add", *args, **kw), want)
+
+
+@pytest.mark.parametrize("lid", LOWERINGS)
+@pytest.mark.parametrize("n", [1, 4])
+def test_muladd2_matrix(lid, n):
+    for shape in SHAPES:
+        args, kw = _muladd2_case(shape, n=n)
+        want = ref.muladd2_ref(*args)
+        with registry.force(muladd2=lid):
+            _assert_equal(registry.dispatch("muladd2", *args, **kw), want)
+
+
+@pytest.mark.parametrize("lid", LOWERINGS)
+def test_mul4_matrix(lid):
+    for shape in SHAPES:
+        args, kw = _mul4_case(shape)
+        want = ref.mul4_ref(*args)
+        with registry.force(mul4=lid):
+            _assert_equal(registry.dispatch("mul4", *args, **kw), want)
+
+
+@pytest.mark.parametrize("lid", LOWERINGS)
+@pytest.mark.parametrize("op,out_dtype", [
+    ("quant_matmul", jnp.float32), ("quant_matmul", jnp.bfloat16),
+    ("packed_w4_matmul", jnp.float32), ("packed_w4_matmul", jnp.bfloat16),
+])
+def test_matmul_matrix(lid, op, out_dtype):
+    args, kw = _matmul_case(op == "packed_w4_matmul", out_dtype=out_dtype)
+    oracle = ref.quant_matmul_ref if op == "quant_matmul" \
+        else ref.packed_w4_matmul_ref
+    want = oracle(*args, out_dtype)
+    with registry.force(**{op: lid}):
+        got = registry.dispatch(op, *args, **kw)
+    assert got.dtype == jnp.dtype(out_dtype)
+    _assert_equal(got, want)
+
+
+def test_ops_compat_wrappers_match_oracle():
+    """kernels.ops is kept as the historical API surface; its wrappers
+    must stay exact pass-throughs to registry.dispatch."""
+    from repro.kernels import ops
+
+    with registry.force("ref"):
+        args, kw = _simd_add_case((9,), 8, False)
+        _assert_equal(ops.simd_add(*args, **kw),
+                      ref.simd_add_ref(args[0], args[1], lane_bits=8))
+        (a, b, c), _ = _muladd2_case((9,))
+        _assert_equal(ops.muladd2(a, b, c), ref.muladd2_ref(a, b, c))
+        (a4, b4), _ = _mul4_case((9,))
+        _assert_equal(ops.mul4(a4, b4), ref.mul4_ref(a4, b4))
+        qargs, _ = _matmul_case(False, mkn=(4, 32, 16))
+        _assert_equal(ops.quant_matmul(*qargs),
+                      ref.quant_matmul_ref(*qargs))
+        pargs, _ = _matmul_case(True, mkn=(4, 32, 16))
+        _assert_equal(ops.packed_w4_matmul(*pargs),
+                      ref.packed_w4_matmul_ref(*pargs))
+
+
+def test_matrix_covers_every_registered_lowering():
+    """The LOWERINGS tuple above must not silently lag the registry."""
+    for op in registry.ops():
+        assert set(registry.lowering_ids(op)) == set(LOWERINGS), op
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (where installed): random shapes/values, every lowering
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.sampled_from(SHAPES + [(257,), (3, 5, 7)]),
+           st.sampled_from([8, 16]), st.booleans(),
+           st.sampled_from(LOWERINGS), st.integers(0, 2**31))
+    def test_simd_add_matrix_property(shape, lane_bits, sub, lid, seed):
+        args, kw = _simd_add_case(shape, lane_bits, sub, seed=seed)
+        want = ref.simd_add_ref(args[0], args[1], sub=sub,
+                                lane_bits=lane_bits)
+        with registry.force(simd_add=lid):
+            _assert_equal(registry.dispatch("simd_add", *args, **kw), want)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.sampled_from(SHAPES), st.sampled_from([1, 2, 4]),
+           st.sampled_from(LOWERINGS), st.integers(0, 2**31))
+    def test_muladd2_matrix_property(shape, n, lid, seed):
+        args, kw = _muladd2_case(shape, n=n, seed=seed)
+        want = ref.muladd2_ref(*args)
+        with registry.force(muladd2=lid):
+            _assert_equal(registry.dispatch("muladd2", *args, **kw), want)
+
+
+# ---------------------------------------------------------------------------
+# end to end: forced-lowering engine == static generate(), incl. SILVIA
+# ---------------------------------------------------------------------------
+
+def _quantize_all_blocks(params, fmt):
+    """Quantize every stacked 3-D block weight, bypassing the size/width
+    floors of quantize_tree_for_serving: the reduced test configs are below
+    those floors, and these tests NEED the decode graph to actually contain
+    registry-dispatched quantized matmuls."""
+    from repro.quant.qtensor import quantize_weight
+
+    def visit(leaf):
+        if getattr(leaf, "ndim", 0) == 3 and leaf.dtype == jnp.bfloat16:
+            return quantize_weight(leaf, fmt)
+        return leaf
+
+    return jax.tree_util.tree_map(visit, params)
+
+
+@pytest.fixture(scope="module")
+def serving_setup():
+    from repro import configs
+    from repro.models import lm
+    from repro.quant.qtensor import QTensor
+
+    cfg = configs.get_reduced_config("smollm-135m")
+    params = _quantize_all_blocks(
+        lm.init_params(jax.random.PRNGKey(0), cfg, max_seq=48), "w8a8")
+    n_q = sum(isinstance(l, QTensor) for l in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, QTensor)))
+    assert n_q > 0, "decode graph would contain no packed-op dispatches"
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab))
+    return cfg, params, prompts
+
+
+@pytest.fixture
+def forced_env(monkeypatch):
+    """Force a lowering through the real REPRO_LOWERING env path (with the
+    explicit invalidate the satellite task mandates), and restore after."""
+    def _force(spec):
+        monkeypatch.setenv("REPRO_LOWERING", spec)
+        registry.invalidate()
+
+    yield _force
+    monkeypatch.delenv("REPRO_LOWERING", raising=False)
+    registry.invalidate()
+
+
+@pytest.mark.parametrize("lid,silvia_passes",
+                         [("ref", "all"), ("cpu-vector", "all"),
+                          ("cpu-vector", "off")])
+def test_engine_matches_static_under_forced_lowering(serving_setup,
+                                                     forced_env, lid,
+                                                     silvia_passes):
+    from repro.launch import scheduler, serve
+    from repro.launch.engine import ServeEngine
+
+    cfg, params, prompts = serving_setup
+    forced_env(f"*={lid}")
+    static = np.asarray(serve.generate(
+        params, jnp.asarray(prompts), cfg, gen=4, cache_len=16,
+        silvia_passes=silvia_passes))
+    eng = ServeEngine(params, cfg, n_slots=2, max_cache_len=32,
+                      segment_len=2, silvia_passes=silvia_passes)
+    assert eng.cache_info()["lowerings"] == \
+        {op: lid for op in registry.ops()}
+    reqs = [scheduler.Request(rid=i, prompt=prompts[i], max_new_tokens=4)
+            for i in range(2)]
+    out = eng.run(reqs)
+    for i in range(2):
+        np.testing.assert_array_equal(out[i], static[i])
+
+
+def test_decode_graph_resolves_through_registry(serving_setup, forced_env):
+    """Tracing the decode step must actually consult the registry (i.e.
+    the graph contains packed-op dispatches): a bogus forced id fails at
+    trace time, it cannot be silently ignored."""
+    from repro.launch import serve
+
+    cfg, params, prompts = serving_setup
+    forced_env("quant_matmul=no-such-lowering")
+    with pytest.raises(ValueError, match="registered"):
+        serve.generate(params, jnp.asarray(prompts), cfg, gen=2,
+                       cache_len=16)
+
+
+def test_generate_identical_across_lowerings(serving_setup, forced_env):
+    """Greedy tokens must be LOWERING-independent: the whole registry is
+    bit-exact, so swapping the forced lowering cannot move one token."""
+    from repro.launch import serve
+
+    cfg, params, prompts = serving_setup
+    outs = {}
+    for lid in ("ref", "cpu-vector"):
+        forced_env(f"*={lid}")
+        outs[lid] = np.asarray(serve.generate(
+            params, jnp.asarray(prompts), cfg, gen=4, cache_len=16))
+    np.testing.assert_array_equal(outs["ref"], outs["cpu-vector"])

@@ -1,0 +1,214 @@
+"""Lowering registry: resolution order, capability gating, forced
+overrides (env + context), cached resolution with explicit invalidation,
+and the compiled-bundle fingerprint."""
+import warnings
+
+import jax
+import pytest
+
+from repro.kernels import registry
+
+
+@pytest.fixture
+def clean_registry(monkeypatch):
+    """Isolate resolution state: no env overrides, empty caches; restore
+    the table and drop cached resolutions afterwards."""
+    monkeypatch.delenv("REPRO_LOWERING", raising=False)
+    monkeypatch.delenv("REPRO_FORCE_PALLAS", raising=False)
+    registry.invalidate()
+    registry._ensure_loaded()   # snapshot the POPULATED table
+    saved = {op: dict(registry._TABLE[op]) for op in registry.ops()}
+    yield
+    for op in registry.ops():
+        registry._TABLE[op].clear()
+        registry._TABLE[op].update(saved[op])
+    registry.invalidate()
+
+
+# ---------------------------------------------------------------------------
+# table + default resolution
+# ---------------------------------------------------------------------------
+
+def test_every_op_registers_all_four_families(clean_registry):
+    for op in registry.ops():
+        ids = set(registry.lowering_ids(op))
+        assert ids == {"tpu-pallas", "gpu-pallas", "cpu-vector", "ref"}, op
+
+
+def test_default_resolution_is_backend_gated(clean_registry):
+    backend = jax.default_backend()
+    census = registry.active_lowerings()
+    assert set(census) == set(registry.ops())
+    # Pallas families auto-select only on their native backends; on CPU
+    # the oracle stays the conservative auto-default (cpu-vector sits
+    # below ref until measurements justify flipping -- lowerings.py)
+    want = {"tpu": "tpu-pallas", "gpu": "gpu-pallas"}.get(backend, "ref")
+    assert all(lid == want for lid in census.values()), census
+
+
+def test_priority_and_predicate_order(clean_registry):
+    # a higher-priority lowering whose predicate fails must be skipped...
+    registry.register("simd_add", "never", priority=99,
+                      predicate=lambda env: False)(lambda *a, **k: None)
+    assert registry.resolve("simd_add").lid != "never"
+    # ...and one whose predicate passes must win
+    registry.register("simd_add", "always", priority=100)(
+        lambda *a, **k: None)
+    registry.invalidate()
+    assert registry.resolve("simd_add").lid == "always"
+
+
+def test_predicate_sees_resolution_attrs(clean_registry):
+    seen = {}
+
+    def pred(env):
+        seen["lane_bits"] = env.attr("lane_bits")
+        return False
+
+    registry.register("simd_add", "probe", priority=99, predicate=pred)(
+        lambda *a, **k: None)
+    registry.resolve("simd_add", lane_bits=16)
+    assert seen["lane_bits"] == 16
+
+
+def test_unknown_op_and_duplicate_registration(clean_registry):
+    with pytest.raises(KeyError):
+        registry.resolve("not_an_op")
+    with pytest.raises(KeyError):
+        registry.register("not_an_op", "x", priority=0)(lambda: None)
+    with pytest.raises(ValueError, match="twice"):
+        registry.register("simd_add", "ref", priority=0)(lambda: None)
+
+
+# ---------------------------------------------------------------------------
+# forcing: context manager + env vars
+# ---------------------------------------------------------------------------
+
+def test_force_context_scopes_and_nests(clean_registry):
+    base = registry.resolve("simd_add").lid
+    with registry.force("ref"):
+        assert registry.resolve("simd_add").lid == "ref"
+        assert registry.resolve("quant_matmul").lid == "ref"
+        with registry.force(simd_add="tpu-pallas"):   # inner wins per op
+            assert registry.resolve("simd_add").lid == "tpu-pallas"
+            assert registry.resolve("quant_matmul").lid == "ref"
+        assert registry.resolve("simd_add").lid == "ref"
+    assert registry.resolve("simd_add").lid == base
+
+
+def test_inner_wildcard_force_overrides_outer_per_op(clean_registry):
+    """Regression: an inner force("ref") must beat an OUTER per-op force --
+    layers are consulted innermost-first, not flattened into one dict."""
+    with registry.force(simd_add="tpu-pallas"):
+        with registry.force("ref"):
+            assert registry.resolve("simd_add").lid == "ref"
+        assert registry.resolve("simd_add").lid == "tpu-pallas"
+
+
+def test_force_context_overrides_env(clean_registry, monkeypatch):
+    monkeypatch.setenv("REPRO_LOWERING", "*=tpu-pallas")
+    registry.invalidate()
+    with registry.force(simd_add="ref"):
+        assert registry.resolve("simd_add").lid == "ref"
+        assert registry.resolve("mul4").lid == "tpu-pallas"  # env still on
+    assert registry.resolve("simd_add").lid == "tpu-pallas"
+
+
+def test_force_bypasses_predicates(clean_registry):
+    # tpu-pallas is not legal on CPU/GPU hosts, but forcing selects it
+    # anyway (it runs in interpret mode)
+    with registry.force(mul4="tpu-pallas"):
+        assert registry.resolve("mul4").lid == "tpu-pallas"
+
+
+def test_force_rejects_unknown_names(clean_registry):
+    with pytest.raises(KeyError):
+        with registry.force(not_an_op="ref"):
+            pass
+    with registry.force(simd_add="no-such-lowering"):
+        with pytest.raises(ValueError, match="registered"):
+            registry.resolve("simd_add")
+
+
+def test_env_spec_per_op_and_wildcard(clean_registry, monkeypatch):
+    monkeypatch.setenv("REPRO_LOWERING", "simd_add=ref, mul4=tpu-pallas")
+    registry.invalidate()
+    assert registry.resolve("simd_add").lid == "ref"
+    assert registry.resolve("mul4").lid == "tpu-pallas"
+    assert registry.resolve("muladd2").lid == \
+        registry.active_lowerings()["muladd2"]  # untouched ops auto-resolve
+    monkeypatch.setenv("REPRO_LOWERING", "*=ref,quant_matmul=cpu-vector")
+    registry.invalidate()
+    assert registry.resolve("simd_add").lid == "ref"
+    assert registry.resolve("quant_matmul").lid == "cpu-vector"
+
+
+def test_env_spec_rejects_garbage(clean_registry, monkeypatch):
+    monkeypatch.setenv("REPRO_LOWERING", "simd_add")
+    registry.invalidate()
+    with pytest.raises(ValueError, match="not <op>=<id>"):
+        registry.resolve("simd_add")
+    monkeypatch.setenv("REPRO_LOWERING", "frobnicate=ref")
+    registry.invalidate()
+    with pytest.raises(ValueError, match="unknown op"):
+        registry.resolve("simd_add")
+
+
+def test_force_pallas_alias_deprecated(clean_registry, monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    registry.invalidate()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert registry.resolve("simd_add").lid == "tpu-pallas"
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "0")
+    registry.invalidate()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert registry.resolve("simd_add").lid == "ref"
+    # REPRO_LOWERING wins over the alias when both are set
+    monkeypatch.setenv("REPRO_LOWERING", "*=cpu-vector")
+    registry.invalidate()
+    assert registry.resolve("simd_add").lid == "cpu-vector"
+    # ...but a BLANK REPRO_LOWERING counts as unset, not as "force
+    # nothing": the alias (still "0" -> ref here) must apply
+    monkeypatch.setenv("REPRO_LOWERING", "  ")
+    registry.invalidate()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert registry.resolve("simd_add").lid == "ref"
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    registry.invalidate()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert registry.resolve("simd_add").lid == "tpu-pallas"
+
+
+# ---------------------------------------------------------------------------
+# cached resolution + invalidation (the old per-trace env read is gone)
+# ---------------------------------------------------------------------------
+
+def test_resolution_is_cached_until_invalidate(clean_registry, monkeypatch):
+    before = registry.resolve("simd_add").lid
+    # mutating the env WITHOUT invalidate must not change resolution:
+    # the env is read once, not per call
+    monkeypatch.setenv("REPRO_LOWERING", "*=ref")
+    assert registry.resolve("simd_add").lid == before
+    registry.invalidate()
+    assert registry.resolve("simd_add").lid == "ref"
+
+
+def test_fingerprint_tracks_forcing(clean_registry):
+    base = registry.fingerprint()
+    assert base == tuple(sorted(registry.active_lowerings().items()))
+    # force an id that is NOT the auto-default on any backend's census
+    with registry.force("cpu-vector"):
+        forced = registry.fingerprint()
+        assert forced != base
+        assert dict(forced) == {op: "cpu-vector" for op in registry.ops()}
+    assert registry.fingerprint() == base
+
+
+def test_dispatch_rejects_unknown_op(clean_registry):
+    with pytest.raises(KeyError):
+        registry.dispatch("not_an_op")
