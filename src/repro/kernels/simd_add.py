@@ -22,15 +22,8 @@ from repro.kernels import autotune, common
 
 
 def _swar_kernel(x_ref, y_ref, o_ref, *, lane_bits: int, sub: bool):
-    x = x_ref[...]
-    y = y_ref[...]
-    h = jnp.uint32(common.lane_mask_high(lane_bits))
-    nh = jnp.uint32(~common.lane_mask_high(lane_bits) & 0xFFFFFFFF)
-    if sub:
-        s = ((x | h) - (y & nh)) ^ ((x ^ ~y) & h)
-    else:
-        s = ((x & nh) + (y & nh)) ^ ((x ^ y) & h)
-    o_ref[...] = s
+    o_ref[...] = common.swar_add_sub(x_ref[...], y_ref[...], lane_bits,
+                                     sub=sub)
 
 
 def simd_add_packed(x_packed, y_packed, *, lane_bits: int = 8,
@@ -50,7 +43,8 @@ def simd_add_packed(x_packed, y_packed, *, lane_bits: int = 8,
     y2, _, _ = common.pad_to_2d(y_packed, common.TILE_32)
     rows, cols = x2.shape
     if block is None:
-        block = autotune.resolve("simd_add", rows, cols)
+        block = autotune.resolve("simd_add", rows, cols,
+                                 lowering="tpu-pallas", interpret=interpret)
     bm = min(block[0], rows)
     bn = min(block[1], cols)
     # round block to tile multiples
@@ -75,17 +69,11 @@ def simd_add_packed(x_packed, y_packed, *, lane_bits: int = 8,
 
 def simd_add(xs, ys, *, lane_bits: int = 8, sub: bool = False,
              interpret: bool | None = None):
-    """Unpacked-operand entry point: packs k narrow tensors into SWAR words,
-    runs the packed kernel, unpacks.  k = 32 // lane_bits; shorter tuples are
-    padded with zero lanes (a partially-filled DSP, paper sec. 3.2)."""
-    n_lanes = 32 // lane_bits
-    assert len(xs) == len(ys) <= n_lanes
-    k = len(xs)
-    zero = jnp.zeros_like(xs[0])
-    xs = list(xs) + [zero] * (n_lanes - k)
-    ys = list(ys) + [zero] * (n_lanes - k)
-    xw = common.pack_lanes(xs, lane_bits)
-    yw = common.pack_lanes(ys, lane_bits)
-    sw = simd_add_packed(xw, yw, lane_bits=lane_bits, sub=sub,
-                         interpret=interpret)
-    return common.unpack_lanes(sw, lane_bits)[:k]
+    """Unpacked-operand entry point: packs k narrow tensors into SWAR words
+    (common.simd_add_lanes -- shorter tuples pad with zero lanes, a
+    partially-filled DSP, paper sec. 3.2), runs the packed kernel,
+    unpacks."""
+    return common.simd_add_lanes(
+        lambda xw, yw: simd_add_packed(xw, yw, lane_bits=lane_bits,
+                                       sub=sub, interpret=interpret),
+        xs, ys, lane_bits)
