@@ -1,6 +1,9 @@
 """Shared benchmark utilities: timing, op-density reporting, CSV rows."""
 from __future__ import annotations
 
+import json
+import os
+import pathlib
 import time
 
 import jax
@@ -8,6 +11,19 @@ import numpy as np
 
 from repro import core as silvia
 from repro.core import opcount
+
+
+def write_bench_json(result: dict, name: str) -> None:
+    """Persist a benchmark's BENCH payload to $BENCH_DIR/<name>.json (CI
+    uploads the directory as a workflow artifact and feeds it to
+    scripts/bench_compare.py).  No-op when BENCH_DIR is unset, so local
+    runs keep printing only."""
+    bench_dir = os.environ.get("BENCH_DIR")
+    if not bench_dir:
+        return
+    path = pathlib.Path(bench_dir) / f"{name}.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(result, indent=2, sort_keys=True) + "\n")
 
 
 def time_fn(fn, *args, iters: int = 5) -> float:

@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref, registry
+from benchmarks import common
+from repro.kernels import ref, registry, timings
 
 
 def _native_lowerings() -> list:
@@ -94,10 +95,11 @@ def _resolution_overhead(iters: int = 200) -> dict:
 
 
 def run(smoke: bool = False, interpret: bool = False,
-        iters: int = 20) -> dict:
+        iters: int = 20, record: bool = False) -> dict:
     lids = _native_lowerings()
     if interpret:
         lids += [l for l in ("tpu-pallas", "gpu-pallas") if l not in lids]
+    backend = jax.default_backend()
     rows = []
     for op, ((args, kwargs), n_ops) in _cases(smoke).items():
         for lid in lids:
@@ -106,9 +108,17 @@ def run(smoke: bool = False, interpret: bool = False,
                 "op": op, "lowering": lid, "us_per_call": round(us, 1),
                 "gops_s": round(n_ops / us * 1e-3, 2),
             })
+            if record and not smoke:
+                # persist serving-scale timings only: smoke shapes are
+                # the noise PR 4 refused to flip priorities on
+                timings.record(backend, op, lid, us, shape="full",
+                               iters=iters)
+    if record and not smoke:
+        registry.invalidate()   # stored winners now steer CPU defaults
     return {
-        "config": {"backend": jax.default_backend(), "smoke": smoke,
-                   "iters": iters, "lowerings_timed": lids},
+        "config": {"backend": backend, "smoke": smoke,
+                   "iters": iters, "lowerings_timed": lids,
+                   "recorded": bool(record and not smoke)},
         "active_lowerings": registry.active_lowerings(),
         "resolution": _resolution_overhead(),
         "rows": rows,
@@ -122,11 +132,18 @@ def main():
     ap.add_argument("--interpret", action="store_true",
                     help="also time foreign Pallas families in interpret "
                          "mode (liveness check, not a perf number)")
+    ap.add_argument("--record", action="store_true",
+                    help="persist per-(op, lowering) timings to the "
+                         "kernels/timings.py cache so registry auto-"
+                         "defaults use measurements (full shapes only; "
+                         "--smoke runs never record)")
     ap.add_argument("--iters", type=int, default=None)
     args = ap.parse_args()
     iters = args.iters or (5 if args.smoke else 20)
-    result = run(smoke=args.smoke, interpret=args.interpret, iters=iters)
+    result = run(smoke=args.smoke, interpret=args.interpret, iters=iters,
+                 record=args.record)
     print(json.dumps(result, indent=2))
+    common.write_bench_json(result, "lowering_matrix")
     print("BENCH " + json.dumps(result))
 
 

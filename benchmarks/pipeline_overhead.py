@@ -20,6 +20,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from repro import configs
 from repro import core as silvia
 from repro.launch import serve
@@ -113,6 +114,7 @@ def main():
     args = ap.parse_args()
     result = run(smoke=args.smoke)
     print(json.dumps(result, indent=2))
+    common.write_bench_json(result, "pipeline_overhead")
     print("BENCH " + json.dumps(result))
 
 

@@ -8,35 +8,49 @@ and pays one compiled graph per distinct batch shape.  The gap between the
 two is the serving analogue of the DSP under-utilization the paper's passes
 reclaim.
 
-`--family {dense,ssm,hybrid}` picks the model family served through the
-SAME engine (the slot-state registry, models/slot_state.py); ssm/hybrid
+`--family {dense,ssm,hybrid,encdec}` picks the model family served through
+the SAME engine (the slot-state registry, models/slot_state.py); ssm/hybrid
 rows demonstrate the family-agnostic slot layer (ssm: constant-size pages,
-batch-bucket-only graph growth).
+batch-bucket-only graph growth); encdec rows carry per-request encoder
+features through the same segment loop.
+
+`--mesh DxM` (e.g. `--mesh 8x1`, `--mesh 2x4`; a bare `8` means `8x1`)
+serves the ENGINE row on a ("data", "model") mesh via the sharded
+shard_map bundles (DESIGN.md sec. 7) -- on CI this runs under
+XLA_FLAGS=--xla_force_host_platform_device_count=8.  The static row stays
+single-device, so the speedup column also reflects the device-packing win;
+outputs remain bit-identical either way (tests/test_sharded_serve.py).
 
 Emits one machine-readable line:  BENCH {json}  with the family, aggregate
 tok/s, p50/p99 per-request latency, mean slot occupancy, compiled-graph
-counts (the engine's is bounded by its bucket sets), and the **active
-lowering census** {op: lowering id} from kernels/registry.py -- every
-throughput row is attributable to the kernel lowerings it ran on
-(REPRO_LOWERING=... rows are distinguishable from auto-resolved ones).
+counts (the engine's is bounded by its bucket sets), the **active lowering
+census** {op: lowering id} from kernels/registry.py, the packed-op
+dispatch census (nonzero: the quantized path really bound packed matmuls),
+and the mesh layout when sharded.  With $BENCH_DIR set the payload is also
+written to $BENCH_DIR/serve_throughput_<family>[_<mesh>].json for the CI
+artifact + scripts/bench_compare.py regression gate.
 
     PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
-        [--family {dense,ssm,hybrid}] [--silvia {off,add,muladd,all}]
-        [--n-requests N] [--rate R]
+        [--family {dense,ssm,hybrid,encdec}] [--silvia {off,add,muladd,all}]
+        [--mesh DxM] [--n-requests N] [--rate R]
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from repro import configs
+from repro.distributed import context as dctx
 from repro.kernels import registry
 from repro.launch import scheduler, serve
 from repro.launch.engine import ServeEngine
+from repro.launch.mesh import make_mesh
 from repro.models import lm
 from repro.quant.qtensor import quantize_tree_for_serving
 
@@ -58,13 +72,30 @@ def _summary(requests, elapsed: float) -> dict:
     }
 
 
+def parse_mesh(spec: str):
+    """"8x1" / "2x4" -> (data, model); a bare "8" means data-only."""
+    parts = spec.lower().split("x")
+    if len(parts) == 1:
+        parts = [parts[0], "1"]
+    if len(parts) != 2 or not all(p.isdigit() for p in parts):
+        raise ValueError(f"--mesh wants DxM (e.g. 2x4), got {spec!r}")
+    return int(parts[0]), int(parts[1])
+
+
 def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
                segment_len, silvia_passes, prefill_chunk=None,
-               warmup=True) -> dict:
-    eng = ServeEngine(params, cfg, n_slots=n_slots,
-                      max_cache_len=max_cache_len, segment_len=segment_len,
-                      silvia_passes=silvia_passes,
-                      prefill_chunk=prefill_chunk)
+               enc_len=None, mesh=None, warmup=True) -> dict:
+    kw = {"enc_len": enc_len} if enc_len is not None else {}
+    scope = contextlib.nullcontext()
+    if mesh is not None:
+        mesh_obj = make_mesh(tuple(mesh), ("data", "model"))
+        scope = dctx.mesh_scope(mesh_obj, ("data",), "model")
+    with scope:
+        eng = ServeEngine(params, cfg, n_slots=n_slots,
+                          max_cache_len=max_cache_len,
+                          segment_len=segment_len,
+                          silvia_passes=silvia_passes,
+                          prefill_chunk=prefill_chunk, **kw)
     if warmup:
         # startup pre-compilation over the advertised traffic profile --
         # the static path below gets the matching per-shape warm pass
@@ -83,6 +114,8 @@ def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
     out["has_length_axis"] = info["has_length_axis"]
     out["compactions"] = info["compactions"]
     out["lowerings"] = info["lowerings"]
+    if "mesh" in info:
+        out["mesh"] = info["mesh"]
     if "silvia" in info:
         out["silvia_trace"] = {k: info["silvia"][k]
                                for k in ("trace_hits", "trace_misses")}
@@ -90,10 +123,11 @@ def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
 
 
 def run_static(params, cfg, requests, *, n_slots, silvia_passes,
-               warmup=True) -> dict:
+               enc_len=None, warmup=True) -> dict:
     """PR-1 static path: batches of n_slots in arrival order; each batch
     waits until its last request arrives, pads every prompt/gen to the
     batch max, and decodes gen_max steps for every row."""
+    encdec = cfg.family == "encdec"
     reqs = sorted(requests, key=lambda r: (r.arrival_time, r.rid))
     batches = [reqs[i:i + n_slots] for i in range(0, len(reqs), n_slots)]
     shapes = set()
@@ -101,9 +135,25 @@ def run_static(params, cfg, requests, *, n_slots, silvia_passes,
         pl = max(r.prompt_len for r in batch)
         gen = max(r.max_new_tokens for r in batch)
         shapes.add((len(batch), pl, gen, pl + gen))
+
+    def inputs_for(batch, pl):
+        prompts = np.zeros((len(batch), pl), np.int32)
+        for i, r in enumerate(batch):
+            prompts[i, :r.prompt_len] = r.prompt
+        if not encdec:
+            return jnp.asarray(prompts)
+        feats = np.stack([np.asarray(r.features, np.float32)
+                          for r in batch])
+        return (jnp.asarray(feats).astype(jnp.dtype(cfg.dtype)),
+                jnp.asarray(prompts))
+
     if warmup:
         for (b, pl, gen, cl) in sorted(shapes):
             prompts = jnp.zeros((b, pl), jnp.int32)
+            if encdec:
+                feats = jnp.zeros((b, enc_len, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+                prompts = (feats, prompts)
             jax.block_until_ready(serve.generate(
                 params, prompts, cfg, gen=gen, cache_len=cl,
                 silvia_passes=silvia_passes))
@@ -113,10 +163,7 @@ def run_static(params, cfg, requests, *, n_slots, silvia_passes,
         clock.wait_until(max(r.arrival_time for r in batch))
         pl = max(r.prompt_len for r in batch)
         gen = max(r.max_new_tokens for r in batch)
-        prompts = np.zeros((len(batch), pl), np.int32)
-        for i, r in enumerate(batch):
-            prompts[i, :r.prompt_len] = r.prompt
-        toks = serve.generate(params, jnp.asarray(prompts), cfg, gen=gen,
+        toks = serve.generate(params, inputs_for(batch, pl), cfg, gen=gen,
                               cache_len=pl + gen,
                               silvia_passes=silvia_passes)
         toks = np.asarray(toks)
@@ -131,12 +178,12 @@ def run_static(params, cfg, requests, *, n_slots, silvia_passes,
 
 
 FAMILY_ARCHS = {"dense": "smollm-135m", "ssm": "mamba2-2.7b",
-                "hybrid": "jamba-v0.1-52b"}
+                "hybrid": "jamba-v0.1-52b", "encdec": "whisper-small"}
 
 
 def run(smoke: bool = False, silvia_passes: str = "off",
         n_requests: int | None = None, rate: float | None = None,
-        family: str = "dense") -> dict:
+        family: str = "dense", mesh=None) -> dict:
     arch = FAMILY_ARCHS[family]
     cfg = configs.get_reduced_config(arch)
     if smoke:
@@ -149,14 +196,30 @@ def run(smoke: bool = False, silvia_passes: str = "off",
         rate = rate or 20.0
         n_slots, seg, max_len = 4, 8, 128
         prompt_lens, gen_lens = (8, 16, 32, 48), (2, 8, 16, 32)
+    if mesh is not None:
+        # the slot axis must split over the data shards
+        n_slots = max(n_slots, mesh[0])
+    enc_len = None
+    if family == "encdec":
+        enc_len = 16 if smoke else 32
     rng = jax.random.PRNGKey(0)
+    registry.reset_dispatch_counts()
+    # force=True: reduced-config weights all sit under the production
+    # quantization floors -- without it these "quantized" rows serve
+    # bf16 graphs with zero packed-matmul dispatches (ROADMAP no-op)
     params = quantize_tree_for_serving(
-        lm.init_params(rng, cfg, max_seq=max_len + 8), "w8a8")
+        lm.init_params(rng, cfg, max_seq=max_len + 8), "w8a8", force=True)
 
     def traffic():
-        return scheduler.synthetic_traffic(
+        reqs = scheduler.synthetic_traffic(
             seed=0, n_requests=n_req, rate=rate,
             prompt_lens=prompt_lens, gen_lens=gen_lens, vocab=cfg.vocab)
+        if family == "encdec":
+            frng = np.random.default_rng(1)
+            for r in reqs:
+                r.features = frng.standard_normal(
+                    (enc_len, cfg.d_model)).astype(np.float32)
+        return reqs
 
     result = {
         "config": {"arch": f"{arch}(reduced)", "family": family,
@@ -164,21 +227,27 @@ def run(smoke: bool = False, silvia_passes: str = "off",
                    "rate_req_s": rate, "n_slots": n_slots,
                    "segment_len": seg, "max_cache_len": max_len,
                    "prompt_lens": list(prompt_lens),
-                   "gen_lens": list(gen_lens), "quant": "w8a8",
-                   "silvia": silvia_passes,
+                   "gen_lens": list(gen_lens), "quant": "w8a8(forced)",
+                   "silvia": silvia_passes, "enc_len": enc_len,
+                   "mesh": None if mesh is None else f"{mesh[0]}x{mesh[1]}",
+                   "devices": jax.device_count(),
                    "backend": jax.default_backend(),
                    "lowerings": registry.active_lowerings()},
         "engine": run_engine(params, cfg, traffic(), n_slots=n_slots,
                              max_cache_len=max_len, segment_len=seg,
-                             silvia_passes=silvia_passes),
+                             silvia_passes=silvia_passes, enc_len=enc_len,
+                             mesh=mesh),
         "static": run_static(params, cfg, traffic(), n_slots=n_slots,
-                             silvia_passes=silvia_passes),
+                             silvia_passes=silvia_passes, enc_len=enc_len),
     }
     result["speedup_tok_s"] = round(
         result["engine"]["agg_tok_s"]
         / max(result["static"]["agg_tok_s"], 1e-9), 2)
     result["graphs_bounded"] = (result["engine"]["graphs"]
                                 <= result["engine"]["graph_bound"])
+    # packed-op dispatch census: nonzero quant_matmul proves the forced
+    # quantization actually bound packed GEMMs into the compiled graphs
+    result["packed_dispatches"] = registry.dispatch_counts()
     return result
 
 
@@ -192,14 +261,28 @@ def main():
                          "slot-state registry")
     ap.add_argument("--silvia", default="off",
                     choices=list(serve.SILVIA_PASS_SETS))
+    ap.add_argument("--mesh", default=None,
+                    help="serve the engine row sharded over a DxM "
+                         "(data, model) mesh, e.g. 8x1 or 2x4 (needs that "
+                         "many visible devices)")
     ap.add_argument("--n-requests", type=int, default=None)
     ap.add_argument("--rate", type=float, default=None,
                     help="Poisson arrival rate (req/s)")
     args = ap.parse_args()
+    mesh = parse_mesh(args.mesh) if args.mesh else None
+    if mesh is not None and mesh[0] * mesh[1] > jax.device_count():
+        raise SystemExit(
+            f"--mesh {args.mesh} needs {mesh[0] * mesh[1]} devices, have "
+            f"{jax.device_count()} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N to simulate)")
     result = run(smoke=args.smoke, silvia_passes=args.silvia,
                  n_requests=args.n_requests, rate=args.rate,
-                 family=args.family)
+                 family=args.family, mesh=mesh)
     print(json.dumps(result, indent=2))
+    name = f"serve_throughput_{args.family}"
+    if args.mesh:
+        name += f"_{args.mesh}"
+    common.write_bench_json(result, name)
     print("BENCH " + json.dumps(result))
 
 

@@ -1,0 +1,95 @@
+"""CI benchmark regression gate: current BENCH JSON vs committed baselines.
+
+    python scripts/bench_compare.py --results $BENCH_DIR \
+        [--baselines benchmarks/baselines] [--threshold 0.30]
+
+For every baseline file `benchmarks/baselines/<name>.json` that has a
+matching `<name>.json` in --results, the comparable metrics are checked:
+
+* serve_throughput_*:  engine.agg_tok_s   (higher is better)
+* pipeline_overhead:   decode.fused_tok_s (higher is better, if present)
+
+The job FAILS (exit 1) when a current metric drops more than
+`--threshold` (default 30%) below its committed baseline -- the AutoDSE
+lesson applied to CI: regressions are caught by stored measurements, not
+eyeballed.  Missing counterparts (a benchmark not run in this job, a new
+benchmark without a baseline yet) are reported and skipped, never failed:
+absolute smoke throughput is host-dependent, so baselines are committed
+from the same runner class that CI uses and refreshed deliberately by
+copying the artifact JSON over benchmarks/baselines/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _metric(name: str, payload: dict):
+    """(dotted path, value) for the file's comparable metric, or None."""
+    if name.startswith("serve_throughput"):
+        try:
+            return "engine.agg_tok_s", float(payload["engine"]["agg_tok_s"])
+        except (KeyError, TypeError):
+            return None
+    if name.startswith("pipeline_overhead"):
+        try:
+            return ("decode.fused_tok_s",
+                    float(payload["decode"]["fused_tok_s"]))
+        except (KeyError, TypeError):
+            return None
+    return None
+
+
+def compare(baselines: pathlib.Path, results: pathlib.Path,
+            threshold: float) -> int:
+    failures = []
+    checked = skipped = 0
+    for base_file in sorted(baselines.glob("*.json")):
+        name = base_file.stem
+        cur_file = results / base_file.name
+        if not cur_file.exists():
+            print(f"SKIP {name}: no result file in this job")
+            skipped += 1
+            continue
+        base = _metric(name, json.loads(base_file.read_text()))
+        cur = _metric(name, json.loads(cur_file.read_text()))
+        if base is None or cur is None:
+            print(f"SKIP {name}: no comparable metric")
+            skipped += 1
+            continue
+        path, base_v = base
+        _, cur_v = cur
+        floor = base_v * (1.0 - threshold)
+        status = "OK" if cur_v >= floor else "FAIL"
+        print(f"{status} {name}: {path} current={cur_v:.1f} "
+              f"baseline={base_v:.1f} floor={floor:.1f}")
+        checked += 1
+        if cur_v < floor:
+            failures.append(name)
+    print(f"bench_compare: {checked} checked, {skipped} skipped, "
+          f"{len(failures)} failed (threshold {threshold:.0%})")
+    if failures:
+        print("regressed benchmarks:", ", ".join(failures))
+        return 1
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", required=True,
+                    help="directory of this job's BENCH JSON files "
+                         "($BENCH_DIR)")
+    ap.add_argument("--baselines", default="benchmarks/baselines",
+                    help="directory of committed baseline JSON files")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="maximum tolerated fractional regression "
+                         "(default 0.30 = 30%%)")
+    args = ap.parse_args()
+    return compare(pathlib.Path(args.baselines), pathlib.Path(args.results),
+                   args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

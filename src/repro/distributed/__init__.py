@@ -1,5 +1,9 @@
-"""Distribution substrate: sharding rules, fault tolerance, elasticity."""
+"""Distribution substrate: sharding rules, fault tolerance, elasticity,
+and the serve-engine mesh/TP helpers (slot-state specs, exact gathers)."""
 from repro.distributed.sharding import (batch_pspec, cache_pspecs,
-                                        param_pspecs, to_shardings)
+                                        dp_spec_entry, gather_sharded,
+                                        param_pspecs, slot_state_pspecs,
+                                        to_shardings)
 
-__all__ = ["batch_pspec", "cache_pspecs", "param_pspecs", "to_shardings"]
+__all__ = ["batch_pspec", "cache_pspecs", "dp_spec_entry", "gather_sharded",
+           "param_pspecs", "slot_state_pspecs", "to_shardings"]

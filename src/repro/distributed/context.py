@@ -1,12 +1,28 @@
 """Ambient distribution context.
 
 Model code is mesh-agnostic; the launcher can install a mesh + axis roles
-here to unlock explicitly-collective code paths (shard_map MoE dispatch).
-Tracing-time only: the context must be active while jit/lower traces.
+here to unlock explicitly-collective code paths (shard_map MoE dispatch,
+and the serve engine's sharded segment fn).  Tracing-time only: the
+context must be active while jit/lower traces.
+
+Two scopes live here:
+
+* `mesh_scope(mesh, dp_axes, model_axis)` -- the launcher-level roles.
+  Train reads it for the shard_map MoE dispatch; `ServeEngine` reads it at
+  CONSTRUCTION to build its sharded decode/prefill bundles (the scope only
+  needs to be active while the engine is constructed -- the engine
+  captures the mesh and re-enters its own tracing scopes lazily).
+* `tp_scope(axis, size, attn, ssm)` -- serve-time tensor parallelism,
+  entered INSIDE the engine's shard_map body while it traces.  Attention
+  and SSM mixers read it (`tp_current()`) to compute only their local
+  heads and all_gather before the merged projections; the per-family
+  flags say which mixers actually shard (head counts must divide the
+  axis; see models/slot_state.py tp_plan).
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 from typing import Optional
 
 _MESH = None
@@ -30,3 +46,41 @@ def current():
     if _MESH is None:
         return None
     return _MESH, _DP_AXES, _MODEL_AXIS
+
+
+@dataclasses.dataclass(frozen=True)
+class TPContext:
+    """Serve-time tensor parallelism over one mesh axis (inside shard_map).
+
+    axis:  mesh axis name the head/state dims are sharded over.
+    size:  number of shards on that axis.
+    attn:  attention mixers compute local heads (wq/wk/wv column slices,
+           all_gather of head outputs before wo) -- requires
+           n_heads % size == 0 and n_kv % size == 0.
+    ssm:   SSD mixers keep their [B, H, P, N] state local and all_gather
+           the per-head outputs before the gated norm -- requires
+           ssm_heads % size == 0 (projections/conv stay replicated).
+    """
+    axis: str
+    size: int
+    attn: bool = False
+    ssm: bool = False
+
+
+_TP: Optional[TPContext] = None
+
+
+@contextlib.contextmanager
+def tp_scope(axis: str, size: int, *, attn: bool = False, ssm: bool = False):
+    global _TP
+    prev = _TP
+    _TP = TPContext(axis, size, attn, ssm) if (attn or ssm) and size > 1 \
+        else None
+    try:
+        yield
+    finally:
+        _TP = prev
+
+
+def tp_current() -> Optional[TPContext]:
+    return _TP

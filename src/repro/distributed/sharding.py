@@ -193,3 +193,67 @@ def to_shardings(specs, mesh):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), specs,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# serve-engine slot state + shard_map helpers
+# ---------------------------------------------------------------------------
+
+def dp_spec_entry(dp_axes):
+    """The PartitionSpec entry for a dim sharded over the dp axes."""
+    dp = tuple(dp_axes)
+    return dp if len(dp) > 1 else (dp[0] if dp else None)
+
+
+def slot_state_pspecs(treedef, slot_axes, tp_axes, dp_axes,
+                      model_axis=None):
+    """PartitionSpecs for the engine's slot-state pytree, from the probed
+    per-leaf axis descriptors alone (tree_flatten order): slot axis over
+    the dp axes, tp axis (models/slot_state.py tp_axes_for) over
+    `model_axis`; entries of None leave the leaf replicated over model.
+    Divisibility is the engine's invariant (scheduler.validate_slot_
+    sharding + the tp_plan head checks), so no shape sanitizing here."""
+    dp = dp_spec_entry(dp_axes)
+    specs = []
+    for ba, ta in zip(slot_axes, tp_axes):
+        n = 1 + max(ba, ta if ta is not None else 0)
+        dims = [None] * n
+        dims[ba] = dp
+        if ta is not None and model_axis is not None:
+            dims[ta] = model_axis
+        specs.append(P(*dims))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def gather_sharded(tree, specs):
+    """Inside a shard_map body: all_gather every sharded dim of `tree`
+    back to the full (replicated) value.
+
+    This is the explicit FSDP/ZeRO-3 gather of the serve path: weights
+    live sharded in HBM under the `param_pspecs` suffix rules and are
+    reconstructed ONCE per segment dispatch.  Gathering is pure data
+    movement -- the reconstructed leaf is bitwise the original -- which is
+    what keeps the sharded engine exact where a GSPMD-partitioned
+    contraction (partial dots + float psum) would not be.
+
+    A dim sharded over a tuple of axes P(("a","b")) is laid out a-major,
+    so gathering the minor axis first rebuilds each a-block contiguously,
+    then the major gather rebuilds the dim."""
+    flat_t, treedef = jax.tree_util.tree_flatten(tree)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    if len(flat_t) != len(flat_s):
+        raise ValueError(
+            f"gather_sharded: {len(flat_t)} leaves vs {len(flat_s)} specs")
+
+    def gather(leaf, spec):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+            for ax in reversed(tuple(axes)):
+                leaf = jax.lax.all_gather(leaf, ax, axis=dim, tiled=True)
+        return leaf
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [gather(l, s) for l, s in zip(flat_t, flat_s)])

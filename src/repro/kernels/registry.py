@@ -256,12 +256,15 @@ def force(default: Optional[str] = None, **by_op: str):
 
 
 def invalidate() -> None:
-    """Drop cached resolutions and the cached env parse.  Call after
-    mutating REPRO_LOWERING / REPRO_FORCE_PALLAS in-process (resolution is
+    """Drop cached resolutions, the cached env parse AND the stored
+    lowering-timings cache.  Call after mutating REPRO_LOWERING /
+    REPRO_FORCE_PALLAS / REPRO_LOWERING_TIMINGS in-process (resolution is
     otherwise computed once, not re-read per trace)."""
     global _env_forced
     _env_forced = None
     _resolve_cache.clear()
+    from repro.kernels import timings
+    timings.invalidate()
 
 
 # ---------------------------------------------------------------------------
@@ -293,11 +296,38 @@ def resolve(op: str, **attrs) -> Lowering:
                 f"forced lowering {op}={lid!r} is not registered "
                 f"(registered: {', '.join(sorted(_TABLE[op]))})")
     else:
-        env = Env(backend, key[2])
-        low = next((l for l in lowerings(op) if l.legal(env)), None)
-        if low is None:  # unreachable while ref is registered
-            raise RuntimeError(f"no legal lowering for {op} on {backend}")
+        low = _stored_default(op, backend)
+        if low is None:
+            env = Env(backend, key[2])
+            low = next((l for l in lowerings(op) if l.legal(env)), None)
+            if low is None:  # unreachable while ref is registered
+                raise RuntimeError(f"no legal lowering for {op} on "
+                                   f"{backend}")
     _resolve_cache[key] = low
+    return low
+
+
+def _stored_default(op: str, backend: str) -> Optional[Lowering]:
+    """Measured per-op auto-default (kernels/timings.py): on backends
+    with no native Pallas family (CPU), the stored fastest lowering from
+    a `benchmarks/lowering_matrix.py --record` run on THIS host wins over
+    the guessed priorities; no record -> None (priorities decide, i.e.
+    `ref` stays the CPU default).  Backends with native Pallas kernels
+    keep their priority ordering -- a stored CPU-side timing must never
+    shadow a real accelerator kernel."""
+    if backend != "cpu":
+        return None
+    from repro.kernels import timings
+    lid = timings.stored_best(op, backend)
+    if lid is None:
+        return None
+    low = _TABLE[op].get(lid)
+    if low is None:
+        return None   # stale record for an unregistered lowering
+    # a Pallas family recorded on CPU would run in interpret mode --
+    # never an auto-default, only reachable by forcing
+    if native_backend(lid) not in (None, backend):
+        return None
     return low
 
 
@@ -375,9 +405,27 @@ _ADAPTERS = {
 }
 
 
+#: trace-time packed-op dispatch census {op: count}.  Counts TRACES, not
+#: executions (a jitted graph dispatches once per compilation) -- enough
+#: to assert that a "quantized" serve path actually binds packed matmuls
+#: instead of silently serving bf16 graphs (the reduced-config
+#: quantization no-op this census was added to catch).
+_DISPATCH_COUNTS: Dict[str, int] = {op: 0 for op in OPS}
+
+
+def dispatch_counts() -> Dict[str, int]:
+    return dict(_DISPATCH_COUNTS)
+
+
+def reset_dispatch_counts() -> None:
+    for op in OPS:
+        _DISPATCH_COUNTS[op] = 0
+
+
 def dispatch(op: str, *args, **kwargs):
     """Canonicalize operands through the op's adapter, resolve the active
     lowering, run it.  The single entry point every packed-op call site
     (core/prims.py, quant layers) binds through."""
+    _DISPATCH_COUNTS[op] += 1
     cargs, ckwargs, attrs = _ADAPTERS[op](*args, **kwargs)
     return resolve(op, **attrs).fn(*cargs, **ckwargs)

@@ -1,0 +1,111 @@
+"""Persistent per-op lowering timings: measured CPU auto-defaults.
+
+PR 4 left the CPU auto-default on the `ref` oracle because per-op winners
+flipped with shape and host noise across dev-host runs of
+benchmarks/lowering_matrix.py.  This module is the AutoDSE-style answer
+(measure, persist, then decide): `benchmarks/lowering_matrix.py --record`
+persists its per-(op, lowering) timings here, and `registry.resolve()`
+consults the stored winner as the per-op auto-default on backends with no
+native Pallas family (CPU).  No record -> `ref` remains the fallback, so
+behaviour is bit-for-bit the PR-4 default until a host has actually
+measured itself.
+
+Schema (one JSON object, merged on save like kernels/autotune.py):
+
+    {"v1:<backend>:<op>": {"<lowering id>": {"us": float, "shape": str,
+                                             "iters": int}}}
+
+Entries keep the BEST (minimum) us per lowering id across recordings.
+Cache location: $REPRO_LOWERING_TIMINGS, else
+~/.cache/repro/lowering_timings.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+from typing import Dict, Optional
+
+CACHE_VERSION = 1
+
+_cache: Optional[dict] = None
+
+
+def cache_path() -> pathlib.Path:
+    env = os.environ.get("REPRO_LOWERING_TIMINGS")
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path.home() / ".cache" / "repro" / "lowering_timings.json"
+
+
+def _key(backend: str, op: str) -> str:
+    return f"v{CACHE_VERSION}:{backend}:{op}"
+
+
+def _load() -> dict:
+    global _cache
+    if _cache is None:
+        try:
+            _cache = json.loads(cache_path().read_text())
+        except (OSError, ValueError):
+            _cache = {}
+    return _cache
+
+
+def invalidate() -> None:
+    """Drop the in-process cache (re-read the file on next lookup).
+    `registry.invalidate()` calls this so env-var mutation in tests picks
+    up a fresh timings file."""
+    global _cache
+    _cache = None
+
+
+def _save() -> None:
+    global _cache
+    path = cache_path()
+    try:
+        try:
+            on_disk = json.loads(path.read_text())
+        except (OSError, ValueError):
+            on_disk = {}
+        # merge-on-save, keeping the faster record on collision
+        merged = dict(on_disk)
+        for key, by_lid in (_cache or {}).items():
+            slot = dict(merged.get(key, {}))
+            for lid, ent in by_lid.items():
+                old = slot.get(lid)
+                if old is None or ent["us"] < old["us"]:
+                    slot[lid] = ent
+            merged[key] = slot
+        _cache = merged
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(merged, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS: recording still works in-process
+
+
+def record(backend: str, op: str, lid: str, us: float, *,
+           shape: str = "", iters: int = 0) -> None:
+    """Persist one measurement (keeps the minimum us per lowering); a
+    slower-than-stored timing changes nothing and skips the rewrite."""
+    cache = _load()
+    slot = cache.setdefault(_key(backend, op), {})
+    old = slot.get(lid)
+    if old is not None and us >= old["us"]:
+        return
+    slot[lid] = {"us": round(float(us), 2), "shape": shape,
+                 "iters": int(iters)}
+    _save()
+
+
+def stored_best(op: str, backend: str) -> Optional[str]:
+    """Lowering id with the fastest stored timing for (op, backend), or
+    None when this host has never recorded one."""
+    by_lid: Dict[str, dict] = _load().get(_key(backend, op), {})
+    if not by_lid:
+        return None
+    return min(by_lid.items(), key=lambda kv: kv[1]["us"])[0]

@@ -37,6 +37,18 @@ ever-changing request mix:
 * **slot compaction** -- when evictions leave holes that inflate the live
   batch bucket, surviving slots are remapped downward on admission
   (`permute_slots`), shrinking the next segment's compiled shape.
+* **mesh-aware serving** -- constructed under a `distributed.context.
+  mesh_scope`, the engine shard_maps its segment/prefill/chunk fns over
+  the mesh (DESIGN.md sec. 7): slot axes shard over the dp axes (request
+  packing over devices), probed head/state axes shard over the model
+  axis when the config's head counts divide it (slot_state.tp_plan),
+  and weights enter under the distributed/sharding.py suffix rules and
+  are all_gathered whole at dispatch entry (explicit ZeRO-3 gather).
+  Every collective is an exact concat -- no partitioned float
+  contraction -- so sharded outputs stay BIT-IDENTICAL to the
+  single-device engine (tests/test_sharded_serve.py).  The bucket grid
+  is unchanged (the dp size only becomes the batch-bucket floor), so
+  the compiled-graph census bound carries over per shard.
 * decode bundles live in launch/serve.py's LRU decode cache, keyed
   (cfg, pass set, "engine"); greedy outputs are token-identical to the
   static `serve.generate()` path, including with SILVIA passes on
@@ -53,6 +65,7 @@ nor batch COMPOSITION can perturb an active row by even one ULP.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Dict, List, Optional, Sequence
@@ -60,8 +73,12 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro import core as silvia
+from repro.distributed import context as dctx
+from repro.distributed import sharding as dshard
 from repro.kernels import registry
 from repro.launch import scheduler
 from repro.launch import serve
@@ -79,7 +96,80 @@ class _EngineBundle:
     prefill: object        # jitted bucketed full prefill (static cache_len)
 
 
-def _build_bundle(cfg, silvia_passes: str, census: dict) -> _EngineBundle:
+@dataclasses.dataclass(frozen=True)
+class _MeshPlan:
+    """How a mesh-aware engine lays the serve state over the device mesh
+    (built at engine construction from the ambient `mesh_scope`):
+
+    * slot axes of every state leaf, tokens, positions and active masks
+      shard over the dp axes -- request packing over devices, the direct
+      analogue of SILVIA packing independent narrow ops onto one wide DSP;
+    * head/state axes (the probed `tp_axes`) shard over `model_axis` when
+      the config's head counts divide it (slot_state.tp_plan);
+    * weights enter the shard_map body under the `param_pspecs` suffix
+      rules and are all_gathered back whole at segment entry (explicit
+      ZeRO-3 gather -- pure data movement, bitwise-exact), then
+      attention/SSM re-slice their local head columns.
+
+    Every collective is a gather (exact concat); no float contraction is
+    ever partitioned, which is what keeps sharded decode BIT-IDENTICAL to
+    the single-device engine.
+    """
+    mesh: object
+    dp_axes: tuple
+    model_axis: str
+    tp: slot_state.TPPlan
+    slot_axes: tuple           # per-leaf, tree_flatten order
+    tp_axes: tuple
+    state_treedef: object
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def dp(self):
+        return dshard.dp_spec_entry(self.dp_axes)
+
+    def state_specs(self):
+        return dshard.slot_state_pspecs(
+            self.state_treedef, self.slot_axes, self.tp_axes, self.dp_axes,
+            self.model_axis if self.tp.active else None)
+
+    @property
+    def key(self) -> tuple:
+        """Hashable mesh-topology fingerprint for the decode-bundle LRU:
+        two engines may share a compiled bundle only when mesh shape,
+        axis roles, device assignment and the tp plan all agree."""
+        m = self.mesh
+        return (tuple((n, m.shape[n]) for n in m.axis_names),
+                tuple(int(d.id) for d in m.devices.flat),
+                self.dp_axes, self.model_axis,
+                self.tp.size, self.tp.attn, self.tp.ssm,
+                self.slot_axes, self.tp_axes)
+
+
+def _mesh_plan(cfg, spec: slot_state.SlotStateSpec,
+               init_kwargs: dict) -> Optional[_MeshPlan]:
+    ctx = dctx.current()
+    if ctx is None:
+        return None
+    mesh, dp_axes, model_axis = ctx
+    m = mesh.shape[model_axis] if model_axis in mesh.axis_names else 1
+    plan = slot_state.tp_plan(cfg, m)
+    tp_axes = slot_state.tp_axes_for(cfg, m, **init_kwargs) if plan.active \
+        else (None,) * len(spec.batch_axes)
+    return _MeshPlan(mesh=mesh, dp_axes=tuple(dp_axes),
+                     model_axis=model_axis, tp=plan,
+                     slot_axes=spec.batch_axes, tp_axes=tp_axes,
+                     state_treedef=spec.treedef)
+
+
+def _build_bundle(cfg, silvia_passes: str, census: dict,
+                  plan: Optional[_MeshPlan] = None) -> _EngineBundle:
     # census is REQUIRED and must be the one the caller keys the bundle
     # LRU with -- computing it here instead would let key and pinned
     # trace diverge
@@ -91,8 +181,7 @@ def _build_bundle(cfg, silvia_passes: str, census: dict) -> _EngineBundle:
     if passes:
         decode_fn = silvia.optimize(decode_fn, passes)
 
-    @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(2,))
-    def segment(params, tok, cache, pos, active, n_steps):
+    def decode_scan(params, tok, cache, pos, active, n_steps):
         def step(carry, _):
             tok, st, pos = carry
             logits, st = decode_fn(params, tok, st, pos, active)
@@ -111,27 +200,112 @@ def _build_bundle(cfg, silvia_passes: str, census: dict) -> _EngineBundle:
                                               None, length=n_steps)
         return seq[:, :, 0], tok, cache, pos
 
-    chunk_step = jax.jit(decode_fn, donate_argnums=(2,))
-
-    @functools.partial(jax.jit, static_argnums=(3,))
-    def prefill(params, prompts, last_positions, cache_len):
+    def prefill_fn(params, prompts, last_positions, cache_len):
         # prompts: [B,S] tokens, or (features, [B,S]) for encdec
         logits, cache = lm.prefill(params, prompts, cfg, cache_len=cache_len,
                                    last_positions=last_positions)
         tok0 = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
         return tok0, cache
 
+    if plan is None:
+        @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(2,))
+        def segment(params, tok, cache, pos, active, n_steps):
+            return decode_scan(params, tok, cache, pos, active, n_steps)
+
+        chunk_step = jax.jit(decode_fn, donate_argnums=(2,))
+        prefill = functools.partial(jax.jit, static_argnums=(3,))(prefill_fn)
+    else:
+        segment, chunk_step, prefill = _shard_bundle_fns(
+            plan, decode_scan, decode_fn, prefill_fn)
+
     pin = lambda fn: serve._pin_lowerings(fn, census)
     return _EngineBundle(pin(decode_fn), pin(segment), pin(chunk_step),
                          pin(prefill))
 
 
-def _engine_bundle(cfg, silvia_passes: str, census: dict) -> _EngineBundle:
+def _shard_bundle_fns(plan: _MeshPlan, decode_scan, decode_fn, prefill_fn):
+    """shard_map'd segment / chunk-step / prefill over plan.mesh.
+
+    Inside each body the single-device functions run UNMODIFIED on this
+    shard's slot slice; the tp scope makes attention/SSM mixers keep only
+    their local head block (distributed/context.py).  Weights arrive
+    sharded per the param_pspecs suffix rules and are gathered whole
+    first -- the explicit FSDP gather, after which every contraction sees
+    bitwise the single-device operands."""
+    mesh, dp = plan.mesh, plan.dp
+    sspecs = plan.state_specs()
+
+    def tp_ctx():
+        if plan.tp.active:
+            return dctx.tp_scope(plan.model_axis, plan.tp.size,
+                                 attn=plan.tp.attn, ssm=plan.tp.ssm)
+        return contextlib.nullcontext()
+
+    def pspecs_for(params):
+        # at trace time, from the traced arg tree: the bundle stays lazy
+        # over params structure (plain vs QTensor leaves), like jit
+        return dshard.param_pspecs(params, mesh, None)
+
+    @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(2,))
+    def segment(params, tok, cache, pos, active, n_steps):
+        pspecs = pspecs_for(params)
+
+        def body(params, tok, cache, pos, active):
+            with tp_ctx():
+                params = dshard.gather_sharded(params, pspecs)
+                return decode_scan(params, tok, cache, pos, active, n_steps)
+
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(pspecs, P(dp), sspecs, P(dp), P(dp)),
+                       out_specs=(P(None, dp), P(dp), sspecs, P(dp)),
+                       check_rep=False)
+        return fn(params, tok, cache, pos, active)
+
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def chunk_step(params, tok, cache, pos, active):
+        pspecs = pspecs_for(params)
+
+        def body(params, tok, cache, pos, active):
+            with tp_ctx():
+                params = dshard.gather_sharded(params, pspecs)
+                return decode_fn(params, tok, cache, pos, active)
+
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(pspecs, P(dp), sspecs, P(dp), P(dp)),
+                       out_specs=(P(dp), sspecs),
+                       check_rep=False)
+        return fn(params, tok, cache, pos, active)
+
+    @functools.partial(jax.jit, static_argnums=(3,))
+    def prefill(params, prompts, last_positions, cache_len):
+        pspecs = pspecs_for(params)
+        prspecs = jax.tree_util.tree_map(lambda _: P(dp), prompts)
+
+        def body(params, prompts, last_positions):
+            with tp_ctx():
+                params = dshard.gather_sharded(params, pspecs)
+                return prefill_fn(params, prompts, last_positions,
+                                  cache_len)
+
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(pspecs, prspecs, P(dp)),
+                       out_specs=(P(dp), sspecs),
+                       check_rep=False)
+        return fn(params, prompts, last_positions)
+
+    return segment, chunk_step, prefill
+
+
+def _engine_bundle(cfg, silvia_passes: str, census: dict,
+                   plan: Optional[_MeshPlan] = None) -> _EngineBundle:
     # the census keys out forced-lowering changes AND pins every (lazy)
-    # trace of the bundle callables to the resolution the key records
+    # trace of the bundle callables to the resolution the key records;
+    # the mesh-plan key keys out topology changes -- a bundle compiled
+    # for one mesh (or tp plan) is never served under another
     return serve._DECODE_CACHE.get_or_build(
-        (cfg, silvia_passes, tuple(sorted(census.items())), "engine"),
-        lambda: _build_bundle(cfg, silvia_passes, census))
+        (cfg, silvia_passes, tuple(sorted(census.items())), "engine",
+         None if plan is None else plan.key),
+        lambda: _build_bundle(cfg, silvia_passes, census, plan))
 
 
 class ServeEngine:
@@ -198,6 +372,19 @@ class ServeEngine:
         self.enc_len = enc_len
         self.min_len_bucket = min(min_len_bucket, max_cache_len)
         self.min_batch_bucket = min(min_batch_bucket, n_slots)
+        # mesh-aware serving: an ambient mesh_scope at construction makes
+        # the engine shard its decode/prefill bundles over the mesh
+        # (module docstring; _MeshPlan).  The slot axis needs to split
+        # evenly over the dp shards, so the dp size becomes the batch
+        # bucket floor (admission included)
+        self._plan = _mesh_plan(cfg, self._spec, init_kwargs)
+        self._adm_floor = 1
+        if self._plan is not None:
+            dp = self._plan.dp_size
+            scheduler.validate_slot_sharding(n_slots, dp)
+            self.min_batch_bucket = min(max(self.min_batch_bucket, dp),
+                                        n_slots)
+            self._adm_floor = min(dp, n_slots)
         # smallest prompt bucket: chunked prefill needs chunk-aligned
         # buckets; full prefill just avoids degenerate tiny graphs
         self.min_prompt_bucket = min(prefill_chunk or 8, max_cache_len)
@@ -211,9 +398,21 @@ class ServeEngine:
         # graph compiled from it) is traced under THIS resolution, even if
         # the process later mutates REPRO_LOWERING / uses registry.force
         self._lowerings = registry.active_lowerings()
-        self._bundle = _engine_bundle(cfg, silvia_passes, self._lowerings)
+        self._bundle = _engine_bundle(cfg, silvia_passes, self._lowerings,
+                                      self._plan)
         self._queue = scheduler.RequestQueue()
         self._cache = self._spec.init_state(n_slots, max_cache_len)
+        if self._plan is not None:
+            # place weights HBM-sharded per the suffix rules and the slot
+            # state per the plan up front; the bundle's out_specs keep
+            # both layouts steady across segments
+            mesh = self._plan.mesh
+            self.params = jax.device_put(
+                params, dshard.to_shardings(
+                    dshard.param_pspecs(params, mesh, cfg), mesh))
+            self._cache = jax.device_put(
+                self._cache, dshard.to_shardings(self._plan.state_specs(),
+                                                 mesh))
         self._tok = np.zeros((n_slots, 1), np.int32)
         self._pos = np.zeros((n_slots,), np.int32)
         self._active = np.zeros((n_slots,), bool)
@@ -337,7 +536,8 @@ class ServeEngine:
     def _admit_group(self, group: List[scheduler.Request], sb: int,
                      free: List[int], now: float) -> None:
         g = len(group)
-        bb = scheduler.bucket_pow2(g, minimum=1, maximum=self.n_slots)
+        bb = scheduler.bucket_pow2(g, minimum=self._adm_floor,
+                                   maximum=self.n_slots)
         t_pre = self._prefill_bucket(sb)
         inputs, lens = self._prefill_inputs(group, bb, sb)
         if self.prefill_chunk is None:
@@ -501,7 +701,7 @@ class ServeEngine:
 
     @property
     def admission_batch_buckets(self) -> tuple:
-        return scheduler.bucket_set(1, self.n_slots)
+        return scheduler.bucket_set(self._adm_floor, self.n_slots)
 
     def graph_bound(self) -> int:
         """Upper bound on distinct compiled graphs: the segment bucket grid
@@ -586,6 +786,17 @@ class ServeEngine:
             "lowerings": dict(self._lowerings),
             "decode_bundle_lru": serve.decode_cache_info(),
         }
+        if self._plan is not None:
+            p = self._plan
+            info["mesh"] = {
+                "shape": {n: p.mesh.shape[n] for n in p.mesh.axis_names},
+                "dp_axes": list(p.dp_axes),
+                "model_axis": p.model_axis,
+                "dp_size": p.dp_size,
+                "tp_size": p.tp.size,
+                "tp_attn": p.tp.attn,
+                "tp_ssm": p.tp.ssm,
+            }
         if hasattr(self._bundle.decode_fn, "cache_info"):
             info["silvia"] = self._bundle.decode_fn.cache_info()
         return info

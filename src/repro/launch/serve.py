@@ -48,7 +48,11 @@ the same bucketed segment loop::
 
 The engine shares this module's decode-bundle cache: one compiled segment
 graph per (batch bucket, cache-length bucket) serves an ever-changing
-request mix, token-identically to `generate()`.
+request mix, token-identically to `generate()`.  Constructed under a
+`repro.distributed.context.mesh_scope`, the engine additionally shard_maps
+those segment graphs over the mesh (slot axes over the data axes, probed
+head/state axes over "model") while staying bit-identical -- see
+launch/engine.py and DESIGN.md sec. 7.
 """
 from __future__ import annotations
 
@@ -225,6 +229,11 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--quant", default="w8a8",
                     choices=["bf16", "w8a8", "w4a8"])
+    ap.add_argument("--quant-force", action="store_true",
+                    help="drop the quantization size floors (reduced "
+                         "configs sit entirely under them; without this, "
+                         "--reduced --quant w8a8 serves bf16 graphs with "
+                         "zero packed-matmul dispatches)")
     ap.add_argument("--silvia", default="off",
                     choices=list(SILVIA_PASS_SETS))
     ap.add_argument("--autotune", action="store_true",
@@ -248,8 +257,10 @@ def main():
     cache_len = args.prompt_len + args.gen
     params = lm.init_params(rng, cfg, max_seq=cache_len + 8)
     if args.quant != "bf16":
-        params = quantize_tree_for_serving(params, args.quant)
-        print(f"quantized weights to {args.quant}")
+        params = quantize_tree_for_serving(params, args.quant,
+                                           force=args.quant_force)
+        print(f"quantized weights to {args.quant}"
+              + (" (forced floors)" if args.quant_force else ""))
     prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
                                  cfg.vocab, dtype=jnp.int32)
     print("active lowerings:", registry.census_str())

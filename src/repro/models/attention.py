@@ -17,9 +17,48 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import context as dctx
 from repro.models import common
-from repro.quant.qtensor import qmatmul
+from repro.quant.qtensor import QTensor, qmatmul
 from repro.models.config import ModelConfig
+
+
+def _attn_tp():
+    """Active serve-time tensor-parallel context for attention (set inside
+    the engine's shard_map body; see distributed/context.py).  When
+    active, projections compute only this shard's heads and the head
+    outputs are all_gathered before the merged wo matmul -- collectives
+    are exact concats, never partial-sum reductions, so sharded decode
+    stays bit-identical to the single-device path."""
+    tp = dctx.tp_current()
+    return tp if tp is not None and tp.attn else None
+
+
+def _tp_slice_cols(w, j, width: int):
+    """Columns [j*width, (j+1)*width) of a dense or QTensor weight
+    [..., K, N] (w4a8 packs two logical columns per stored word)."""
+    if isinstance(w, QTensor):
+        if w.fmt == "w4a8":
+            assert width % 2 == 0, (width, "w4a8 needs even column slices")
+            q = jax.lax.dynamic_slice_in_dim(
+                w.q, j * (width // 2), width // 2, axis=w.q.ndim - 1)
+        else:
+            q = jax.lax.dynamic_slice_in_dim(w.q, j * width, width,
+                                             axis=w.q.ndim - 1)
+        scale = jax.lax.dynamic_slice_in_dim(w.scale, j * width, width,
+                                             axis=w.scale.ndim - 1)
+        return QTensor(q, scale, w.fmt)
+    return jax.lax.dynamic_slice_in_dim(w, j * width, width, axis=w.ndim - 1)
+
+
+def _tp_gather_heads(out):
+    """all_gather the per-shard head outputs along the feature axis before
+    the merged output projection (tiled: shard-major concat == the
+    original head order, since shards own contiguous head blocks)."""
+    tp = _attn_tp()
+    if tp is None:
+        return out
+    return jax.lax.all_gather(out, tp.axis, axis=out.ndim - 1, tiled=True)
 
 
 def init_attn(rng, cfg: ModelConfig, cross: bool = False):
@@ -40,28 +79,51 @@ def init_attn(rng, cfg: ModelConfig, cross: bool = False):
 
 
 def _project_q(p, x, cfg: ModelConfig):
-    q = qmatmul(x, p["wq"])
-    if "bq" in p:
-        q = q + p["bq"]
+    tp = _attn_tp()
+    wq, bq = p["wq"], p.get("bq")
+    h = cfg.n_heads
+    if tp is not None:
+        h = cfg.n_heads // tp.size
+        j = jax.lax.axis_index(tp.axis)
+        wq = _tp_slice_cols(wq, j, h * cfg.head_dim)
+        if bq is not None:
+            bq = jax.lax.dynamic_slice_in_dim(bq, j * h * cfg.head_dim,
+                                              h * cfg.head_dim, axis=0)
+    q = qmatmul(x, wq)
+    if bq is not None:
+        q = q + bq
     b, s, _ = q.shape
-    return q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    return q.reshape(b, s, h, cfg.head_dim)
 
 
 def _project_kv(p, x, cfg: ModelConfig):
-    k = qmatmul(x, p["wk"])
-    v = qmatmul(x, p["wv"])
-    if "bk" in p:
-        k, v = k + p["bk"], v + p["bv"]
+    tp = _attn_tp()
+    wk, wv = p["wk"], p["wv"]
+    bk, bv = p.get("bk"), p.get("bv")
+    kv = cfg.n_kv
+    if tp is not None:
+        kv = cfg.n_kv // tp.size
+        j = jax.lax.axis_index(tp.axis)
+        wk = _tp_slice_cols(wk, j, kv * cfg.head_dim)
+        wv = _tp_slice_cols(wv, j, kv * cfg.head_dim)
+        if bk is not None:
+            sl = lambda b_: jax.lax.dynamic_slice_in_dim(
+                b_, j * kv * cfg.head_dim, kv * cfg.head_dim, axis=0)
+            bk, bv = sl(bk), sl(bv)
+    k = qmatmul(x, wk)
+    v = qmatmul(x, wv)
+    if bk is not None:
+        k, v = k + bk, v + bv
     b, s, _ = k.shape
-    return (k.reshape(b, s, cfg.n_kv, cfg.head_dim),
-            v.reshape(b, s, cfg.n_kv, cfg.head_dim))
+    return (k.reshape(b, s, kv, cfg.head_dim),
+            v.reshape(b, s, kv, cfg.head_dim))
 
 
 def _gqa_scores(q, k, cfg: ModelConfig):
     """q: [B,S,H,D], k: [B,T,KV,D] -> scores [B,KV,G,S,T] (G = H//KV)."""
     b, s, h, d = q.shape
-    kv = cfg.n_kv
-    g = h // kv
+    kv = k.shape[2]     # shape-driven, not cfg.n_kv: under serve TP the
+    g = h // kv         # projections carry only this shard's head block
     q = q.reshape(b, s, kv, g, d)
     return jnp.einsum("bskgd,btkd->bkgst", q, k,
                       preferred_element_type=jnp.float32)
@@ -139,8 +201,8 @@ def attn_full(p, x, cfg: ModelConfig, positions=None, causal: bool = True,
     srcpos = positions if positions.ndim == 2 else positions[0]
     if (cfg.attn_q_chunk and causal and s > cfg.attn_q_chunk
             and s % cfg.attn_q_chunk == 0):
-        out = qmatmul(_attn_chunked(q, k, v, srcpos, cfg, cfg.attn_q_chunk),
-                      p["wo"])
+        out = qmatmul(_tp_gather_heads(
+            _attn_chunked(q, k, v, srcpos, cfg, cfg.attn_q_chunk)), p["wo"])
         if not return_cache:
             return out
         s_max = cache_len or s
@@ -157,7 +219,7 @@ def attn_full(p, x, cfg: ModelConfig, positions=None, causal: bool = True,
         mask = srcpos[:, None, None, :, None] >= srcpos[:, None, None, None, :]
         scores = jnp.where(mask, scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = qmatmul(_gqa_out(w, v, cfg), p["wo"])
+    out = qmatmul(_tp_gather_heads(_gqa_out(w, v, cfg)), p["wo"])
     if not return_cache:
         return out
     s_max = cache_len or s
@@ -222,7 +284,7 @@ def attn_decode(p, x_t, cache, pos, cfg: ModelConfig, active=None):
     valid = jnp.arange(t)[None, None, :] <= qpos[:, :, None]   # [B,C,T]
     scores = jnp.where(valid[:, None, None, :, :], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1).astype(x_t.dtype)
-    out = qmatmul(_gqa_out(w, v, cfg), p["wo"])
+    out = qmatmul(_tp_gather_heads(_gqa_out(w, v, cfg)), p["wo"])
     return out, new_cache
 
 
@@ -237,7 +299,7 @@ def attn_cross(p, x, memory, cfg: ModelConfig, mem_kv=None):
     scale = 1.0 / np.sqrt(cfg.head_dim)
     scores = _gqa_scores(q, k, cfg) * scale
     w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    return qmatmul(_gqa_out(w, v, cfg), p["wo"])
+    return qmatmul(_tp_gather_heads(_gqa_out(w, v, cfg)), p["wo"])
 
 
 def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=None):

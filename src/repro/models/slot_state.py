@@ -240,3 +240,109 @@ def spec_for(cfg, **init_kwargs) -> SlotStateSpec:
     """The (cached) SlotStateSpec for cfg's family.  Raises with registry
     guidance when the family has no registered slot-state impl."""
     return _spec_cached(cfg.family, cfg, tuple(sorted(init_kwargs.items())))
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel probing (sharded serve)
+# ---------------------------------------------------------------------------
+#
+# The sharded engine (launch/engine.py) shards slot-state leaves over the
+# mesh "model" axis on their head/state dims.  Which axis that is per leaf
+# is PROBED the same way the slot/length axes are: the family init is
+# evaluated under jax.eval_shape with a head-localized config (head counts
+# divided by the shard count, head_dim pinned so nothing else moves), and
+# the axis that shrank by exactly the shard count is the tp axis.  Leaves
+# that change by any other ratio (the SSD conv window, whose channel count
+# mixes per-head x channels with shared B/C channels) or not at all stay
+# replicated over the model axis -- exactly matching what the compute side
+# (attention.py / ssm.py `tp_current()` paths) keeps local vs replicated.
+
+_ATTN_FAMILIES = ("dense", "vlm", "moe", "hybrid", "encdec")
+
+
+def _ssm_heads(cfg) -> int:
+    if cfg.ssm is None:
+        return 0
+    from repro.models import ssm as ssm_mod
+    return ssm_mod.dims(cfg)[2]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPPlan:
+    """Which mixers a serve engine can tensor-parallelize over `size`
+    model shards for this config (bit-exactness-preserving only: local
+    heads + all_gather, never a partitioned float contraction)."""
+    size: int
+    attn: bool
+    ssm: bool
+
+    @property
+    def active(self) -> bool:
+        return self.size > 1 and (self.attn or self.ssm)
+
+
+def tp_plan(cfg, size: int) -> TPPlan:
+    """What can shard over a model axis of `size` for cfg.  Attention
+    needs head counts divisible by the axis; SSD needs its derived head
+    count divisible (and d_model, for the shape probe).  Anything that
+    does not divide stays replicated -- graceful, never an error."""
+    if size <= 1:
+        return TPPlan(size, False, False)
+    attn = (cfg.family in _ATTN_FAMILIES
+            and cfg.n_heads % size == 0 and cfg.n_kv % size == 0)
+    hs = _ssm_heads(cfg)
+    ssm = (cfg.family in ("ssm", "hybrid") and hs > 0 and hs % size == 0
+           and cfg.d_model % size == 0)
+    return TPPlan(size, attn, ssm)
+
+
+def _tp_probe_cfg(cfg, plan: TPPlan):
+    kw: Dict[str, Any] = {}
+    if plan.attn:
+        kw.update(n_heads=cfg.n_heads // plan.size,
+                  n_kv=cfg.n_kv // plan.size)
+    if plan.ssm:
+        kw["d_model"] = cfg.d_model // plan.size
+    if kw:
+        # pin head_dim: it is otherwise derived from d_model / n_heads and
+        # would drag unrelated axes along with the probe
+        kw["d_head"] = cfg.head_dim
+    return dataclasses.replace(cfg, **kw)
+
+
+@functools.lru_cache(maxsize=64)
+def _tp_axes_cached(family: str, cfg, size: int,
+                    kw_items: Tuple[Tuple[str, Any], ...]) -> tuple:
+    fam = get_family(family)
+    kwargs = dict(kw_items)
+    plan = tp_plan(cfg, size)
+    if not plan.active:
+        base = jax.eval_shape(lambda: fam.init(cfg, 2, 16, **kwargs))
+        return (None,) * len(jax.tree_util.tree_leaves(base))
+    probe_cfg = _tp_probe_cfg(cfg, plan)
+    base = jax.eval_shape(lambda: fam.init(cfg, 2, 16, **kwargs))
+    probe = jax.eval_shape(lambda: fam.init(probe_cfg, 2, 16, **kwargs))
+    b_leaves, b_td = jax.tree_util.tree_flatten(base)
+    p_leaves, p_td = jax.tree_util.tree_flatten(probe)
+    if b_td != p_td:
+        raise ValueError(
+            f"tp probe for family {family!r}: init changes tree structure "
+            f"under head localization; it must be shape-polymorphic")
+    axes = []
+    for bl, pl in zip(b_leaves, p_leaves):
+        exact = [i for i, (b, p) in enumerate(zip(bl.shape, pl.shape))
+                 if b != p and p * size == b]
+        if len(exact) > 1:
+            raise ValueError(
+                f"tp probe for family {family!r}: leaf {bl.shape} has "
+                f"{len(exact)} head-localized axes {exact}; at most one "
+                f"tp axis per leaf is supported")
+        axes.append(exact[0] if exact else None)
+    return tuple(axes)
+
+
+def tp_axes_for(cfg, size: int, **init_kwargs) -> tuple:
+    """Per-leaf model-shard axis (tree_flatten order, matching
+    SlotStateSpec.batch_axes); None = replicated over the model axis."""
+    return _tp_axes_cached(cfg.family, cfg, size,
+                           tuple(sorted(init_kwargs.items())))

@@ -18,9 +18,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import context as dctx
 from repro.models import common
 from repro.quant.qtensor import qmatmul
 from repro.models.config import ModelConfig, SSMConfig
+
+
+def _ssm_tp():
+    """Active serve-time tensor-parallel context for SSD mixers (set
+    inside the engine's shard_map body).  When active, the [B, H, P, N]
+    recurrent state stays local to this shard's head block and the
+    per-head outputs are all_gathered before the gated norm; the in/out
+    projections and the depthwise conv stay replicated (the conv window
+    mixes per-head x channels with the group-shared B/C channels, so its
+    state cannot partition over heads).  The only collective is an exact
+    concat -- bit-identical to the single-device path."""
+    tp = dctx.tp_current()
+    return tp if tp is not None and tp.ssm else None
 
 
 def dims(cfg: ModelConfig):
@@ -126,13 +140,24 @@ def ssd_forward(p, x_in, cfg: ModelConfig, initial_state=None,
         dt=chunked(dt, (n_heads,)),
     )
 
+    tp = _ssm_tp()
+    h_loc = n_heads if tp is None else n_heads // tp.size
+    j_tp = None if tp is None else jax.lax.axis_index(tp.axis)
+    if tp is not None:
+        a = jax.lax.dynamic_slice_in_dim(a, j_tp * h_loc, h_loc, axis=0)
+
     s0 = (initial_state if initial_state is not None
-          else jnp.zeros((b, n_heads, pd, n), jnp.float32))
+          else jnp.zeros((b, h_loc, pd, n), jnp.float32))
 
     def chunk_step(state, inp):
         xq, bq, cq, dtq = inp["x"], inp["bm"], inp["cm"], inp["dt"]
         bh = jnp.repeat(bq, rep, axis=2)                     # [B,Q,H,n]
         chh = jnp.repeat(cq, rep, axis=2)
+        if tp is not None:
+            # this shard's head block (projections/conv ran replicated)
+            sl = lambda t: jax.lax.dynamic_slice_in_dim(
+                t, j_tp * h_loc, h_loc, axis=2)
+            xq, bh, chh, dtq = sl(xq), sl(bh), sl(chh), sl(dtq)
         da = dtq * a                                          # [B,Q,H]
         da_cs = jnp.cumsum(da, axis=1)
         lmat = _segsum_decay(da_cs)                           # [B,H,Q,Q]
@@ -148,9 +173,16 @@ def ssd_forward(p, x_in, cfg: ModelConfig, initial_state=None,
         return new_state, y_diag + y_off                      # y: [B,Q,H,pd]
 
     final_state, ys = jax.lax.scan(chunk_step, s0, xs)
-    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, n_heads, pd)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, h_loc, pd)
     xf = x.astype(jnp.float32).reshape(b, l, n_heads, pd)
-    y = y + p["D"][None, None, :, None] * xf
+    dcoef = p["D"]
+    if tp is not None:
+        xf = jax.lax.dynamic_slice_in_dim(xf, j_tp * h_loc, h_loc, axis=2)
+        dcoef = jax.lax.dynamic_slice_in_dim(dcoef, j_tp * h_loc, h_loc,
+                                             axis=0)
+    y = y + dcoef[None, None, :, None] * xf
+    if tp is not None:
+        y = jax.lax.all_gather(y, tp.axis, axis=2, tiled=True)
     y = y.reshape(b, l, d_inner)
     # gated rmsnorm then out projection
     y = y * jax.nn.silu(z.astype(jnp.float32))
@@ -210,6 +242,17 @@ def ssd_decode(p, x_t, state, cfg: ModelConfig, active=None):
     dt = jax.nn.softplus(dtr.astype(jnp.float32).reshape(b, n_heads)
                          + p["dt_bias"])
     a = -jnp.exp(p["A_log"])
+    dcoef = p["D"]
+    tp = _ssm_tp()
+    if tp is not None:
+        # local head block: the projections/conv above ran replicated;
+        # only the state update + per-head output are sharded
+        hl = n_heads // tp.size
+        j = jax.lax.axis_index(tp.axis)
+        sl = lambda t, ax: jax.lax.dynamic_slice_in_dim(t, j * hl, hl,
+                                                        axis=ax)
+        xf, bh, chh, dt = sl(xf, 1), sl(bh, 1), sl(chh, 1), sl(dt, 1)
+        a, dcoef = sl(a, 0), sl(dcoef, 0)
     da = jnp.exp(dt * a)                                    # [B,H]
     upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, bh, xf)
     new_ssm = da[:, :, None, None] * state["ssm"] + upd
@@ -218,7 +261,9 @@ def ssd_decode(p, x_t, state, cfg: ModelConfig, active=None):
                             state["ssm"])
         new_conv = jnp.where(active[:, None, None], new_conv, state["conv"])
     y = jnp.einsum("bhn,bhpn->bhp", chh, new_ssm)
-    y = y + p["D"][None, :, None] * xf
+    y = y + dcoef[None, :, None] * xf
+    if tp is not None:
+        y = jax.lax.all_gather(y, tp.axis, axis=1, tiled=True)  # [B,H,pd]
     y = y.reshape(b, 1, d_inner)
     y = y * jax.nn.silu(z.astype(jnp.float32))
     y = common.rms_norm(y, p["norm_w"], cfg.norm_eps).astype(x_t.dtype)

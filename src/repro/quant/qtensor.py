@@ -85,12 +85,25 @@ def qmatmul(x, w):
 
 
 def quantize_tree_for_serving(params, fmt: str, min_size: int = 1 << 16,
-                              skip_keys=("router", "embed", "pos")):
+                              skip_keys=("router", "embed", "pos", "conv",
+                                         "ln", "norm", "A_log", "dt_bias",
+                                         "D"),
+                              force: bool = False):
     """Replace every large >=2D float weight leaf with a QTensor.
 
     Walks the param pytree by path; leaves whose key path contains any of
     `skip_keys`, 1-D leaves (norms/biases/A_log/...) and small leaves stay
-    in bf16/f32."""
+    in bf16/f32.
+
+    force=True drops the SIZE floors (`min_size` and the min(shape[-2:])
+    >= 64 width check) while keeping the structural rules (skip_keys,
+    the stacked-2-D-vector exclusion).  The floors are production
+    heuristics -- quantizing tiny weights saves nothing -- but every
+    weight of the REDUCED test configs sits under them, so "quantized"
+    smoke benchmarks and CI rows would otherwise serve pure-bf16 graphs
+    with zero packed-matmul dispatches (ROADMAP: reduced-config
+    quantization no-op).  Smoke/CI paths pass force=True and assert a
+    nonzero packed-dispatch census (kernels.registry.dispatch_counts)."""
     if fmt == "bf16":
         return params
 
@@ -100,10 +113,11 @@ def quantize_tree_for_serving(params, fmt: str, min_size: int = 1 << 16,
         is_float = hasattr(leaf, "dtype") and leaf.dtype in (
             jnp.float32, jnp.bfloat16, jnp.float16)
         if (not hasattr(leaf, "ndim") or leaf.ndim < 2 or not is_float
-                or leaf.size < min_size
-                or min(leaf.shape[-2:]) < 64   # stacked vectors / conv taps
                 or any(k in keys for k in skip_keys)):
             return leaf
+        if not force and (leaf.size < min_size
+                          or min(leaf.shape[-2:]) < 64):
+            return leaf   # stacked vectors / conv taps / tiny weights
         if leaf.ndim == 2 and "lm_head" not in keys:
             # 2-D leaves inside the stacked block tree are per-layer
             # vectors (norms etc.) -- only the unstacked lm_head matmul

@@ -1,7 +1,29 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here -- tests see the real single
-CPU device; only launch/dryrun.py forces 512 host devices."""
+CPU device (tests/test_sharded_serve.py skips itself unless the caller
+forces more, as CI's tier1-sharded job does); only launch/dryrun.py
+forces 512 host devices."""
 import numpy as np
 import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _hermetic_lowering_timings(tmp_path_factory):
+    """Point the stored-lowering-timings cache at an empty per-session
+    file: a developer's recorded ~/.cache/repro/lowering_timings.json
+    must not steer auto-resolution inside the suite (tests assert the
+    no-record default: ref on CPU)."""
+    import os
+    from repro.kernels import registry, timings
+    path = tmp_path_factory.mktemp("timings") / "lowering_timings.json"
+    old = os.environ.get("REPRO_LOWERING_TIMINGS")
+    os.environ["REPRO_LOWERING_TIMINGS"] = str(path)
+    registry.invalidate()
+    yield
+    if old is None:
+        os.environ.pop("REPRO_LOWERING_TIMINGS", None)
+    else:
+        os.environ["REPRO_LOWERING_TIMINGS"] = old
+    registry.invalidate()
 
 
 @pytest.fixture

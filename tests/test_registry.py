@@ -212,3 +212,70 @@ def test_fingerprint_tracks_forcing(clean_registry):
 def test_dispatch_rejects_unknown_op(clean_registry):
     with pytest.raises(KeyError):
         registry.dispatch("not_an_op")
+
+
+# ---------------------------------------------------------------------------
+# stored lowering timings -> measured CPU auto-defaults (kernels/timings.py)
+# ---------------------------------------------------------------------------
+
+def test_stored_timings_steer_cpu_defaults(clean_registry, monkeypatch,
+                                           tmp_path):
+    """A recorded measurement flips the CPU auto-default for that op; ops
+    without a record (and every forced resolution) are untouched; deleting
+    the record restores the ref fallback."""
+    from repro.kernels import timings
+
+    if jax.default_backend() != "cpu":
+        pytest.skip("stored timings only steer CPU auto-defaults")
+    cache = tmp_path / "lowering_timings.json"
+    monkeypatch.setenv("REPRO_LOWERING_TIMINGS", str(cache))
+    registry.invalidate()
+    assert registry.resolve("simd_add").lid == "ref"   # no record yet
+
+    timings.record("cpu", "simd_add", "cpu-vector", 10.0, shape="full")
+    timings.record("cpu", "simd_add", "ref", 25.0, shape="full")
+    registry.invalidate()
+    assert registry.resolve("simd_add").lid == "cpu-vector"
+    # un-recorded ops keep the priority default
+    assert registry.resolve("mul4").lid == "ref"
+    # forcing still outranks measurements
+    with registry.force(simd_add="ref"):
+        assert registry.resolve("simd_add").lid == "ref"
+    # census/fingerprint reflect the measured default
+    assert registry.active_lowerings()["simd_add"] == "cpu-vector"
+
+    cache.unlink()
+    registry.invalidate()
+    assert registry.resolve("simd_add").lid == "ref"
+
+
+def test_stored_timings_keep_best_and_ignore_pallas(clean_registry,
+                                                    monkeypatch, tmp_path):
+    from repro.kernels import timings
+
+    if jax.default_backend() != "cpu":
+        pytest.skip("stored timings only steer CPU auto-defaults")
+    monkeypatch.setenv("REPRO_LOWERING_TIMINGS",
+                       str(tmp_path / "t.json"))
+    registry.invalidate()
+    # min-keeping merge: the slower later recording must not overwrite
+    timings.record("cpu", "mul4", "cpu-vector", 5.0)
+    timings.record("cpu", "mul4", "cpu-vector", 50.0)
+    assert timings.stored_best("mul4", "cpu") == "cpu-vector"
+    # a foreign Pallas family recorded on CPU (interpret-mode timing)
+    # must never become the auto-default
+    timings.record("cpu", "muladd2", "tpu-pallas", 0.1)
+    registry.invalidate()
+    assert registry.resolve("muladd2").lid == "ref"
+
+
+def test_dispatch_counts_census(clean_registry):
+    import jax.numpy as jnp
+
+    registry.reset_dispatch_counts()
+    assert registry.dispatch_counts() == {op: 0 for op in registry.ops()}
+    xs = [jnp.zeros((4, 4), jnp.int8)] * 2
+    registry.dispatch("simd_add", xs, xs, lane_bits=8)
+    assert registry.dispatch_counts()["simd_add"] == 1
+    registry.reset_dispatch_counts()
+    assert registry.dispatch_counts()["simd_add"] == 0

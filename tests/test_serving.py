@@ -38,3 +38,46 @@ def test_generate_int8_kv_close():
     # int8 KV is lossy; token agreement should still be high on short gens
     agree = float(np.mean(np.asarray(toks_q) == np.asarray(toks_f)))
     assert agree >= 0.5, agree
+
+
+@pytest.mark.parametrize("quant", ["w8a8", "w4a8"])
+def test_forced_quantization_dispatches_packed_matmuls(quant):
+    """ROADMAP (found in PR 4): the production size floors exceed every
+    reduced-config weight, so default `quantize_tree_for_serving` serves
+    bf16 graphs with ZERO packed dispatches.  force=True must actually
+    bind packed matmuls -- asserted via the registry dispatch census --
+    and the engine must still match static generate() bit-for-bit on the
+    quantized graph."""
+    from repro.kernels import registry
+    from repro.launch.engine import ServeEngine
+    from repro.launch.scheduler import Request
+
+    cfg = configs.get_reduced_config("smollm-135m")
+    rng = jax.random.PRNGKey(0)
+    raw = lm.init_params(rng, cfg, max_seq=64)
+
+    default = quantize_tree_for_serving(raw, quant)
+    leaves = jax.tree_util.tree_leaves(
+        default, is_leaf=lambda x: hasattr(x, "fmt"))
+    assert not any(hasattr(l, "fmt") for l in leaves), \
+        "reduced-config floors changed: update this test + the ROADMAP"
+
+    params = quantize_tree_for_serving(raw, quant, force=True)
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: hasattr(x, "fmt"))
+    assert any(hasattr(l, "fmt") for l in leaves)
+
+    registry.reset_dispatch_counts()
+    prompts = np.asarray(jax.random.randint(rng, (2, 12), 0, cfg.vocab))
+    static = np.asarray(generate(params, jax.numpy.asarray(prompts), cfg,
+                                 gen=6, cache_len=32))
+    counts = registry.dispatch_counts()
+    packed_op = "quant_matmul" if quant == "w8a8" else "packed_w4_matmul"
+    assert counts[packed_op] > 0, counts
+
+    eng = ServeEngine(params, cfg, n_slots=2, max_cache_len=64,
+                      segment_len=4)
+    out = eng.run([Request(rid=i, prompt=prompts[i], max_new_tokens=6)
+                   for i in range(2)])
+    for i in range(2):
+        np.testing.assert_array_equal(out[i], static[i])

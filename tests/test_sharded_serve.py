@@ -1,0 +1,226 @@
+"""Sharded serve: bit-exact parity of the mesh-aware engine against the
+single-device engine (and hence static generate()) for every family.
+
+Runs only when more than one device is visible -- CI's tier1-sharded job
+sets XLA_FLAGS=--xla_force_host_platform_device_count=8; locally:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest -q tests/test_sharded_serve.py
+
+The matrix covers all four serve families (dense, ssm, hybrid, encdec),
+data-only and data x model meshes (head/state tensor parallelism active
+where the reduced configs divide the model axis), forced `*=ref` and
+auto lowerings, SILVIA passes, and admission/eviction/compaction
+mid-segment.  Equality is BITWISE on tokens: the sharded engine's only
+collectives are exact concats (all_gather), never partitioned float
+contractions (launch/engine.py module docstring, DESIGN.md sec. 7)."""
+import numpy as np
+import jax
+import pytest
+
+from repro import configs
+from repro.distributed import context as dctx
+from repro.kernels import registry
+from repro.launch import scheduler
+from repro.launch.engine import ServeEngine
+from repro.launch.mesh import make_mesh
+from repro.models import lm, slot_state
+from repro.quant.qtensor import quantize_tree_for_serving
+
+NDEV = jax.device_count()
+pytestmark = pytest.mark.skipif(
+    NDEV < 2,
+    reason="sharded serve needs >1 device (XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+
+# (data, model) shapes testable on this host: data-only packing plus a
+# data x model mix in both orientations (4,2) activates attention TP on
+# the reduced GQA configs (n_kv=2), (2,4) activates SSD TP (8 heads)
+MESHES = ([(8, 1), (2, 4), (4, 2)] if NDEV >= 8
+          else [(NDEV, 1)])
+
+FAMILY_ARCHS = {"dense": "smollm-135m", "ssm": "mamba2-2.7b",
+                "hybrid": "jamba-v0.1-52b", "encdec": "whisper-small"}
+ENC_LEN = 16
+
+
+@pytest.fixture(scope="module")
+def family_setup():
+    out = {}
+    for fam, arch in FAMILY_ARCHS.items():
+        cfg = configs.get_reduced_config(arch)
+        params = quantize_tree_for_serving(
+            lm.init_params(jax.random.PRNGKey(0), cfg, max_seq=80),
+            "w8a8", force=True)
+        out[fam] = (cfg, params)
+    return out
+
+
+def _requests(cfg, n=5, seed=0, stagger=0.02):
+    """Ragged mix on purpose: more requests than slots (eviction +
+    re-admission mid-run), staggered arrivals, varied prompt/gen."""
+    plens = (5, 12, 9, 16, 7)[:n]
+    gens = (3, 8, 1, 6, 9)[:n]
+    reqs = []
+    for i, (pl, g) in enumerate(zip(plens, gens)):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(seed + 10 * i), (pl,), 0, cfg.vocab))
+        kw = {}
+        if cfg.family == "encdec":
+            rng = np.random.default_rng(seed + i)
+            kw["features"] = rng.standard_normal(
+                (ENC_LEN, cfg.d_model)).astype(np.float32)
+        reqs.append(scheduler.Request(rid=i, prompt=prompt,
+                                      max_new_tokens=g,
+                                      arrival_time=stagger * i, **kw))
+    return reqs
+
+
+def _engine(cfg, params, *, mesh_shape=None, n_slots=2, segment_len=4,
+            **kw):
+    if cfg.family == "encdec":
+        kw.setdefault("enc_len", ENC_LEN)
+    if mesh_shape is None:
+        return ServeEngine(params, cfg, n_slots=n_slots, max_cache_len=64,
+                           segment_len=segment_len, **kw)
+    mesh = make_mesh(mesh_shape, ("data", "model"))
+    with dctx.mesh_scope(mesh, ("data",), "model"):
+        return ServeEngine(params, cfg, n_slots=max(n_slots, mesh_shape[0]),
+                           max_cache_len=64, segment_len=segment_len, **kw)
+
+
+def _run(eng, reqs):
+    return eng.run(reqs, scheduler.FastForwardClock())
+
+
+# ---------------------------------------------------------------------------
+# the parity matrix: every family x every mesh shape
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mesh_shape", MESHES)
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_sharded_matches_single_device(family_setup, family, mesh_shape):
+    cfg, params = family_setup[family]
+    base = _run(_engine(cfg, params), _requests(cfg))
+    eng = _engine(cfg, params, mesh_shape=mesh_shape)
+    out = _run(eng, _requests(cfg))
+    for rid in base:
+        np.testing.assert_array_equal(out[rid], base[rid])
+    info = eng.cache_info()
+    assert info["graphs"] <= info["graph_bound"]
+    assert info["mesh"]["dp_size"] * info["mesh"]["shape"]["model"] \
+        == mesh_shape[0] * mesh_shape[1]
+
+
+def test_tp_actually_activates():
+    """The matrix above must not pass vacuously: on an 8-device host the
+    (4,2) mesh tensor-parallelizes attention for the GQA configs and
+    (2,4) the SSD heads (slot_state.tp_plan)."""
+    if NDEV < 8:
+        pytest.skip("needs 8 devices for the data x model shapes")
+    assert slot_state.tp_plan(
+        configs.get_reduced_config("jamba-v0.1-52b"), 2).attn
+    assert slot_state.tp_plan(
+        configs.get_reduced_config("mamba2-2.7b"), 4).ssm
+    assert slot_state.tp_plan(
+        configs.get_reduced_config("whisper-small"), 4).attn
+    # and non-divisible head counts degrade gracefully to replication
+    plan = slot_state.tp_plan(configs.get_reduced_config("smollm-135m"), 4)
+    assert not plan.attn and not plan.ssm
+
+
+# ---------------------------------------------------------------------------
+# forced lowerings + SILVIA passes through the sharded bundles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["dense", "ssm"])
+def test_sharded_forced_ref_matches(family_setup, family):
+    """REPRO_LOWERING-style forcing pins the sharded bundle's census the
+    same way it pins the single-device one."""
+    cfg, params = family_setup[family]
+    mesh_shape = MESHES[-1]
+    with registry.force("ref"):
+        base = _run(_engine(cfg, params), _requests(cfg, n=3))
+        eng = _engine(cfg, params, mesh_shape=mesh_shape)
+        out = _run(eng, _requests(cfg, n=3))
+    for rid in base:
+        np.testing.assert_array_equal(out[rid], base[rid])
+    assert all(lid == "ref" for lid in
+               eng.cache_info()["lowerings"].values())
+
+
+@pytest.mark.parametrize("family", ["dense", "hybrid"])
+def test_sharded_silvia_all_matches(family_setup, family):
+    cfg, params = family_setup[family]
+    mesh_shape = MESHES[-1]
+    base = _run(_engine(cfg, params, silvia_passes="all"),
+                _requests(cfg, n=3))
+    out = _run(_engine(cfg, params, mesh_shape=mesh_shape,
+                       silvia_passes="all"), _requests(cfg, n=3))
+    for rid in base:
+        np.testing.assert_array_equal(out[rid], base[rid])
+
+
+# ---------------------------------------------------------------------------
+# admission / eviction / compaction on sharded state
+# ---------------------------------------------------------------------------
+
+def test_sharded_compaction_preserves_outputs(family_setup):
+    """Evictions leave holes; compaction permutes SHARDED slot pages
+    downward and the surviving request stays bit-identical."""
+    cfg, params = family_setup["dense"]
+    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(40 + i),
+                                             (8,), 0, cfg.vocab))
+               for i in range(4)]
+    gens = (2, 2, 2, 12)   # slots 0..2 evict early -> holes under slot 3
+
+    def reqs():
+        return [scheduler.Request(rid=i, prompt=prompts[i],
+                                  max_new_tokens=g)
+                for i, g in enumerate(gens)]
+
+    base = _run(ServeEngine(params, cfg, n_slots=4, max_cache_len=64,
+                            segment_len=2), reqs())
+    # dp=2 so the bucket CAN shrink (4 -> 2); a dp=4 floor would make
+    # every hole bucket-neutral and compaction correctly skip itself
+    mesh_shape = (2, 4) if NDEV >= 8 else (2, 1)
+    eng = _engine(cfg, params, mesh_shape=mesh_shape, n_slots=4,
+                  segment_len=2)
+    out = _run(eng, reqs())
+    assert eng.compactions >= 1
+    for rid in base:
+        np.testing.assert_array_equal(out[rid], base[rid])
+    # the post-compaction segment ran at the dp-floored shrunken bucket
+    dp = eng.cache_info()["mesh"]["dp_size"]
+    seg_bbs = {k[1] for k in eng._graphs if k[0] == "segment"}
+    assert min(seg_bbs) == dp, (seg_bbs, dp)
+
+
+def test_sharded_chunked_prefill_matches(family_setup):
+    cfg, params = family_setup["dense"]
+    base = _run(_engine(cfg, params, prefill_chunk=4), _requests(cfg))
+    out = _run(_engine(cfg, params, mesh_shape=MESHES[-1],
+                       prefill_chunk=4), _requests(cfg))
+    for rid in base:
+        np.testing.assert_array_equal(out[rid], base[rid])
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+def test_indivisible_slots_rejected(family_setup):
+    cfg, params = family_setup["dense"]
+    mesh = make_mesh(MESHES[0], ("data", "model"))
+    dp = MESHES[0][0]
+    with dctx.mesh_scope(mesh, ("data",), "model"):
+        with pytest.raises(ValueError, match="multiple"):
+            ServeEngine(params, cfg, n_slots=dp + 1, max_cache_len=64)
+
+
+def test_unmeshed_engine_unchanged(family_setup):
+    """No ambient mesh_scope -> plain single-device bundles, no mesh info
+    in the census."""
+    cfg, params = family_setup["dense"]
+    eng = ServeEngine(params, cfg, n_slots=2, max_cache_len=64)
+    assert "mesh" not in eng.cache_info()
