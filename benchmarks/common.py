@@ -4,6 +4,7 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import platform
 import time
 
 import jax
@@ -13,17 +14,35 @@ from repro import core as silvia
 from repro.core import opcount
 
 
+def host_class() -> dict:
+    """Coarse host fingerprint stamped into every BENCH payload.  Absolute
+    smoke throughput is host-bound, so the regression gate
+    (scripts/bench_compare.py) only compares a result against a baseline
+    recorded on the SAME class and warns-and-skips otherwise."""
+    dev = jax.devices()[0]
+    return {
+        "platform": platform.system().lower(),
+        "machine": platform.machine(),
+        "cpus": os.cpu_count(),
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", "unknown"),
+    }
+
+
 def write_bench_json(result: dict, name: str) -> None:
     """Persist a benchmark's BENCH payload to $BENCH_DIR/<name>.json (CI
     uploads the directory as a workflow artifact and feeds it to
     scripts/bench_compare.py).  No-op when BENCH_DIR is unset, so local
-    runs keep printing only."""
+    runs keep printing only.  The payload is stamped with `host_class`
+    so the compare gate can refuse cross-host comparisons."""
     bench_dir = os.environ.get("BENCH_DIR")
     if not bench_dir:
         return
+    payload = dict(result)
+    payload.setdefault("host_class", host_class())
     path = pathlib.Path(bench_dir) / f"{name}.json"
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps(result, indent=2, sort_keys=True) + "\n")
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
 
 
 def time_fn(fn, *args, iters: int = 5) -> float:

@@ -30,9 +30,17 @@ and the mesh layout when sharded.  With $BENCH_DIR set the payload is also
 written to $BENCH_DIR/serve_throughput_<family>[_<mesh>].json for the CI
 artifact + scripts/bench_compare.py regression gate.
 
+`--chaos [SPEC]` serves the engine row under an injected-fault schedule
+(launch/resilience.py ChaosSchedule; default spec exercises a few
+deterministic seeded faults) plus a TTL mix on the traffic, and reports
+the robustness counters: shed/expired/recovered requests, replayed
+tokens, and `recovery_overhead` (replayed / delivered tokens -- the cost
+of bit-exact recovery-as-replay).  The BENCH file gains a `_chaos`
+suffix so the regression gate tracks chaos throughput separately.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
         [--family {dense,ssm,hybrid,encdec}] [--silvia {off,add,muladd,all}]
-        [--mesh DxM] [--n-requests N] [--rate R]
+        [--mesh DxM] [--chaos [SPEC]] [--n-requests N] [--rate R]
 """
 from __future__ import annotations
 
@@ -48,7 +56,7 @@ from benchmarks import common
 from repro import configs
 from repro.distributed import context as dctx
 from repro.kernels import registry
-from repro.launch import scheduler, serve
+from repro.launch import resilience, scheduler, serve
 from repro.launch.engine import ServeEngine
 from repro.launch.mesh import make_mesh
 from repro.models import lm
@@ -84,7 +92,7 @@ def parse_mesh(spec: str):
 
 def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
                segment_len, silvia_passes, prefill_chunk=None,
-               enc_len=None, mesh=None, warmup=True) -> dict:
+               enc_len=None, mesh=None, warmup=True, chaos=None) -> dict:
     kw = {"enc_len": enc_len} if enc_len is not None else {}
     scope = contextlib.nullcontext()
     if mesh is not None:
@@ -95,7 +103,8 @@ def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
                           max_cache_len=max_cache_len,
                           segment_len=segment_len,
                           silvia_passes=silvia_passes,
-                          prefill_chunk=prefill_chunk, **kw)
+                          prefill_chunk=prefill_chunk,
+                          chaos=chaos if chaos is not None else "env", **kw)
     if warmup:
         # startup pre-compilation over the advertised traffic profile --
         # the static path below gets the matching per-shape warm pass
@@ -119,6 +128,21 @@ def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
     if "silvia" in info:
         out["silvia_trace"] = {k: info["silvia"][k]
                                for k in ("trace_hits", "trace_misses")}
+    if chaos is not None:
+        rb = info["robustness"]
+        delivered = sum(len(r.tokens) for r in eng.finished)
+        outcomes: dict = {}
+        for r in eng.finished:
+            outcomes[r.outcome] = outcomes.get(r.outcome, 0) + 1
+        out["robustness"] = rb
+        out["outcomes"] = outcomes
+        out["delivered_tokens"] = delivered
+        out["shed_rate"] = round(
+            rb["shed"] / max(len(eng.finished), 1), 3)
+        # cost of bit-exact recovery-as-replay: tokens regenerated with
+        # teacher forcing per token actually delivered
+        out["recovery_overhead"] = round(
+            rb["replayed_tokens"] / max(delivered, 1), 3)
     return out
 
 
@@ -181,9 +205,17 @@ FAMILY_ARCHS = {"dense": "smollm-135m", "ssm": "mamba2-2.7b",
                 "hybrid": "jamba-v0.1-52b", "encdec": "whisper-small"}
 
 
+# one pinned mid-run fault so even the tiny smoke trace exercises the
+# recovery path, plus a seeded random schedule on top
+DEFAULT_CHAOS = "segment:1,rate=0.04,seed=11,max=4"
+# TTL mix for chaos rows: mostly deadline-free, a slice of generous TTLs
+# so the deadline machinery runs without starving the throughput metric
+CHAOS_TTLS = (None, None, None, 5.0)
+
+
 def run(smoke: bool = False, silvia_passes: str = "off",
         n_requests: int | None = None, rate: float | None = None,
-        family: str = "dense", mesh=None) -> dict:
+        family: str = "dense", mesh=None, chaos: str | None = None) -> dict:
     arch = FAMILY_ARCHS[family]
     cfg = configs.get_reduced_config(arch)
     if smoke:
@@ -213,7 +245,8 @@ def run(smoke: bool = False, silvia_passes: str = "off",
     def traffic():
         reqs = scheduler.synthetic_traffic(
             seed=0, n_requests=n_req, rate=rate,
-            prompt_lens=prompt_lens, gen_lens=gen_lens, vocab=cfg.vocab)
+            prompt_lens=prompt_lens, gen_lens=gen_lens, vocab=cfg.vocab,
+            ttls=CHAOS_TTLS if chaos is not None else None)
         if family == "encdec":
             frng = np.random.default_rng(1)
             for r in reqs:
@@ -230,13 +263,16 @@ def run(smoke: bool = False, silvia_passes: str = "off",
                    "gen_lens": list(gen_lens), "quant": "w8a8(forced)",
                    "silvia": silvia_passes, "enc_len": enc_len,
                    "mesh": None if mesh is None else f"{mesh[0]}x{mesh[1]}",
+                   "chaos": chaos,
                    "devices": jax.device_count(),
                    "backend": jax.default_backend(),
                    "lowerings": registry.active_lowerings()},
         "engine": run_engine(params, cfg, traffic(), n_slots=n_slots,
                              max_cache_len=max_len, segment_len=seg,
                              silvia_passes=silvia_passes, enc_len=enc_len,
-                             mesh=mesh),
+                             mesh=mesh,
+                             chaos=None if chaos is None
+                             else resilience.ChaosSchedule.parse(chaos)),
         "static": run_static(params, cfg, traffic(), n_slots=n_slots,
                              silvia_passes=silvia_passes, enc_len=enc_len),
     }
@@ -265,6 +301,12 @@ def main():
                     help="serve the engine row sharded over a DxM "
                          "(data, model) mesh, e.g. 8x1 or 2x4 (needs that "
                          "many visible devices)")
+    ap.add_argument("--chaos", nargs="?", const=DEFAULT_CHAOS, default=None,
+                    metavar="SPEC",
+                    help="serve the engine row under an injected-fault "
+                         "schedule (resilience.ChaosSchedule syntax, e.g. "
+                         "'segment:2;prefill:1' or 'rate=0.05,seed=3'); "
+                         f"bare --chaos uses '{DEFAULT_CHAOS}'")
     ap.add_argument("--n-requests", type=int, default=None)
     ap.add_argument("--rate", type=float, default=None,
                     help="Poisson arrival rate (req/s)")
@@ -277,11 +319,13 @@ def main():
             f"--xla_force_host_platform_device_count=N to simulate)")
     result = run(smoke=args.smoke, silvia_passes=args.silvia,
                  n_requests=args.n_requests, rate=args.rate,
-                 family=args.family, mesh=mesh)
+                 family=args.family, mesh=mesh, chaos=args.chaos)
     print(json.dumps(result, indent=2))
     name = f"serve_throughput_{args.family}"
     if args.mesh:
         name += f"_{args.mesh}"
+    if args.chaos is not None:
+        name += "_chaos"
     common.write_bench_json(result, name)
     print("BENCH " + json.dumps(result))
 

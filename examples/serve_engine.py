@@ -10,13 +10,18 @@ constant-size pages, no length bucketing) or --arch jamba-v0.1-52b
     PYTHONPATH=src python examples/serve_engine.py
     PYTHONPATH=src python examples/serve_engine.py --arch mamba2-2.7b
     PYTHONPATH=src python examples/serve_engine.py --silvia all --chunked
+    PYTHONPATH=src python examples/serve_engine.py --chaos segment:2
+
+With --chaos (a $REPRO_CHAOS-style schedule), dispatches fail mid-run
+and the engine recovers by re-prefill + bit-exact replay; the printed
+robustness counters show what happened (launch/resilience.py).
 """
 import argparse
 
 import jax
 
 from repro import configs
-from repro.launch import scheduler
+from repro.launch import resilience, scheduler
 from repro.launch.engine import ServeEngine
 from repro.models import lm
 from repro.quant.qtensor import quantize_tree_for_serving
@@ -31,6 +36,9 @@ def main():
                     help="prefill prompts through the decode path, 8 "
                          "tokens per dispatch")
     ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="inject faults, e.g. 'segment:2' or "
+                         "'rate=0.1,seed=3,max=2'")
     ns = ap.parse_args()
 
     cfg = configs.get_reduced_config(ns.arch)
@@ -38,7 +46,9 @@ def main():
         lm.init_params(jax.random.PRNGKey(0), cfg, max_seq=136), "w8a8")
     eng = ServeEngine(params, cfg, n_slots=4, max_cache_len=128,
                       segment_len=8, silvia_passes=ns.silvia,
-                      prefill_chunk=8 if ns.chunked else None)
+                      prefill_chunk=8 if ns.chunked else None,
+                      chaos=resilience.ChaosSchedule.parse(ns.chaos)
+                      if ns.chaos else "env")
     traffic = scheduler.synthetic_traffic(
         seed=0, n_requests=ns.n_requests, rate=25.0,
         prompt_lens=(8, 16, 32), gen_lens=(4, 8, 16), vocab=cfg.vocab)
@@ -57,6 +67,11 @@ def main():
           f"batch buckets {info['batch_buckets']}, "
           f"len buckets {info['len_buckets']}; "
           f"compactions {info['compactions']}")
+    outcomes: dict = {}
+    for r in eng.finished:
+        outcomes[r.outcome] = outcomes.get(r.outcome, 0) + 1
+    hot = {k: v for k, v in info["robustness"].items() if v}
+    print(f"outcomes: {outcomes}; robustness counters: {hot or 'all zero'}")
     from repro.kernels import registry
     print("active lowerings:",
           registry.census_str(),

@@ -13,10 +13,12 @@ The job FAILS (exit 1) when a current metric drops more than
 `--threshold` (default 30%) below its committed baseline -- the AutoDSE
 lesson applied to CI: regressions are caught by stored measurements, not
 eyeballed.  Missing counterparts (a benchmark not run in this job, a new
-benchmark without a baseline yet) are reported and skipped, never failed:
-absolute smoke throughput is host-dependent, so baselines are committed
-from the same runner class that CI uses and refreshed deliberately by
-copying the artifact JSON over benchmarks/baselines/.
+benchmark without a baseline yet) are reported and skipped, never failed.
+Absolute smoke throughput is host-dependent, so payloads carry a
+`host_class` stamp (benchmarks/common.py) and a baseline recorded on a
+DIFFERENT host class is warned about and skipped, never compared; refresh
+benchmarks/baselines/ from the CI artifact of the runner class the gate
+should bind to.
 """
 from __future__ import annotations
 
@@ -53,8 +55,21 @@ def compare(baselines: pathlib.Path, results: pathlib.Path,
             print(f"SKIP {name}: no result file in this job")
             skipped += 1
             continue
-        base = _metric(name, json.loads(base_file.read_text()))
-        cur = _metric(name, json.loads(cur_file.read_text()))
+        base_payload = json.loads(base_file.read_text())
+        cur_payload = json.loads(cur_file.read_text())
+        bhost = base_payload.get("host_class")
+        chost = cur_payload.get("host_class")
+        if bhost and chost and bhost != chost:
+            # absolute smoke throughput is host-bound: comparing across
+            # runner classes would gate on hardware, not code.  Baselines
+            # without the stamp (pre-host-class files) still compare.
+            print(f"SKIP {name}: host-class mismatch -- baseline "
+                  f"{bhost} vs current {chost}; refresh the baseline "
+                  f"from this runner class to re-arm the gate")
+            skipped += 1
+            continue
+        base = _metric(name, base_payload)
+        cur = _metric(name, cur_payload)
         if base is None or cur is None:
             print(f"SKIP {name}: no comparable metric")
             skipped += 1

@@ -1,5 +1,6 @@
 """Sharded, atomic, resumable checkpointing."""
-from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,
-                                   save_checkpoint)
+from repro.checkpoint.ckpt import (latest_step, load_meta,
+                                   restore_checkpoint, save_checkpoint)
 
-__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint"]
+__all__ = ["latest_step", "load_meta", "restore_checkpoint",
+           "save_checkpoint"]

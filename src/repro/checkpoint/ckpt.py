@@ -95,6 +95,19 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def load_meta(ckpt_dir: str, *, step: Optional[int] = None):
+    """(extra_meta dict, step) of the latest (or given) committed
+    checkpoint, or (None, None).  Readable BEFORE building a `like`
+    template -- restore flows whose tree structure is described by the
+    metadata (e.g. launch/resilience.py request snapshots) need it first."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        return None, None
+    with open(os.path.join(ckpt_dir, f"step_{step:09d}",
+                           "index.json")) as f:
+        return json.load(f)["meta"], step
+
+
 def restore_checkpoint(ckpt_dir: str, like: Any, *, step: Optional[int] = None,
                        host_id: int = 0, shardings: Any = None):
     """Restore into the structure of `like` (a pytree template, e.g. from

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 import statistics
 import time
 from typing import Any, Callable, Optional
@@ -34,13 +35,26 @@ class SimulatedFailure(RuntimeError):
 
 @dataclasses.dataclass
 class FailureInjector:
+    """Raises `SimulatedFailure` at chosen points, each at most once.
+
+    Training drives it by step number (`check`); serving drives it by
+    dispatch SITE -- ``kind:index`` strings over the engine's per-kind
+    dispatch counters, e.g. ``segment:3`` / ``prefill:0`` / ``chunk:7``
+    (`check_site`; `launch/resilience.ChaosSchedule` extends this with a
+    deterministic rate-based schedule parsed from $REPRO_CHAOS)."""
     fail_at_steps: tuple = ()
     failed: set = dataclasses.field(default_factory=set)
+    fail_at_sites: tuple = ()
 
     def check(self, step: int):
         if step in self.fail_at_steps and step not in self.failed:
             self.failed.add(step)
             raise SimulatedFailure(f"injected node failure at step {step}")
+
+    def check_site(self, site: str):
+        if site in self.fail_at_sites and site not in self.failed:
+            self.failed.add(site)
+            raise SimulatedFailure(f"injected serving fault at {site}")
 
 
 class StragglerDetector:
@@ -71,17 +85,46 @@ class StragglerDetector:
 
 @dataclasses.dataclass
 class RestartPolicy:
+    """Restart budget with exponential backoff and deterministic jitter.
+
+    `restarts` counts restarts actually GRANTED (a refusal does not burn
+    an attempt); `streak` counts consecutive failures since the last
+    `reset()`, driving the backoff: min(backoff_s * 2**streak,
+    max_backoff_s), scaled by a jitter factor in [1, 1+jitter) derived
+    from a stable hash of (seed, streak) -- reproducible across runs,
+    unlike random jitter, yet de-synchronized across differently-seeded
+    hosts.  Call `reset()` after a success so a long-lived job's next
+    incident starts from the base backoff again."""
     max_restarts: int = 10
     backoff_s: float = 0.0
+    max_backoff_s: float = 30.0
+    jitter: float = 0.1
+    seed: int = 0
     restarts: int = 0
+    streak: int = 0
+
+    def next_backoff(self) -> float:
+        """Backoff for the current streak (0.0 when backoff_s is 0)."""
+        if not self.backoff_s:
+            return 0.0
+        base = min(self.backoff_s * (2.0 ** self.streak), self.max_backoff_s)
+        h = hashlib.sha256(f"{self.seed}|{self.streak}".encode()).digest()
+        frac = int.from_bytes(h[:8], "big") / 2.0 ** 64
+        return base * (1.0 + self.jitter * frac)
 
     def should_restart(self, exc: Exception) -> bool:
-        self.restarts += 1
-        if self.restarts > self.max_restarts:
+        if self.restarts >= self.max_restarts:
             return False
-        if self.backoff_s:
-            time.sleep(self.backoff_s)
+        delay = self.next_backoff()
+        self.restarts += 1
+        self.streak += 1
+        if delay:
+            time.sleep(delay)
         return True
+
+    def reset(self) -> None:
+        """Record a success: the next failure backs off from the base."""
+        self.streak = 0
 
 
 def elastic_remesh(tree: Any, new_mesh, cfg=None):

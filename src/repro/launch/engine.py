@@ -54,6 +54,16 @@ ever-changing request mix:
   static `serve.generate()` path, including with SILVIA passes on
   (tests/test_engine.py, tests/test_slot_state.py assert bitwise equality
   for dense, ssm, hybrid, and encdec families).
+* **resilience** -- admission control (bounded queue + load shedding,
+  per-request deadlines/TTL), chaos-testable fault recovery, a
+  non-finite-logit quarantine and drain/snapshot hooks, all defined in
+  launch/resilience.py and wired through `submit()`/`step()`.  Every
+  device dispatch funnels through `_guarded` (the fault-injection site),
+  every dispatch failure unwinds to `_recover`, and recovered requests
+  REPLAY their recorded tokens through the same compiled decode path, so
+  surviving streams are bit-identical to a fault-free run -- SILVIA's
+  behavior-preservation obligation carried into failure handling
+  (DESIGN.md sec. 8; tests/test_resilience.py).
 
 Exactness invariants (why masking is exact, not approximate): an attention
 row only attends cache positions `<= pos`, every such position was written
@@ -79,7 +89,9 @@ from jax.sharding import PartitionSpec as P
 from repro import core as silvia
 from repro.distributed import context as dctx
 from repro.distributed import sharding as dshard
+from repro.distributed.fault import SimulatedFailure
 from repro.kernels import registry
+from repro.launch import resilience as res
 from repro.launch import scheduler
 from repro.launch import serve
 from repro.models import lm
@@ -183,29 +195,39 @@ def _build_bundle(cfg, silvia_passes: str, census: dict,
 
     def decode_scan(params, tok, cache, pos, active, n_steps):
         def step(carry, _):
-            tok, st, pos = carry
+            tok, st, pos, bad = carry
             logits, st = decode_fn(params, tok, st, pos, active)
             nxt = jnp.argmax(logits[:, -1, :], axis=-1)
             nxt = nxt.astype(jnp.int32)[:, None]
             nxt = jnp.where(active[:, None], nxt, 0)
+            # output-validation guard: flag slots whose sampled-from logits
+            # row went non-finite, so the host can quarantine THAT request
+            # (per-slot state is independent, so a poisoned row never
+            # perturbs a healthy row's tokens -- the flag is observability,
+            # not a numerical change)
+            bad = bad | (active & ~jnp.all(
+                jnp.isfinite(logits[:, -1, :]), axis=-1))
             # unclamped advance, exactly matching the static loop's pos0+i:
             # every write this segment lands below t_b (the engine sizes
             # t_b >= max(pos)+n_steps), and a slot that finished
             # mid-segment only overruns into its own discarded row (XLA
             # clamps the slice start) before eviction at harvest
             pos = jnp.where(active, pos + 1, pos)
-            return (nxt, st, pos), nxt
+            return (nxt, st, pos, bad), nxt
 
-        (tok, cache, pos), seq = jax.lax.scan(step, (tok, cache, pos),
-                                              None, length=n_steps)
-        return seq[:, :, 0], tok, cache, pos
+        carry0 = (tok, cache, pos, jnp.zeros(active.shape, bool))
+        (tok, cache, pos, bad), seq = jax.lax.scan(step, carry0,
+                                                   None, length=n_steps)
+        return seq[:, :, 0], tok, cache, pos, bad
 
     def prefill_fn(params, prompts, last_positions, cache_len):
         # prompts: [B,S] tokens, or (features, [B,S]) for encdec
         logits, cache = lm.prefill(params, prompts, cfg, cache_len=cache_len,
                                    last_positions=last_positions)
-        tok0 = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
-        return tok0, cache
+        last = logits[:, -1, :]
+        tok0 = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+        bad0 = ~jnp.all(jnp.isfinite(last), axis=-1)
+        return tok0, cache, bad0
 
     if plan is None:
         @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(2,))
@@ -257,7 +279,8 @@ def _shard_bundle_fns(plan: _MeshPlan, decode_scan, decode_fn, prefill_fn):
 
         fn = shard_map(body, mesh=mesh,
                        in_specs=(pspecs, P(dp), sspecs, P(dp), P(dp)),
-                       out_specs=(P(None, dp), P(dp), sspecs, P(dp)),
+                       out_specs=(P(None, dp), P(dp), sspecs, P(dp),
+                                  P(dp)),
                        check_rep=False)
         return fn(params, tok, cache, pos, active)
 
@@ -289,7 +312,7 @@ def _shard_bundle_fns(plan: _MeshPlan, decode_scan, decode_fn, prefill_fn):
 
         fn = shard_map(body, mesh=mesh,
                        in_specs=(pspecs, prspecs, P(dp)),
-                       out_specs=(P(dp), sspecs),
+                       out_specs=(P(dp), sspecs, P(dp)),
                        check_rep=False)
         return fn(params, prompts, last_positions)
 
@@ -331,6 +354,16 @@ class ServeEngine:
                     request must carry `features` of [enc_len, d_model].
     min_len_bucket / min_batch_bucket: smallest cache-length / batch
                     buckets (both clamped up to the physical maxima).
+    resilience:     launch/resilience.py ResilienceConfig -- admission
+                    control (queue bound, shed policy, default TTL) and
+                    the per-request recovery budget.  None = defaults
+                    (unbounded queue, no TTL).
+    chaos:          fault-injection schedule for the dispatch path.  The
+                    default "env" arms resilience.chaos_from_env()
+                    ($REPRO_CHAOS -- how the tier1-chaos CI job injects
+                    faults under the whole suite); pass an explicit
+                    resilience.ChaosSchedule to pin a schedule, or None
+                    to disable injection regardless of the environment.
     """
 
     def __init__(self, params, cfg, *, n_slots: int = 8,
@@ -338,7 +371,9 @@ class ServeEngine:
                  silvia_passes: str = "off",
                  prefill_chunk: Optional[int] = None,
                  enc_len: Optional[int] = None,
-                 min_len_bucket: int = 32, min_batch_bucket: int = 1):
+                 min_len_bucket: int = 32, min_batch_bucket: int = 1,
+                 resilience: Optional[res.ResilienceConfig] = None,
+                 chaos: object = "env"):
         if cfg.family == "encdec" and enc_len is None:
             raise ValueError("encdec serving needs enc_len (the fixed "
                              "encoder length of every request's features)")
@@ -423,10 +458,36 @@ class ServeEngine:
         self.compactions = 0
         self.occupancy: List[float] = []
         self._graphs: set = set()
+        # -- resilience state (launch/resilience.py) --
+        self._res = resilience if resilience is not None \
+            else res.ResilienceConfig()
+        self._chaos = res.chaos_from_env() if chaos == "env" else chaos
+        self._site_counts = {"segment": 0, "prefill": 0, "chunk": 0}
+        self._replay: List[List[int]] = [[] for _ in range(n_slots)]
+        self._admitting: List[scheduler.Request] = []
+        self._rids: set = set()
+        self._results: Dict[int, res.RequestResult] = {}
+        self._robust: Dict[str, int] = {k: 0 for k in (
+            "shed", "expired_queued", "expired_inflight", "failed",
+            "quarantined", "faults_injected", "errors", "recoveries",
+            "replayed_tokens", "replay_divergence", "duplicate_rejects",
+            "snapshots", "restores", "drains")}
 
     # -- request lifecycle --------------------------------------------------
 
-    def submit(self, req: scheduler.Request) -> None:
+    def submit(self, req: scheduler.Request) -> str:
+        """Validate and enqueue; returns resilience.QUEUED, or
+        resilience.SHED when the bounded queue rejects the newcomer under
+        the reject-new policy (under drop-oldest the VICTIM is shed and
+        the newcomer queued).  Malformed requests and duplicate rids still
+        raise -- those are caller bugs, not load conditions (duplicates
+        would corrupt per-rid results and recovery bookkeeping)."""
+        if req.rid in self._rids:
+            self._robust["duplicate_rejects"] += 1
+            raise ValueError(
+                f"duplicate request id {req.rid}: this engine already "
+                f"tracks that rid (rids key structured results and "
+                f"recovery requeues)")
         if req.total_len > self.max_cache_len:
             raise ValueError(
                 f"request {req.rid}: prompt+gen {req.total_len} exceeds "
@@ -443,11 +504,39 @@ class ServeEngine:
         elif req.features is not None:
             raise ValueError(f"request {req.rid}: features are encdec-only "
                              f"(family {self.cfg.family!r})")
+        if req.deadline is None and self._res.default_ttl_s is not None:
+            req.deadline = req.arrival_time + self._res.default_ttl_s
+        cap = self._res.max_queue
+        if cap is not None and len(self._queue) >= cap:
+            if self._res.shed_policy == "reject-new":
+                self._robust["shed"] += 1
+                self._rids.add(req.rid)
+                self._finish(req, req.arrival_time, res.SHED,
+                             f"queue full ({cap} queued), policy "
+                             f"reject-new")
+                return res.SHED
+            victim = self._queue.pop_oldest()       # drop-oldest
+            if victim is not None:
+                self._robust["shed"] += 1
+                self._finish(victim, req.arrival_time, res.SHED,
+                             f"queue full ({cap} queued), policy "
+                             f"drop-oldest")
+        self._rids.add(req.rid)
         self._queue.submit(req)
+        return res.QUEUED
 
-    def _finish(self, req: scheduler.Request, now: float) -> None:
+    def _finish(self, req: scheduler.Request, now: float,
+                outcome: str = res.OK,
+                error: Optional[str] = None) -> None:
         req.finish_time = now
+        req.outcome = outcome
+        req.error = error
+        if outcome == res.FAILED:
+            self._robust["failed"] += 1
         self.finished.append(req)
+        self._results[req.rid] = res.RequestResult(
+            rid=req.rid, outcome=outcome, tokens=list(req.tokens),
+            error=error, retries=req.retries)
 
     def _evict(self, slot: int) -> None:
         """Free a page: no scrubbing needed (see module docstring)."""
@@ -456,6 +545,7 @@ class ServeEngine:
         self._remaining[slot] = 0
         self._pos[slot] = 0
         self._tok[slot] = 0
+        self._replay[slot] = []
 
     @staticmethod
     def _stopped(req: scheduler.Request, tok: int) -> bool:
@@ -487,15 +577,23 @@ class ServeEngine:
         self._active = self._active[perm]
         self._remaining = self._remaining[perm]
         self._slot_req = [self._slot_req[i] for i in perm]
+        self._replay = [self._replay[i] for i in perm]
         self.compactions += 1
         return True
 
-    def _admit(self, now: float) -> int:
+    def _admit(self, now: float, resume_only: bool = False) -> int:
         self._compact()
         free = [i for i in range(self.n_slots) if not self._active[i]]
-        ready = self._queue.pop_ready(now, limit=len(free))
+        # resume_only (drain): only requests already carrying emitted
+        # tokens -- i.e. requeued by fault recovery -- are taken; fresh
+        # requests keep their queue position
+        pred = (lambda r: bool(r.tokens)) if resume_only else None
+        ready = self._queue.pop_ready(now, limit=len(free), predicate=pred)
         if not ready:
             return 0
+        # popped but not yet registered in a slot: a fault mid-admission
+        # leaves the leftovers here for _recover to requeue
+        self._admitting = list(ready)
         # group by prompt-length bucket so one compiled prefill graph per
         # (batch bucket, prompt bucket) covers the mix
         groups: Dict[int, List[scheduler.Request]] = {}
@@ -506,6 +604,7 @@ class ServeEngine:
             groups.setdefault(sb, []).append(r)
         for sb, group in sorted(groups.items()):
             self._admit_group(group, sb, free, now)
+        self._admitting = []
         return len(ready)
 
     def _prefill_bucket(self, sb: int) -> int:
@@ -542,12 +641,14 @@ class ServeEngine:
         inputs, lens = self._prefill_inputs(group, bb, sb)
         if self.prefill_chunk is None:
             self._graphs.add(("prefill", bb, sb, t_pre))
-            tok0, rows = self._bundle.prefill(self.params, inputs,
-                                              jnp.asarray(lens - 1), t_pre)
+            tok0, rows, bad0 = self._guarded(
+                "prefill", self._bundle.prefill, self.params, inputs,
+                jnp.asarray(lens - 1), t_pre)
         else:
-            tok0, rows = self._chunked_prefill(np.asarray(inputs), lens,
-                                               t_pre)
+            tok0, rows, bad0 = self._chunked_prefill(np.asarray(inputs),
+                                                     lens, t_pre)
         tok0 = np.asarray(tok0)
+        bad0 = np.asarray(bad0)
         slots = np.asarray([free.pop(0) for _ in range(g)], np.int32)
         # scatter the admitted pages into their slots; leaves without a
         # length axis (SSM/conv state, cross-KV) are reset wholesale
@@ -555,6 +656,36 @@ class ServeEngine:
                                        t_pre=t_pre)
         for i, r in enumerate(group):
             slot = int(slots[i])
+            self._admitting = [x for x in self._admitting if x is not r]
+            if bad0[i]:
+                # quarantine at prefill: structured FAILED outcome, and
+                # the slot's freshly-scattered pages are scrubbed -- the
+                # mask zeroes stale FINITE values exactly, but 0*NaN=NaN
+                # would leak into a later tenant's softmax
+                self._robust["quarantined"] += 1
+                self._finish(r, now, res.FAILED,
+                             "non-finite logits at prefill")
+                self._scrub(slot)
+                free.append(slot)
+                free.sort()
+                continue
+            if r.tokens:
+                # recovery-as-replay: this request was requeued by
+                # _recover with its already-emitted tokens.  The prefill
+                # above bitwise repeated its original admission (original
+                # prompt -> same prompt bucket -> same compiled graph);
+                # verify the regenerated first token and schedule the
+                # remaining recorded tokens for teacher-forced replay
+                # through the decode path (_drain_replay)
+                if int(tok0[i, 0]) != r.tokens[0]:
+                    self._robust["replay_divergence"] += 1
+                self._slot_req[slot] = r
+                self._active[slot] = True
+                self._pos[slot] = r.prompt_len
+                self._tok[slot] = r.tokens[0]
+                self._remaining[slot] = r.max_new_tokens - len(r.tokens)
+                self._replay[slot] = [int(t) for t in r.tokens[1:]]
+                continue
             r.tokens = [int(tok0[i, 0])]
             r.first_token_time = now
             self.total_generated += 1
@@ -588,16 +719,19 @@ class ServeEngine:
         for k in range(sb // c):
             toks = jnp.asarray(prompts[:, k * c:(k + 1) * c])
             pos = jnp.full((bb,), k * c, jnp.int32)
-            logits, cache = self._bundle.chunk_step(self.params, toks,
-                                                    cache, pos, active)
+            logits, cache = self._guarded(
+                "chunk", self._bundle.chunk_step, self.params, toks,
+                cache, pos, active)
             hit = np.nonzero((lens - 1) // c == k)[0]
             if hit.size:
                 sel = logits[jnp.asarray(hit),
                              jnp.asarray((lens[hit] - 1) % c)]
                 for j, b in enumerate(hit):
                     last[b] = sel[j]
-        tok0 = jnp.argmax(jnp.stack(last), axis=-1)
-        return tok0.astype(jnp.int32)[:, None], cache
+        stack = jnp.stack(last)
+        tok0 = jnp.argmax(stack, axis=-1)
+        bad0 = ~jnp.all(jnp.isfinite(stack), axis=-1)
+        return tok0.astype(jnp.int32)[:, None], cache, bad0
 
     # -- decode segments ----------------------------------------------------
 
@@ -616,9 +750,10 @@ class ServeEngine:
                                     maximum=self.max_cache_len)
         return bb, t_b
 
-    def _segment(self) -> np.ndarray:
+    def _segment(self):
         """Run one fused decode segment over the bucketed active prefix;
-        returns the [n_steps, bb] token block."""
+        returns the [n_steps, bb] token block and the [bb] non-finite
+        quarantine flags."""
         bb, t_b = self._segment_shape()
         n_steps = self.segment_len
         self._graphs.add(("segment", bb, t_b, n_steps))
@@ -626,7 +761,8 @@ class ServeEngine:
                                        or t_b == self.max_cache_len)
         cache_in = self._cache if fast else \
             self._spec.slice_live(self._cache, bb, t_b)
-        seq, tok, cache_out, pos = self._bundle.segment(
+        seq, tok, cache_out, pos, bad = self._guarded(
+            "segment", self._bundle.segment,
             self.params, jnp.asarray(self._tok[:bb]), cache_in,
             jnp.asarray(self._pos[:bb]), jnp.asarray(self._active[:bb]),
             n_steps)
@@ -638,13 +774,27 @@ class ServeEngine:
         self._tok[:bb] = np.asarray(tok)
         self._pos[:bb] = np.asarray(pos)
         self.occupancy.append(float(np.sum(self._active)) / self.n_slots)
-        return np.asarray(seq)
+        return np.asarray(seq), np.asarray(bad)
 
-    def _harvest(self, seq: np.ndarray, now: float) -> None:
+    def _harvest(self, seq: np.ndarray, bad: np.ndarray,
+                 now: float) -> None:
         n_steps, bb = seq.shape
         for slot in range(bb):
             req = self._slot_req[slot]
             if req is None:
+                continue
+            if bad[slot]:
+                # quarantine: this slot's logits went non-finite during
+                # the segment.  Masking isolation means no OTHER slot saw
+                # it, but this segment's tokens for the slot are not
+                # trustworthy (the flag is per-segment, not per-step), so
+                # the request fails with the tokens it had, and its pages
+                # are scrubbed before reuse (_scrub)
+                self._robust["quarantined"] += 1
+                self._finish(req, now, res.FAILED,
+                             "non-finite logits during decode")
+                self._evict(slot)
+                self._scrub(slot)
                 continue
             take = int(min(self._remaining[slot], n_steps))
             toks = seq[:take, slot]
@@ -661,20 +811,233 @@ class ServeEngine:
                 self._finish(req, now)
                 self._evict(slot)
 
+    # -- resilience: chaos sites, expiry, replay, recovery ------------------
+
+    def _guarded(self, kind: str, fn, *args):
+        """Every device dispatch funnels through here: count the per-kind
+        site, give the chaos schedule its shot at it, then dispatch.  The
+        check fires BEFORE the call, so an injected fault never leaves a
+        donated buffer half-consumed; failures unwind to step()/drain(),
+        which recover."""
+        idx = self._site_counts[kind]
+        self._site_counts[kind] = idx + 1
+        if self._chaos is not None:
+            self._chaos.check_site(f"{kind}:{idx}")
+        return fn(*args)
+
+    def _expire(self, now: float) -> int:
+        """EXPIRED outcomes for requests past their deadline: queued ones
+        never dispatch; in-flight ones are cancelled by slot eviction,
+        keeping the tokens already emitted."""
+        n = 0
+        for req in self._queue.pop_expired(now):
+            self._robust["expired_queued"] += 1
+            self._finish(req, now, res.EXPIRED,
+                         "deadline exceeded in queue")
+            n += 1
+        for slot in range(self.n_slots):
+            req = self._slot_req[slot]
+            if req is not None and req.expired(now):
+                self._robust["expired_inflight"] += 1
+                self._finish(req, now, res.EXPIRED,
+                             "deadline exceeded in flight")
+                self._evict(slot)
+                n += 1
+        return n
+
+    def _scrub(self, slot: int) -> None:
+        """Overwrite a quarantined slot's pages with freshly initialized
+        state.  Normal eviction never scrubs (stale FINITE values are
+        masked to exact zeros -- module docstring), but non-finite pages
+        would survive the mask: a masked softmax weight is an exact 0,
+        and 0 * NaN = NaN."""
+        zeros = self._spec.init_state(1, self.max_cache_len)
+        self._cache = self._spec.admit(self._cache, zeros,
+                                       np.asarray([slot], np.int32), 1)
+        if self._plan is not None:
+            self._cache = jax.device_put(
+                self._cache, dshard.to_shardings(self._plan.state_specs(),
+                                                 self._plan.mesh))
+
+    def _drain_replay(self, clock: scheduler.Clock) -> None:
+        """Teacher-forced replay of recovered requests' recorded tokens,
+        one single-token chunk dispatch at a time, through the SAME
+        compiled decode family as live traffic.  Replaying -- rather than
+        re-prefilling prompt+emitted in one go -- is what keeps recovery
+        bit-exact for EVERY family: prefill and stepwise decode are
+        different floating-point reduction orders for sequential state
+        (slot_state.FamilyState.prefill_chunkable), but a replayed step
+        repeats the fault-free step's ops bitwise.  Each replayed token is
+        verified against the recorded stream (`replay_divergence` --
+        determinism doubling as the recovery proof obligation, DESIGN.md
+        sec. 8)."""
+        while any(self._replay):
+            self._replay_step(clock.now())
+
+    def _replay_step(self, now: float) -> None:
+        hi = int(np.max(np.nonzero(self._active)[0])) + 1
+        bb = scheduler.bucket_pow2(hi, minimum=self.min_batch_bucket,
+                                   maximum=self.n_slots)
+        t_b = None
+        if self._spec.has_length_axis:
+            need = int(np.max(self._pos[:bb][self._active[:bb]])) + 1
+            t_b = scheduler.bucket_pow2(min(need, self.max_cache_len),
+                                        minimum=self.min_len_bucket,
+                                        maximum=self.max_cache_len)
+        self._graphs.add(("chunk", bb, 1, t_b))
+        # only slots mid-replay are active in this dispatch: co-resident
+        # caught-up requests neither advance nor perturb (masking + batch
+        # composition invariants, module docstring)
+        replaying = np.asarray([bool(self._replay[s]) for s in range(bb)])
+        fast = bb == self.n_slots and (t_b is None
+                                       or t_b == self.max_cache_len)
+        cache_in = self._cache if fast else \
+            self._spec.slice_live(self._cache, bb, t_b)
+        logits, cache_out = self._guarded(
+            "chunk", self._bundle.chunk_step,
+            self.params, jnp.asarray(self._tok[:bb]), cache_in,
+            jnp.asarray(self._pos[:bb]), jnp.asarray(replaying))
+        if fast:
+            self._cache = cache_out
+        else:
+            self._cache = self._spec.merge_live(self._cache, cache_out,
+                                                bb, t_b)
+        last = logits[:, -1, :]
+        nxt = np.asarray(jnp.argmax(last, axis=-1))
+        bad = np.asarray(~jnp.all(jnp.isfinite(last), axis=-1))
+        for slot in range(bb):
+            if not replaying[slot]:
+                continue
+            expect = self._replay[slot].pop(0)
+            self._robust["replayed_tokens"] += 1
+            if bad[slot]:
+                self._robust["quarantined"] += 1
+                self._finish(self._slot_req[slot], now, res.FAILED,
+                             "non-finite logits during replay")
+                self._evict(slot)
+                self._scrub(slot)
+                continue
+            # host argmax over identical logits bits == the in-scan
+            # argmax (comparison-based, no float accumulation)
+            if int(nxt[slot]) != expect:
+                self._robust["replay_divergence"] += 1
+            self._tok[slot] = expect       # teacher forcing
+            self._pos[slot] += 1
+
+    def _recover(self, exc: Exception, now: float) -> None:
+        """Requeue every in-flight (and mid-admission) request with its
+        already-emitted tokens, then rebuild the slot state from scratch.
+        The rebuilt state is NEVER derived from the old buffers: a failed
+        dispatch may already have consumed its donated cache argument.
+        Requeued requests re-enter through normal admission and REPLAY
+        their recorded tokens before generating new ones, so surviving
+        streams stay bit-identical to a fault-free run."""
+        key = "faults_injected" if isinstance(exc, SimulatedFailure) \
+            else "errors"
+        self._robust[key] += 1
+        self._robust["recoveries"] += 1
+        victims = [r for r in self._slot_req if r is not None]
+        seen = {id(r) for r in victims}
+        victims += [r for r in self._admitting
+                    if id(r) not in seen and r.outcome is None]
+        self._admitting = []
+        for r in victims:
+            r.retries += 1
+            if r.retries > self._res.max_recoveries:
+                self._finish(r, now, res.FAILED,
+                             f"recovery budget "
+                             f"({self._res.max_recoveries}) exhausted; "
+                             f"last error: {exc}")
+            else:
+                self._queue.submit(r)
+        self._cache = self._spec.init_state(self.n_slots,
+                                            self.max_cache_len)
+        if self._plan is not None:
+            self._cache = jax.device_put(
+                self._cache, dshard.to_shardings(self._plan.state_specs(),
+                                                 self._plan.mesh))
+        self._tok[:] = 0
+        self._pos[:] = 0
+        self._active[:] = False
+        self._remaining[:] = 0
+        self._slot_req = [None] * self.n_slots
+        self._replay = [[] for _ in range(self.n_slots)]
+
     # -- driver -------------------------------------------------------------
 
     def step(self, clock: Optional[scheduler.Clock] = None) -> bool:
         """Admit what has arrived, then run one decode segment.  Returns
         False when there was nothing to do (caller should wait for the next
-        arrival)."""
+        arrival).  Dispatch failures -- injected or real -- never escape:
+        `_recover` requeues the in-flight work and subsequent steps replay
+        it bit-exactly."""
         clock = clock or scheduler.Clock()
+        try:
+            return self._step_inner(clock)
+        except Exception as e:  # noqa: BLE001 -- the serve loop survives
+            self._recover(e, clock.now())
+            return True
+
+    def _step_inner(self, clock: scheduler.Clock,
+                    resume_only: bool = False) -> bool:
         now = clock.now()
-        admitted = self._admit(now)
+        expired = self._expire(now)
+        admitted = self._admit(now, resume_only=resume_only)
+        self._drain_replay(clock)
         if not self._active.any():
-            return admitted > 0
-        seq = self._segment()
-        self._harvest(seq, clock.now())
+            return bool(admitted or expired)
+        seq, bad = self._segment()
+        self._harvest(seq, bad, clock.now())
         return True
+
+    def drain(self, clock: Optional[scheduler.Clock] = None) -> None:
+        """Finish all in-flight work WITHOUT admitting fresh requests
+        (recovering requests -- requeued with emitted tokens by a fault
+        mid-drain -- are still re-admitted so their streams complete).
+        Fresh queued requests stay queued; pair with snapshot()/restore()
+        for rolling restarts."""
+        clock = clock or scheduler.Clock()
+        self._robust["drains"] += 1
+        while True:
+            try:
+                self._step_inner(clock, resume_only=True)
+            except Exception as e:  # noqa: BLE001
+                self._recover(e, clock.now())
+                continue
+            if not self._active.any() and not any(
+                    r.tokens for r in self._queue.pending()):
+                return
+
+    def snapshot(self, ckpt_dir: str, step: int = 0) -> str:
+        """Persist queue + per-slot request state atomically through
+        checkpoint/ckpt.py (launch/resilience.py encoding).  In-flight
+        requests are stored WITH their emitted tokens and resume on
+        restore() through the bit-exact recovery/replay path, so device
+        state never needs serializing."""
+        reqs = [r for r in self._slot_req if r is not None] \
+            + list(self._queue.pending())
+        self._robust["snapshots"] += 1
+        return res.snapshot_requests(ckpt_dir, step, reqs)
+
+    def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        """Load a snapshot into this (fresh or drained) engine's queue;
+        returns the number of requests restored."""
+        reqs = res.restore_requests(ckpt_dir, step=step)
+        for r in reqs:
+            if r.rid in self._rids:
+                raise ValueError(
+                    f"restore: rid {r.rid} is already tracked by this "
+                    f"engine (restore targets a fresh or drained engine)")
+            self._rids.add(r.rid)
+            self._queue.submit(r)
+        self._robust["restores"] += 1
+        return len(reqs)
+
+    def results(self) -> Dict[int, res.RequestResult]:
+        """Structured terminal outcome per finished request, keyed by rid
+        (resilience.RequestResult: outcome OK/SHED/EXPIRED/FAILED, tokens,
+        error, retries)."""
+        return dict(self._results)
 
     def run(self, requests: Sequence[scheduler.Request] = (),
             clock: Optional[scheduler.Clock] = None) -> Dict[int, np.ndarray]:
@@ -707,10 +1070,15 @@ class ServeEngine:
         """Upper bound on distinct compiled graphs: the segment bucket grid
         (batch buckets only for constant-size state) plus one prefill (or
         chunk) graph per (admission batch bucket, prompt bucket) -- what
-        `warmup()` walks."""
+        `warmup()` walks.  Chaos-armed (or snapshot-restoring) engines add
+        the recovery-replay grid: one single-token chunk graph per
+        (batch bucket, length bucket), the same grid shape as segments."""
         seg = len(self.batch_buckets) * max(1, len(self.len_buckets))
         pre = len(self.admission_batch_buckets) * len(self.prompt_buckets)
-        return seg + pre
+        bound = seg + pre
+        if self._chaos is not None or self._robust["restores"]:
+            bound += seg
+        return bound
 
     def _warmup_prefill_inputs(self, bb: int, sb: int):
         prompts = jnp.zeros((bb, sb), jnp.int32)
@@ -739,6 +1107,25 @@ class ServeEngine:
                 jax.block_until_ready(out[0])
                 self._graphs.add(key)
                 n += 1
+        if self._chaos is not None:
+            # a chaos-armed engine WILL recover, and recovery replays
+            # through single-token chunk dispatches: pre-compile that grid
+            # too, so the census stays warm-bounded under injected faults
+            # (tier1-chaos runs the warmup-census tests unchanged)
+            for bb in self.batch_buckets:
+                for t_b in (self.len_buckets or (None,)):
+                    key = ("chunk", bb, 1, t_b)
+                    if key in self._graphs:
+                        continue
+                    cache = self._spec.init_state(
+                        bb, t_b or self.max_cache_len)
+                    out = self._bundle.chunk_step(
+                        self.params, jnp.zeros((bb, 1), jnp.int32), cache,
+                        jnp.zeros((bb,), jnp.int32),
+                        jnp.zeros((bb,), bool))
+                    jax.block_until_ready(out[0])
+                    self._graphs.add(key)
+                    n += 1
         if prompt_lens is None:
             return n
         sbs = sorted({scheduler.bucket_pow2(pl,
@@ -785,6 +1172,20 @@ class ServeEngine:
             "compactions": self.compactions,
             "lowerings": dict(self._lowerings),
             "decode_bundle_lru": serve.decode_cache_info(),
+            "robustness": dict(self._robust),
+            "resilience": {
+                "max_queue": self._res.max_queue,
+                "shed_policy": self._res.shed_policy,
+                "default_ttl_s": self._res.default_ttl_s,
+                "max_recoveries": self._res.max_recoveries,
+                "chaos": None if self._chaos is None else {
+                    "sites": list(self._chaos.fail_at_sites),
+                    "rate": self._chaos.rate,
+                    "seed": self._chaos.seed,
+                    "max_failures": self._chaos.max_failures,
+                    "fired": sorted(self._chaos.failed),
+                },
+            },
         }
         if self._plan is not None:
             p = self._plan

@@ -1,0 +1,279 @@
+"""Serving resilience: admission control, fault injection, recovery.
+
+SILVIA's contract is that an aggressive transformation (packing narrow
+ops into one DSP) must be provably behavior-preserving; this repo carries
+that bar into serving as bit-exactness (engine == static ``generate()``,
+sharded == single-device).  This module supplies the FAILURE half of that
+story for `launch/engine.py`, with the same proof obligation: a
+fault-injected run must reproduce the fault-free token streams exactly
+(DESIGN.md sec. 8).
+
+Four pillars, all integrated into the engine:
+
+* **admission control** -- `ResilienceConfig`: a bounded request queue with
+  a load-shedding policy (reject the newcomer, or drop the oldest queued
+  request to make room) and per-request deadlines/TTL.  Expired queued
+  requests never dispatch; expired in-flight requests are cancelled via
+  slot eviction between segments, keeping their partial tokens.
+* **structured outcomes** -- every submitted request ends in exactly one of
+  `OK` / `SHED` / `EXPIRED` / `FAILED` (`RequestResult`); dispatch
+  exceptions recover instead of crashing the engine loop.
+* **fault injection** -- `ChaosSchedule` extends
+  `distributed.fault.FailureInjector` into the serving dispatch path:
+  sites are `(kind, index)` pairs over the engine's monotonically counted
+  dispatches (``segment:3``, ``prefill:0``, ``chunk:7``), listed
+  explicitly or drawn by a deterministic seeded hash at a given rate.
+  `$REPRO_CHAOS` arms every engine in the process (the CI `tier1-chaos`
+  job runs the whole engine/sharded suites this way).
+* **recovery as replay** -- on any dispatch failure the engine requeues
+  in-flight requests WITH their already-emitted tokens; at re-admission it
+  re-prefills the ORIGINAL prompt (same prompt bucket, same graphs) and
+  replays the emitted tokens through the single-token decode path with
+  teacher forcing.  Replay repeats bitwise the ops of the fault-free run
+  -- prefill(prompt) then per-token decode -- so recovered streams are
+  bit-identical for every family.  Re-prefilling ``prompt + emitted`` in
+  one go would NOT be exact for sequential-state families (ssd_forward's
+  chunked summation order differs from stepwise ssd_decode; see
+  ROADMAP/slot_state.FamilyState.prefill_chunkable), and would also leak
+  new prompt-bucket graphs.  Determinism doubles as the proof obligation:
+  the engine verifies each replayed token against the recorded stream and
+  counts any divergence (`replay_divergence`, asserted zero in tests).
+
+Snapshot/restore (`snapshot_requests` / `restore_requests`) persists the
+queue + per-slot request state through `checkpoint/ckpt.py` for rolling
+restarts; device state is NOT serialized -- restore re-enters the
+recovery path above, which regenerates it bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.distributed.fault import FailureInjector, SimulatedFailure
+
+__all__ = [
+    "OK", "SHED", "EXPIRED", "FAILED", "QUEUED",
+    "RequestResult", "ResilienceConfig", "ChaosSchedule",
+    "chaos_from_env", "snapshot_requests", "restore_requests",
+    "SimulatedFailure",
+]
+
+# terminal request outcomes (structured results instead of exceptions)
+OK = "ok"              # full stream delivered
+SHED = "shed"          # rejected by admission control (bounded queue)
+EXPIRED = "expired"    # deadline/TTL passed (queued or in-flight)
+FAILED = "failed"      # quarantined (non-finite logits) / retries exhausted
+# submit() return value for an accepted request (not a terminal outcome)
+QUEUED = "queued"
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Structured terminal outcome of one request (engine.results())."""
+    rid: int
+    outcome: str                      # OK | SHED | EXPIRED | FAILED
+    tokens: List[int]                 # possibly partial (EXPIRED/FAILED)
+    error: Optional[str] = None
+    retries: int = 0                  # fault recoveries this request rode
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Admission-control policy for a `ServeEngine`.
+
+    max_queue:       queued-request bound; None = unbounded (the
+                     pre-resilience behavior).
+    shed_policy:     what to do when the queue is full: "reject-new"
+                     sheds the incoming request, "drop-oldest" sheds the
+                     oldest queued request to admit the newcomer.
+    default_ttl_s:   default per-request TTL (deadline = arrival + ttl)
+                     applied at submit() when the request carries no
+                     explicit deadline; None = no deadline.
+    max_recoveries:  per-request cap on fault recoveries; a request that
+                     exceeds it is FAILED instead of requeued (bounds the
+                     work a persistently failing dispatch can absorb).
+    """
+    max_queue: Optional[int] = None
+    shed_policy: str = "reject-new"
+    default_ttl_s: Optional[float] = None
+    max_recoveries: int = 8
+
+    def __post_init__(self):
+        if self.shed_policy not in ("reject-new", "drop-oldest"):
+            raise ValueError(
+                f"shed_policy must be 'reject-new' or 'drop-oldest', got "
+                f"{self.shed_policy!r}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None)")
+
+
+# ---------------------------------------------------------------------------
+# fault schedules
+# ---------------------------------------------------------------------------
+
+def _hash_frac(seed: int, site: str) -> float:
+    """Deterministic uniform [0,1) from (seed, site) -- stable across
+    processes/hosts, unlike `hash()`."""
+    h = hashlib.sha256(f"{seed}|{site}".encode()).digest()
+    return int.from_bytes(h[:8], "big") / 2.0 ** 64
+
+
+@dataclasses.dataclass
+class ChaosSchedule(FailureInjector):
+    """FailureInjector over serving dispatch sites.
+
+    Sites are ``kind:index`` strings over the engine's per-kind dispatch
+    counters (kinds: "segment", "prefill", "chunk").  A site fails when
+    listed in `fail_at_sites` or when the deterministic hash of
+    (seed, site) falls under `rate`; each site fires at most once and
+    `max_failures` (if set) caps total injections, so chaos always makes
+    forward progress.
+    """
+    rate: float = 0.0
+    seed: int = 0
+    max_failures: Optional[int] = None
+
+    # the engine's guarded dispatch kinds (launch/engine.py _guarded)
+    SITE_KINDS = frozenset({"segment", "prefill", "chunk"})
+
+    def should_fail(self, site: str) -> bool:
+        if site in self.fail_at_sites:
+            return True
+        return self.rate > 0 and _hash_frac(self.seed, site) < self.rate
+
+    def check_site(self, site: str) -> None:
+        if site in self.failed:
+            return
+        if self.max_failures is not None \
+                and len(self.failed) >= self.max_failures:
+            return
+        if self.should_fail(site):
+            self.failed.add(site)
+            raise SimulatedFailure(f"injected serving fault at {site}")
+
+    @classmethod
+    def parse(cls, spec: str) -> "ChaosSchedule":
+        """Parse a $REPRO_CHAOS schedule.
+
+        Tokens separated by ',' or ';':  explicit sites ``kind:index``
+        (e.g. ``segment:3``), and/or ``rate=F`` / ``seed=N`` / ``max=N``
+        for the deterministic random schedule::
+
+            REPRO_CHAOS='segment:1;prefill:0'
+            REPRO_CHAOS='rate=0.05,seed=11'
+            REPRO_CHAOS='rate=0.2,seed=3,max=4;chunk:2'
+        """
+        sites: List[str] = []
+        rate, seed, max_failures = 0.0, 0, None
+        for tok in (t.strip() for part in spec.split(";")
+                    for t in part.split(",")):
+            if not tok:
+                continue
+            if "=" in tok:
+                k, v = tok.split("=", 1)
+                k = k.strip()
+                if k == "rate":
+                    rate = float(v)
+                elif k == "seed":
+                    seed = int(v)
+                elif k == "max":
+                    max_failures = int(v)
+                else:
+                    raise ValueError(
+                        f"REPRO_CHAOS: unknown key {k!r} in {spec!r} "
+                        f"(want rate=/seed=/max= or kind:index sites)")
+            elif ":" in tok:
+                kind, idx = tok.split(":", 1)
+                if kind not in cls.SITE_KINDS or not idx.isdigit():
+                    raise ValueError(
+                        f"REPRO_CHAOS: bad site {tok!r} (want "
+                        f"segment:N, prefill:N or chunk:N)")
+                sites.append(tok)
+            else:
+                raise ValueError(f"REPRO_CHAOS: cannot parse token {tok!r}")
+        return cls(fail_at_sites=tuple(sites), rate=rate, seed=seed,
+                   max_failures=max_failures)
+
+
+def chaos_from_env() -> Optional[ChaosSchedule]:
+    """The process-wide chaos schedule from $REPRO_CHAOS (None if unset).
+    Read at engine construction, so the whole engine/sharded test suites
+    run under injected faults simply by exporting the variable."""
+    spec = os.environ.get("REPRO_CHAOS", "").strip()
+    return ChaosSchedule.parse(spec) if spec else None
+
+
+# ---------------------------------------------------------------------------
+# queue + per-slot request snapshots (rolling restarts)
+# ---------------------------------------------------------------------------
+
+def _encode_requests(requests: Sequence[Any]) -> Tuple[list, dict]:
+    """(pytree of arrays, JSON-able meta) for checkpoint/ckpt.py.
+
+    Arrays (prompt, emitted tokens, optional encdec features) go in the
+    tree; scalars/metadata ride in the checkpoint's extra_meta.  Device
+    state is deliberately absent: restore replays (module docstring)."""
+    tree, meta = [], []
+    for r in requests:
+        leaf = {"prompt": np.asarray(r.prompt, np.int32),
+                "tokens": np.asarray(r.tokens, np.int32)}
+        if r.features is not None:
+            leaf["features"] = np.asarray(r.features, np.float32)
+        tree.append(leaf)
+        meta.append({
+            "rid": int(r.rid),
+            "max_new_tokens": int(r.max_new_tokens),
+            "arrival_time": float(r.arrival_time),
+            "deadline": None if r.deadline is None else float(r.deadline),
+            "stop_tokens": None if r.stop_tokens is None
+            else [int(t) for t in r.stop_tokens],
+            "retries": int(r.retries),
+            "has_features": r.features is not None,
+        })
+    return tree, {"requests": meta}
+
+
+def snapshot_requests(ckpt_dir: str, step: int,
+                      requests: Sequence[Any]) -> str:
+    """Atomically persist request-level serve state (ckpt.py layout)."""
+    tree, meta = _encode_requests(requests)
+    return ckpt.save_checkpoint(ckpt_dir, step, tree, extra_meta=meta)
+
+
+def restore_requests(ckpt_dir: str, step: Optional[int] = None) -> list:
+    """Rebuild `scheduler.Request`s from a snapshot (None-safe: returns []
+    when no committed snapshot exists).  Requests with emitted tokens
+    re-enter the engine on the recovery/replay path."""
+    from repro.launch import scheduler  # here to avoid an import cycle
+
+    meta, step = ckpt.load_meta(ckpt_dir, step=step)
+    if meta is None:
+        return []
+    entries = meta["requests"]
+    like = []
+    for e in entries:
+        leaf = {"prompt": np.zeros(0, np.int32),
+                "tokens": np.zeros(0, np.int32)}
+        if e["has_features"]:
+            leaf["features"] = np.zeros(0, np.float32)
+        like.append(leaf)
+    tree, _ = ckpt.restore_checkpoint(ckpt_dir, like, step=step)
+    out = []
+    for e, leaf in zip(entries, tree):
+        req = scheduler.Request(
+            rid=e["rid"], prompt=np.asarray(leaf["prompt"], np.int32),
+            max_new_tokens=e["max_new_tokens"],
+            arrival_time=e["arrival_time"],
+            stop_tokens=e["stop_tokens"],
+            features=np.asarray(leaf["features"], np.float32)
+            if e["has_features"] else None,
+            deadline=e["deadline"])
+        req.tokens = [int(t) for t in np.asarray(leaf["tokens"])]
+        req.retries = e["retries"]
+        out.append(req)
+    return out

@@ -76,24 +76,31 @@ def bucket_set(minimum: int, maximum: int) -> tuple:
 # requests
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class Request:
+@dataclasses.dataclass(eq=False)      # identity eq: prompt arrays don't
+class Request:                        # support elementwise == in `in`/remove
     """One generation request.  `prompt` is a 1-D int token array; the
     engine generates up to `max_new_tokens` greedy tokens, stopping the
     segment a token in `stop_tokens` is emitted (the stop token is the
     last token of the output).  `features` carries per-request modality
     inputs for encoder-decoder families (whisper: [enc_len, d_model]
-    precomputed frame embeddings)."""
+    precomputed frame embeddings).  `deadline` is an absolute time in the
+    serving clock's domain (same domain as `arrival_time`); past it the
+    request is EXPIRED instead of (further) served -- the engine fills it
+    from its default TTL when left None (launch/resilience.py)."""
     rid: int
     prompt: np.ndarray
     max_new_tokens: int
     arrival_time: float = 0.0
     stop_tokens: Optional[Sequence[int]] = None
     features: Optional[np.ndarray] = None
+    deadline: Optional[float] = None
     # filled in by the engine:
     tokens: List[int] = dataclasses.field(default_factory=list)
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    outcome: Optional[str] = None      # resilience.OK/SHED/EXPIRED/FAILED
+    error: Optional[str] = None
+    retries: int = 0                   # fault recoveries survived
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -111,6 +118,9 @@ class Request:
     @property
     def total_len(self) -> int:
         return self.prompt_len + self.max_new_tokens
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
 
     def latency(self) -> Optional[float]:
         if self.finish_time is None:
@@ -140,13 +150,39 @@ class RequestQueue:
         t = self._pending[0].arrival_time
         return None if t <= now else t
 
-    def pop_ready(self, now: float, limit: int) -> List[Request]:
-        """Up to `limit` requests whose arrival_time <= now, FIFO order."""
+    def pop_ready(self, now: float, limit: int,
+                  predicate=None) -> List[Request]:
+        """Up to `limit` requests whose arrival_time <= now, FIFO order.
+        With `predicate`, only matching requests are taken (non-matching
+        arrived requests keep their queue position)."""
         out: List[Request] = []
-        while self._pending and len(out) < limit \
-                and self._pending[0].arrival_time <= now:
-            out.append(self._pending.pop(0))
+        i = 0
+        while i < len(self._pending) and len(out) < limit \
+                and self._pending[i].arrival_time <= now:
+            if predicate is None or predicate(self._pending[i]):
+                out.append(self._pending.pop(i))
+            else:
+                i += 1
         return out
+
+    def pop_expired(self, now: float) -> List[Request]:
+        """Remove and return every queued request whose deadline passed
+        (arrived or not: a deadline can lapse while still in transit)."""
+        out = [r for r in self._pending if r.expired(now)]
+        if out:
+            dead = {id(r) for r in out}
+            self._pending = [r for r in self._pending
+                             if id(r) not in dead]
+        return out
+
+    def pop_oldest(self) -> Optional[Request]:
+        """Remove and return the head of the queue (drop-oldest load
+        shedding); None when empty."""
+        return self._pending.pop(0) if self._pending else None
+
+    def pending(self) -> tuple:
+        """Snapshot view of the queued requests (FIFO order)."""
+        return tuple(self._pending)
 
 
 # ---------------------------------------------------------------------------
@@ -155,9 +191,13 @@ class RequestQueue:
 
 def synthetic_traffic(seed: int, n_requests: int, rate: float,
                       prompt_lens: Sequence[int], gen_lens: Sequence[int],
-                      vocab: int) -> List[Request]:
+                      vocab: int,
+                      ttls: Optional[Sequence[Optional[float]]] = None,
+                      ) -> List[Request]:
     """Poisson arrivals (exponential inter-arrival gaps at `rate` req/s)
-    with prompt/gen lengths drawn uniformly from the given mixes."""
+    with prompt/gen lengths drawn uniformly from the given mixes.  With
+    `ttls`, each request draws a TTL from the mix (None entries mean no
+    deadline) -- the deadline mix for resilience benchmarks/tests."""
     rng = np.random.default_rng(seed)
     t = 0.0
     reqs = []
@@ -166,8 +206,12 @@ def synthetic_traffic(seed: int, n_requests: int, rate: float,
         pl = int(rng.choice(np.asarray(prompt_lens)))
         gl = int(rng.choice(np.asarray(gen_lens)))
         prompt = rng.integers(0, vocab, size=pl, dtype=np.int32)
+        deadline = None
+        if ttls is not None:
+            ttl = ttls[int(rng.integers(0, len(ttls)))]
+            deadline = None if ttl is None else t + float(ttl)
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=gl,
-                            arrival_time=t))
+                            arrival_time=t, deadline=deadline))
     return reqs
 
 

@@ -98,6 +98,9 @@ def run(args) -> dict:
                         checkpoint.save_checkpoint(
                             args.ckpt_dir, step,
                             {"params": params, "opt": opt})
+                        # committed progress: next incident backs off from
+                        # the base again instead of the escalated streak
+                        policy.reset()
                 if args.ckpt_every:
                     checkpoint.save_checkpoint(
                         args.ckpt_dir, args.steps,

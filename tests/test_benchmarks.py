@@ -34,3 +34,79 @@ def test_table2_auto_matches_manual():
     assert all(r["match"] for r in rows)
     names = {r["name"] for r in rows}
     assert names == {"ResNet8", "ResNet20", "CNV-8b", "MobileNet-4b"}
+
+
+# ---------------------------------------------------------------------------
+# scripts/bench_compare.py regression gate
+# ---------------------------------------------------------------------------
+
+def _bench_compare():
+    import importlib.util
+    import pathlib
+    path = pathlib.Path(__file__).parent.parent / "scripts" / "bench_compare.py"
+    spec = importlib.util.spec_from_file_location("bench_compare", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _payload(tok_s, host=None):
+    out = {"engine": {"agg_tok_s": tok_s}}
+    if host is not None:
+        out["host_class"] = host
+    return out
+
+
+@pytest.fixture
+def bench_dirs(tmp_path):
+    import json
+    base = tmp_path / "baselines"
+    cur = tmp_path / "results"
+    base.mkdir(), cur.mkdir()
+
+    def write(payloads):
+        for d, p in zip((base, cur), payloads):
+            (d / "serve_throughput_dense.json").write_text(json.dumps(p))
+        return base, cur
+    return write
+
+
+def test_bench_compare_fails_on_regression(bench_dirs, capsys):
+    bc = _bench_compare()
+    host = {"backend": "cpu", "cpus": 8}
+    base, cur = bench_dirs([_payload(100.0, host), _payload(50.0, host)])
+    assert bc.compare(base, cur, 0.30) == 1
+    assert "FAIL serve_throughput_dense" in capsys.readouterr().out
+
+
+def test_bench_compare_skips_on_host_class_mismatch(bench_dirs, capsys):
+    """A baseline recorded on a different host class is warned about and
+    skipped -- the gate must bind to code, not runner hardware."""
+    bc = _bench_compare()
+    base, cur = bench_dirs([_payload(100.0, {"backend": "cpu", "cpus": 64}),
+                            _payload(50.0, {"backend": "cpu", "cpus": 8})])
+    assert bc.compare(base, cur, 0.30) == 0
+    out = capsys.readouterr().out
+    assert "host-class mismatch" in out
+    assert "1 skipped" in out
+
+
+def test_bench_compare_unstamped_baseline_still_compares(bench_dirs):
+    """Pre-host-class baselines (no stamp) keep gating (back-compat)."""
+    bc = _bench_compare()
+    base, cur = bench_dirs([_payload(100.0),
+                            _payload(50.0, {"backend": "cpu", "cpus": 8})])
+    assert bc.compare(base, cur, 0.30) == 1
+    base, cur = bench_dirs([_payload(100.0), _payload(95.0)])
+    assert bc.compare(base, cur, 0.30) == 0
+
+
+def test_write_bench_json_stamps_host_class(tmp_path, monkeypatch):
+    import json
+    from benchmarks import common
+    monkeypatch.setenv("BENCH_DIR", str(tmp_path))
+    common.write_bench_json({"engine": {"agg_tok_s": 1.0}}, "stamped")
+    payload = json.loads((tmp_path / "stamped.json").read_text())
+    assert payload["host_class"] == common.host_class()
+    assert set(payload["host_class"]) == {
+        "platform", "machine", "cpus", "backend", "device_kind"}
