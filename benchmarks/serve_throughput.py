@@ -38,9 +38,20 @@ tokens, and `recovery_overhead` (replayed / delivered tokens -- the cost
 of bit-exact recovery-as-replay).  The BENCH file gains a `_chaos`
 suffix so the regression gate tracks chaos throughput separately.
 
+`--device-loss [SPEC]` (requires `--mesh`) additionally KILLS devices
+mid-run (distributed/elastic.py DeviceLossInjector; the default arm
+loses half the mesh at the second decode segment) and reports the
+elastic-serving metrics: degradation count, re-shard latency
+(`reshard_s`), the final degraded mesh shape, and `post_shrink_tok_s`
+(throughput after the last degrade -- what the shrunken mesh sustains).
+Streams stay bit-identical throughout (tests/test_elastic.py).  The
+BENCH file gains an `_elastic` suffix so the gate tracks degraded-mesh
+throughput against its own baseline.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
         [--family {dense,ssm,hybrid,encdec}] [--silvia {off,add,muladd,all}]
-        [--mesh DxM] [--chaos [SPEC]] [--n-requests N] [--rate R]
+        [--mesh DxM] [--chaos [SPEC]] [--device-loss [SPEC]]
+        [--n-requests N] [--rate R]
 """
 from __future__ import annotations
 
@@ -55,6 +66,7 @@ import numpy as np
 from benchmarks import common
 from repro import configs
 from repro.distributed import context as dctx
+from repro.distributed import elastic
 from repro.kernels import registry
 from repro.launch import resilience, scheduler, serve
 from repro.launch.engine import ServeEngine
@@ -112,7 +124,8 @@ def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
     clock = scheduler.FastForwardClock()
     t0 = clock.now()
     eng.run(requests, clock)
-    elapsed = clock.now() - t0
+    end = clock.now()
+    elapsed = end - t0
     info = eng.cache_info()
     out = _summary(eng.finished, elapsed)
     out["mean_occupancy"] = round(float(np.mean(eng.occupancy)), 3) \
@@ -143,6 +156,18 @@ def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
         # teacher forcing per token actually delivered
         out["recovery_overhead"] = round(
             rb["replayed_tokens"] / max(delivered, 1), 3)
+    degrade_at = out.get("mesh", {}).get("degrade_at", [])
+    if degrade_at:
+        # throughput the SHRUNKEN mesh sustained: tokens delivered after
+        # the last degrade over the remaining serving time
+        t_d = max(degrade_at)
+        post = sum(len(r.tokens) for r in eng.finished
+                   if r.finish_time is not None and r.finish_time >= t_d)
+        out["post_shrink_tok_s"] = round(post / max(end - t_d, 1e-9), 1)
+        out["degraded"] = info["mesh"]["degraded"]
+        out["reshard_s"] = round(info["mesh"]["reshard_s"], 4)
+        out["final_mesh"] = "x".join(
+            str(v) for v in info["mesh"]["shape"].values())
     return out
 
 
@@ -215,7 +240,8 @@ CHAOS_TTLS = (None, None, None, 5.0)
 
 def run(smoke: bool = False, silvia_passes: str = "off",
         n_requests: int | None = None, rate: float | None = None,
-        family: str = "dense", mesh=None, chaos: str | None = None) -> dict:
+        family: str = "dense", mesh=None, chaos: str | None = None,
+        device_loss: str | None = None) -> dict:
     arch = FAMILY_ARCHS[family]
     cfg = configs.get_reduced_config(arch)
     if smoke:
@@ -231,6 +257,14 @@ def run(smoke: bool = False, silvia_passes: str = "off",
     if mesh is not None:
         # the slot axis must split over the data shards
         n_slots = max(n_slots, mesh[0])
+    if device_loss is not None:
+        if mesh is None:
+            raise ValueError("--device-loss needs --mesh (there is no mesh "
+                             "to shrink on a single device)")
+        if device_loss == "auto":
+            # lose half the mesh at the second decode segment
+            device_loss = f"lose@segment:1={max(1, mesh[0] * mesh[1] // 2)}"
+        chaos = device_loss if chaos is None else f"{chaos};{device_loss}"
     enc_len = None
     if family == "encdec":
         enc_len = 16 if smoke else 32
@@ -263,7 +297,7 @@ def run(smoke: bool = False, silvia_passes: str = "off",
                    "gen_lens": list(gen_lens), "quant": "w8a8(forced)",
                    "silvia": silvia_passes, "enc_len": enc_len,
                    "mesh": None if mesh is None else f"{mesh[0]}x{mesh[1]}",
-                   "chaos": chaos,
+                   "chaos": chaos, "device_loss": device_loss,
                    "devices": jax.device_count(),
                    "backend": jax.default_backend(),
                    "lowerings": registry.active_lowerings()},
@@ -272,6 +306,8 @@ def run(smoke: bool = False, silvia_passes: str = "off",
                              silvia_passes=silvia_passes, enc_len=enc_len,
                              mesh=mesh,
                              chaos=None if chaos is None
+                             else elastic.DeviceLossInjector.parse(chaos)
+                             if "lose" in chaos
                              else resilience.ChaosSchedule.parse(chaos)),
         "static": run_static(params, cfg, traffic(), n_slots=n_slots,
                              silvia_passes=silvia_passes, enc_len=enc_len),
@@ -307,6 +343,13 @@ def main():
                          "schedule (resilience.ChaosSchedule syntax, e.g. "
                          "'segment:2;prefill:1' or 'rate=0.05,seed=3'); "
                          f"bare --chaos uses '{DEFAULT_CHAOS}'")
+    ap.add_argument("--device-loss", nargs="?", const="auto", default=None,
+                    metavar="SPEC",
+                    help="kill mesh devices mid-run and serve on the "
+                         "re-planned degraded mesh (DeviceLossInjector "
+                         "syntax, e.g. 'lose@segment:1=4'); bare "
+                         "--device-loss loses half the mesh at segment 1; "
+                         "requires --mesh")
     ap.add_argument("--n-requests", type=int, default=None)
     ap.add_argument("--rate", type=float, default=None,
                     help="Poisson arrival rate (req/s)")
@@ -317,14 +360,19 @@ def main():
             f"--mesh {args.mesh} needs {mesh[0] * mesh[1]} devices, have "
             f"{jax.device_count()} (set XLA_FLAGS="
             f"--xla_force_host_platform_device_count=N to simulate)")
+    if args.device_loss is not None and mesh is None:
+        raise SystemExit("--device-loss needs --mesh (no mesh to shrink)")
     result = run(smoke=args.smoke, silvia_passes=args.silvia,
                  n_requests=args.n_requests, rate=args.rate,
-                 family=args.family, mesh=mesh, chaos=args.chaos)
+                 family=args.family, mesh=mesh, chaos=args.chaos,
+                 device_loss=args.device_loss)
     print(json.dumps(result, indent=2))
     name = f"serve_throughput_{args.family}"
     if args.mesh:
         name += f"_{args.mesh}"
-    if args.chaos is not None:
+    if args.device_loss is not None:
+        name += "_elastic"
+    elif args.chaos is not None:
         name += "_chaos"
     common.write_bench_json(result, name)
     print("BENCH " + json.dumps(result))

@@ -14,6 +14,11 @@ The job FAILS (exit 1) when a current metric drops more than
 lesson applied to CI: regressions are caught by stored measurements, not
 eyeballed.  Missing counterparts (a benchmark not run in this job, a new
 benchmark without a baseline yet) are reported and skipped, never failed.
+A DAMAGED payload, on the other hand, fails loudly with a one-line
+diagnostic (never a traceback): an unreadable/corrupt JSON file or a
+zero/negative metric value would otherwise make the gate vacuous -- a
+zero baseline accepts any regression, a zero candidate is a broken run,
+and a traceback buries which file was at fault.
 Absolute smoke throughput is host-dependent, so payloads carry a
 `host_class` stamp (benchmarks/common.py) and a baseline recorded on a
 DIFFERENT host class is warned about and skipped, never compared; refresh
@@ -33,19 +38,41 @@ def _metric(name: str, payload: dict):
     if name.startswith("serve_throughput"):
         try:
             return "engine.agg_tok_s", float(payload["engine"]["agg_tok_s"])
-        except (KeyError, TypeError):
+        except (KeyError, TypeError, ValueError):
             return None
     if name.startswith("pipeline_overhead"):
         try:
             return ("decode.fused_tok_s",
                     float(payload["decode"]["fused_tok_s"]))
-        except (KeyError, TypeError):
+        except (KeyError, TypeError, ValueError):
             return None
     return None
 
 
+def _load_payload(path: pathlib.Path, role: str):
+    """(payload, None) or (None, one-line diagnostic) -- never raises."""
+    try:
+        payload = json.loads(path.read_text())
+    except OSError as e:
+        return None, f"BAD {path.stem}: unreadable {role} {path}: {e}"
+    except ValueError as e:
+        return None, f"BAD {path.stem}: corrupt {role} JSON {path}: {e}"
+    if not isinstance(payload, dict):
+        return None, (f"BAD {path.stem}: {role} {path} is not a JSON "
+                      f"object (got {type(payload).__name__})")
+    return payload, None
+
+
 def compare(baselines: pathlib.Path, results: pathlib.Path,
             threshold: float) -> int:
+    if not baselines.is_dir():
+        print(f"bench_compare: baselines directory {baselines} does not "
+              f"exist")
+        return 1
+    if not results.is_dir():
+        print(f"bench_compare: results directory {results} does not exist "
+              f"(did the benchmark step run / export $BENCH_DIR?)")
+        return 1
     failures = []
     checked = skipped = 0
     for base_file in sorted(baselines.glob("*.json")):
@@ -55,8 +82,13 @@ def compare(baselines: pathlib.Path, results: pathlib.Path,
             print(f"SKIP {name}: no result file in this job")
             skipped += 1
             continue
-        base_payload = json.loads(base_file.read_text())
-        cur_payload = json.loads(cur_file.read_text())
+        base_payload, err = _load_payload(base_file, "baseline")
+        if err is None:
+            cur_payload, err = _load_payload(cur_file, "candidate")
+        if err is not None:
+            print(err)
+            failures.append(name)
+            continue
         bhost = base_payload.get("host_class")
         chost = cur_payload.get("host_class")
         if bhost and chost and bhost != chost:
@@ -76,6 +108,16 @@ def compare(baselines: pathlib.Path, results: pathlib.Path,
             continue
         path, base_v = base
         _, cur_v = cur
+        bad_vals = [f"baseline {path}={base_v}" if base_v <= 0 else None,
+                    f"candidate {path}={cur_v}" if cur_v <= 0 else None]
+        bad_vals = [b for b in bad_vals if b]
+        if bad_vals:
+            # a zero/negative baseline makes the floor vacuous; a
+            # zero/negative candidate is a broken benchmark run
+            print(f"BAD {name}: non-positive metric "
+                  f"({'; '.join(bad_vals)}) -- gate cannot arm")
+            failures.append(name)
+            continue
         floor = base_v * (1.0 - threshold)
         status = "OK" if cur_v >= floor else "FAIL"
         print(f"{status} {name}: {path} current={cur_v:.1f} "
@@ -86,7 +128,7 @@ def compare(baselines: pathlib.Path, results: pathlib.Path,
     print(f"bench_compare: {checked} checked, {skipped} skipped, "
           f"{len(failures)} failed (threshold {threshold:.0%})")
     if failures:
-        print("regressed benchmarks:", ", ".join(failures))
+        print("failed benchmarks:", ", ".join(failures))
         return 1
     return 0
 

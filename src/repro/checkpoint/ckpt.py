@@ -23,6 +23,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -84,28 +85,60 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
     return final
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def _committed_steps(ckpt_dir: str) -> list:
+    """Committed step numbers, ascending.  Foreign step_* dirs (bad
+    suffix) are skipped, never raised on -- a stray file in the ckpt dir
+    must not take restore down with it."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = []
     for name in os.listdir(ckpt_dir):
         if name.startswith("step_") and not name.endswith(".tmp"):
             if os.path.exists(os.path.join(ckpt_dir, name, _COMMIT)):
-                steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except (IndexError, ValueError):
+                    warnings.warn(f"ignoring malformed checkpoint dir "
+                                  f"{name!r} in {ckpt_dir}")
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _read_meta(ckpt_dir: str, step: int) -> Optional[dict]:
+    """The index.json meta of one committed step, or None (with a
+    warning) when the index is missing/corrupt -- a damaged checkpoint
+    degrades to "not restorable", it never crashes the restore path."""
+    path = os.path.join(ckpt_dir, f"step_{step:09d}", "index.json")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        meta = doc["meta"]
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        warnings.warn(f"checkpoint step {step} in {ckpt_dir} has a "
+                      f"missing/corrupt index.json ({e}); skipping it")
+        return None
+    return meta
 
 
 def load_meta(ckpt_dir: str, *, step: Optional[int] = None):
     """(extra_meta dict, step) of the latest (or given) committed
     checkpoint, or (None, None).  Readable BEFORE building a `like`
     template -- restore flows whose tree structure is described by the
-    metadata (e.g. launch/resilience.py request snapshots) need it first."""
-    step = latest_step(ckpt_dir) if step is None else step
-    if step is None:
-        return None, None
-    with open(os.path.join(ckpt_dir, f"step_{step:09d}",
-                           "index.json")) as f:
-        return json.load(f)["meta"], step
+    metadata (e.g. launch/resilience.py request snapshots) need it first.
+    When no step is pinned and the newest committed checkpoint is
+    damaged, earlier committed steps are tried (warn-and-fall-back)."""
+    if step is not None:
+        meta = _read_meta(ckpt_dir, step)
+        return (None, None) if meta is None else (meta, step)
+    for s in reversed(_committed_steps(ckpt_dir)):
+        meta = _read_meta(ckpt_dir, s)
+        if meta is not None:
+            return meta, s
+    return None, None
 
 
 def restore_checkpoint(ckpt_dir: str, like: Any, *, step: Optional[int] = None,
@@ -140,10 +173,7 @@ def restore_checkpoint(ckpt_dir: str, like: Any, *, step: Optional[int] = None,
 
 
 def _gc(ckpt_dir: str, keep: int):
-    steps = sorted(
-        int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
-        if n.startswith("step_") and not n.endswith(".tmp")
-        and os.path.exists(os.path.join(ckpt_dir, n, _COMMIT)))
+    steps = _committed_steps(ckpt_dir)
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:09d}"),
                       ignore_errors=True)

@@ -31,18 +31,22 @@ shadow real TPU timings for the same shapes; v2 entries can never collide
 across lowerings or modes, and stale v1 entries are simply never read.
 
 Cache location: $REPRO_AUTOTUNE_CACHE, else ~/.cache/repro/autotune.json.
+On-disk format and failure handling live in kernels/diskcache.py: a
+schema-versioned, checksummed envelope written atomically under a file
+lock -- a corrupt/truncated/foreign-version cache file warns and
+recomputes, it can never crash an engine.
 """
 from __future__ import annotations
 
-import json
 import os
 import pathlib
-import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import diskcache
 
 CACHE_VERSION = 2   # bumped: v2 keys fold in (lowering id, interpret mode)
 
@@ -110,31 +114,21 @@ def cache_path() -> pathlib.Path:
 def _load() -> dict:
     global _cache
     if _cache is None:
-        try:
-            _cache = json.loads(cache_path().read_text())
-        except (OSError, ValueError):
-            _cache = {}
+        _cache = diskcache.load(cache_path(), CACHE_VERSION)
     return _cache
 
 
 def _save() -> None:
     global _cache
     path = cache_path()
-    try:
-        # merge-on-save: another process may have tuned other shapes since
-        # we loaded; our in-process entries win only on key collision
-        try:
-            on_disk = json.loads(path.read_text())
-        except (OSError, ValueError):
-            on_disk = {}
-        _cache = {**on_disk, **_cache}
-        path.parent.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(_cache, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
-    except OSError:
-        pass  # read-only FS: tuning still works in-process
+    # lock the read-merge-write cycle: another process may have tuned
+    # other shapes since we loaded; our in-process entries win only on
+    # key collision.  diskcache handles atomicity and read-only FS
+    # (tuning still works in-process when store() fails)
+    with diskcache.locked(path):
+        on_disk = diskcache.load(path, CACHE_VERSION)
+        _cache = {**on_disk, **(_cache or {})}
+        diskcache.store(path, CACHE_VERSION, _cache)
 
 
 def _interpret_default(lowering: str) -> bool:

@@ -1,0 +1,129 @@
+"""Hardened persistent JSON caches (autotune blocks, lowering timings).
+
+The tuning caches are *derived* data -- every entry can be recomputed by
+re-timing -- so the one unforgivable failure mode is a cache file that
+CRASHES an engine.  This module wraps the on-disk format in a defensive
+envelope so the consumers (`kernels/autotune.py`, `kernels/timings.py`)
+can treat any damaged file as simply empty:
+
+    {"schema": <int>, "checksum": "sha256:<hex of canonical entries>",
+     "entries": {...}}
+
+* `load` returns the entries dict, or `{}` with a `warnings.warn` for
+  every way a file can be wrong: unreadable, truncated/corrupt JSON,
+  not-a-dict, missing/foreign schema version (legacy pre-envelope flat
+  files land here too), or a checksum that doesn't match the entries
+  (partial write, manual edit, bit rot).  It never raises.
+* `store` writes atomically: serialize to a tempfile in the target
+  directory, fsync, `os.replace` -- a reader sees the old complete file
+  or the new complete file, never a prefix.
+* `locked` serializes read-merge-write cycles between engines on one
+  host with an `fcntl` lock on a `.lock` sidecar (the data file itself
+  is replaced atomically, so locking it would lock a dead inode).  On
+  platforms/filesystems without flock it degrades to unlocked -- the
+  atomic replace still prevents torn files, concurrent writers can then
+  only lose each other's merges, not corrupt them.
+"""
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import json
+import os
+import pathlib
+import tempfile
+import warnings
+
+
+def checksum(entries: dict) -> str:
+    canon = json.dumps(entries, sort_keys=True, separators=(",", ":"))
+    return "sha256:" + hashlib.sha256(canon.encode()).hexdigest()
+
+
+def _warn(path: pathlib.Path, why: str) -> None:
+    warnings.warn(f"ignoring cache file {path}: {why} (entries will be "
+                  f"recomputed)", stacklevel=3)
+
+
+def load(path: pathlib.Path, schema: int) -> dict:
+    """Entries from `path`, or {} (with a warning) for anything damaged.
+    A missing file is the normal cold-start case and stays silent."""
+    try:
+        text = path.read_text()
+    except FileNotFoundError:
+        return {}
+    except OSError as e:
+        _warn(path, f"unreadable ({e})")
+        return {}
+    try:
+        doc = json.loads(text)
+    except ValueError as e:
+        _warn(path, f"corrupt JSON ({e})")
+        return {}
+    if not isinstance(doc, dict):
+        _warn(path, f"expected a JSON object, got {type(doc).__name__}")
+        return {}
+    if doc.get("schema") != schema:
+        _warn(path, f"schema {doc.get('schema')!r} != expected {schema} "
+                    "(foreign version or legacy flat format)")
+        return {}
+    entries = doc.get("entries")
+    if not isinstance(entries, dict):
+        _warn(path, "missing entries object")
+        return {}
+    if doc.get("checksum") != checksum(entries):
+        _warn(path, "checksum mismatch (truncated or edited)")
+        return {}
+    return entries
+
+
+def store(path: pathlib.Path, schema: int, entries: dict) -> bool:
+    """Atomic tmp+fsync+rename write of the envelope; False (never an
+    exception) on unwritable filesystems -- callers keep their in-process
+    cache either way."""
+    doc = {"schema": schema, "checksum": checksum(entries),
+           "entries": entries}
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            with contextlib.suppress(OSError):
+                os.unlink(tmp)
+            raise
+        return True
+    except OSError:
+        return False
+
+
+@contextlib.contextmanager
+def locked(path: pathlib.Path):
+    """Exclusive advisory lock for a read-merge-write cycle on `path`
+    (taken on a `.lock` sidecar; see module docstring).  Best-effort:
+    yields unlocked when flock is unavailable."""
+    lock_path = pathlib.Path(str(path) + ".lock")
+    f = None
+    try:
+        try:
+            import fcntl
+            lock_path.parent.mkdir(parents=True, exist_ok=True)
+            f = open(lock_path, "a+")
+            fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+        except (ImportError, OSError):
+            if f is not None:
+                f.close()
+                f = None
+        yield
+    finally:
+        if f is not None:
+            try:
+                import fcntl
+                fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+            except (ImportError, OSError):
+                pass
+            f.close()

@@ -10,22 +10,24 @@ native Pallas family (CPU).  No record -> `ref` remains the fallback, so
 behaviour is bit-for-bit the PR-4 default until a host has actually
 measured itself.
 
-Schema (one JSON object, merged on save like kernels/autotune.py):
+Schema (entries object, merged on save like kernels/autotune.py):
 
     {"v1:<backend>:<op>": {"<lowering id>": {"us": float, "shape": str,
                                              "iters": int}}}
 
 Entries keep the BEST (minimum) us per lowering id across recordings.
 Cache location: $REPRO_LOWERING_TIMINGS, else
-~/.cache/repro/lowering_timings.json.
+~/.cache/repro/lowering_timings.json.  The entries ride inside
+kernels/diskcache.py's checksummed schema-versioned envelope (atomic
+locked writes; damaged files warn-and-recompute, never raise).
 """
 from __future__ import annotations
 
-import json
 import os
 import pathlib
-import tempfile
 from typing import Dict, Optional
+
+from repro.kernels import diskcache
 
 CACHE_VERSION = 1
 
@@ -46,10 +48,7 @@ def _key(backend: str, op: str) -> str:
 def _load() -> dict:
     global _cache
     if _cache is None:
-        try:
-            _cache = json.loads(cache_path().read_text())
-        except (OSError, ValueError):
-            _cache = {}
+        _cache = diskcache.load(cache_path(), CACHE_VERSION)
     return _cache
 
 
@@ -64,12 +63,11 @@ def invalidate() -> None:
 def _save() -> None:
     global _cache
     path = cache_path()
-    try:
-        try:
-            on_disk = json.loads(path.read_text())
-        except (OSError, ValueError):
-            on_disk = {}
-        # merge-on-save, keeping the faster record on collision
+    # locked read-merge-write, keeping the faster record on collision;
+    # diskcache handles atomicity and read-only FS (recording still
+    # works in-process when store() fails)
+    with diskcache.locked(path):
+        on_disk = diskcache.load(path, CACHE_VERSION)
         merged = dict(on_disk)
         for key, by_lid in (_cache or {}).items():
             slot = dict(merged.get(key, {}))
@@ -79,13 +77,7 @@ def _save() -> None:
                     slot[lid] = ent
             merged[key] = slot
         _cache = merged
-        path.parent.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(merged, f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
-    except OSError:
-        pass  # read-only FS: recording still works in-process
+        diskcache.store(path, CACHE_VERSION, merged)
 
 
 def record(backend: str, op: str, lid: str, us: float, *,

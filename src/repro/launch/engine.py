@@ -64,6 +64,14 @@ ever-changing request mix:
   surviving streams are bit-identical to a fault-free run -- SILVIA's
   behavior-preservation obligation carried into failure handling
   (DESIGN.md sec. 8; tests/test_resilience.py).
+* **elastic degraded-mesh serving** -- a mesh-aware engine survives losing
+  devices (distributed/elastic.py; DESIGN.md sec. 9): a `DeviceLoss`
+  fault marks devices dead in the health registry, `_degrade` re-plans
+  onto the largest valid healthy sub-mesh (dp floor + tp divisibility),
+  rebuilds the compiled bundle (the mesh fingerprint keys the LRU),
+  re-shards the weights, and the ordinary recovery path then replays
+  in-flight requests on the shrunken mesh -- surviving streams stay
+  bit-identical to the fault-free run (tests/test_elastic.py).
 
 Exactness invariants (why masking is exact, not approximate): an attention
 row only attends cache positions `<= pos`, every such position was written
@@ -78,6 +86,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -88,6 +97,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import core as silvia
 from repro.distributed import context as dctx
+from repro.distributed import elastic as delastic
+from repro.distributed import fault as dfault
 from repro.distributed import sharding as dshard
 from repro.distributed.fault import SimulatedFailure
 from repro.kernels import registry
@@ -406,20 +417,29 @@ class ServeEngine:
         self.prefill_chunk = prefill_chunk
         self.enc_len = enc_len
         self.min_len_bucket = min(min_len_bucket, max_cache_len)
-        self.min_batch_bucket = min(min_batch_bucket, n_slots)
+        # the caller's floor, pre-dp: re-applied when a degraded mesh
+        # shrinks the dp floor (_degrade re-buckets from this)
+        self._user_min_batch = min(min_batch_bucket, n_slots)
+        self.min_batch_bucket = self._user_min_batch
         # mesh-aware serving: an ambient mesh_scope at construction makes
         # the engine shard its decode/prefill bundles over the mesh
         # (module docstring; _MeshPlan).  The slot axis needs to split
         # evenly over the dp shards, so the dp size becomes the batch
         # bucket floor (admission included)
+        self._init_kwargs = init_kwargs
         self._plan = _mesh_plan(cfg, self._spec, init_kwargs)
         self._adm_floor = 1
+        self._health: Optional[delastic.DeviceHealthRegistry] = None
+        self._reshard_s = 0.0
+        self._degrade_at: List[float] = []   # serving-clock degrade times
         if self._plan is not None:
             dp = self._plan.dp_size
             scheduler.validate_slot_sharding(n_slots, dp)
             self.min_batch_bucket = min(max(self.min_batch_bucket, dp),
                                         n_slots)
             self._adm_floor = min(dp, n_slots)
+            self._health = delastic.DeviceHealthRegistry(
+                self._plan.mesh.devices)
         # smallest prompt bucket: chunked prefill needs chunk-aligned
         # buckets; full prefill just avoids degenerate tiny graphs
         self.min_prompt_bucket = min(prefill_chunk or 8, max_cache_len)
@@ -471,7 +491,7 @@ class ServeEngine:
             "shed", "expired_queued", "expired_inflight", "failed",
             "quarantined", "faults_injected", "errors", "recoveries",
             "replayed_tokens", "replay_divergence", "duplicate_rejects",
-            "snapshots", "restores", "drains")}
+            "snapshots", "restores", "drains", "degraded")}
 
     # -- request lifecycle --------------------------------------------------
 
@@ -924,6 +944,46 @@ class ServeEngine:
             self._tok[slot] = expect       # teacher forcing
             self._pos[slot] += 1
 
+    def _degrade(self, exc: "delastic.DeviceLoss") -> None:
+        """Elastic re-shard after device loss (distributed/elastic.py).
+
+        SILVIA rebinds ops to fewer DSPs with identical results; this
+        rebinds slots to fewer devices with identical tokens (DESIGN.md
+        sec. 9).  The health registry drops the lost devices, the planner
+        picks the largest valid healthy sub-mesh (dp floor + tp
+        divisibility respected), and the engine rebuilds itself on it:
+        new `_MeshPlan` (its `key` makes the decode-bundle LRU compile a
+        FRESH bundle -- a bundle built for the dead mesh is never
+        dispatched again), re-bucketed admission floors (the dp floor may
+        shrink), params re-sharded onto the survivors
+        (fault.elastic_remesh = param_pspecs on the new mesh), and a
+        cleared graph census (every old graph targeted dead devices).
+        `_recover` then rebuilds slot state under the NEW plan and
+        replays in-flight requests bit-exactly -- no operator in the
+        loop."""
+        t0 = time.perf_counter()
+        lost = self._health.kill(exc.n_lost)
+        old = self._plan
+        new_mesh = delastic.plan_degraded_mesh(
+            old.mesh, self._health.healthy(), dp_axes=old.dp_axes,
+            model_axis=old.model_axis, n_slots=self.n_slots, cfg=self.cfg)
+        with dctx.mesh_scope(new_mesh, old.dp_axes, old.model_axis):
+            self._plan = _mesh_plan(self.cfg, self._spec, self._init_kwargs)
+        dp = self._plan.dp_size
+        scheduler.validate_slot_sharding(self.n_slots, dp)
+        self.min_batch_bucket = min(max(self._user_min_batch, dp),
+                                    self.n_slots)
+        self._adm_floor = min(dp, self.n_slots)
+        self.batch_buckets = scheduler.bucket_set(self.min_batch_bucket,
+                                                  self.n_slots)
+        self._bundle = _engine_bundle(self.cfg, self.silvia_passes,
+                                      self._lowerings, self._plan)
+        self.params = dfault.elastic_remesh(self.params, new_mesh, self.cfg)
+        self._graphs = set()
+        self._robust["degraded"] += 1
+        self._reshard_s += time.perf_counter() - t0
+        del lost  # recorded in self._health.dead_ids (cache_info)
+
     def _recover(self, exc: Exception, now: float) -> None:
         """Requeue every in-flight (and mid-admission) request with its
         already-emitted tokens, then rebuild the slot state from scratch.
@@ -931,11 +991,16 @@ class ServeEngine:
         dispatch may already have consumed its donated cache argument.
         Requeued requests re-enter through normal admission and REPLAY
         their recorded tokens before generating new ones, so surviving
-        streams stay bit-identical to a fault-free run."""
+        streams stay bit-identical to a fault-free run.  Device-loss
+        faults additionally re-plan the mesh FIRST (`_degrade`), so the
+        rebuilt state and the replay both land on the degraded mesh."""
         key = "faults_injected" if isinstance(exc, SimulatedFailure) \
             else "errors"
         self._robust[key] += 1
         self._robust["recoveries"] += 1
+        if isinstance(exc, delastic.DeviceLoss) and self._plan is not None:
+            self._degrade_at.append(now)
+            self._degrade(exc)
         victims = [r for r in self._slot_req if r is not None]
         seen = {id(r) for r in victims}
         victims += [r for r in self._admitting
@@ -1013,11 +1078,23 @@ class ServeEngine:
         checkpoint/ckpt.py (launch/resilience.py encoding).  In-flight
         requests are stored WITH their emitted tokens and resume on
         restore() through the bit-exact recovery/replay path, so device
-        state never needs serializing."""
+        state never needs serializing.  The snapshot is stamped with the
+        CURRENT mesh topology (observability only): because request state
+        is mesh-free, a snapshot taken on mesh A restores onto mesh B --
+        including a single device -- with bit-identical tokens
+        (tests/test_elastic.py)."""
         reqs = [r for r in self._slot_req if r is not None] \
             + list(self._queue.pending())
         self._robust["snapshots"] += 1
-        return res.snapshot_requests(ckpt_dir, step, reqs)
+        extra = None
+        if self._plan is not None:
+            p = self._plan
+            extra = {"mesh": {
+                "shape": {n: p.mesh.shape[n] for n in p.mesh.axis_names},
+                "dp_axes": list(p.dp_axes), "model_axis": p.model_axis,
+                "dead_devices": list(self._health.dead_ids),
+            }}
+        return res.snapshot_requests(ckpt_dir, step, reqs, extra=extra)
 
     def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
         """Load a snapshot into this (fresh or drained) engine's queue;
@@ -1187,6 +1264,13 @@ class ServeEngine:
                 },
             },
         }
+        chaos = info["resilience"]["chaos"]
+        if chaos is not None and isinstance(self._chaos,
+                                            delastic.DeviceLossInjector):
+            chaos["lose_at_sites"] = [list(x)
+                                      for x in self._chaos.lose_at_sites]
+            chaos["lose_rate"] = self._chaos.lose_rate
+            chaos["lost_sites"] = dict(self._chaos.lost_sites)
         if self._plan is not None:
             p = self._plan
             info["mesh"] = {
@@ -1197,6 +1281,11 @@ class ServeEngine:
                 "tp_size": p.tp.size,
                 "tp_attn": p.tp.attn,
                 "tp_ssm": p.tp.ssm,
+                "n_devices": int(p.mesh.devices.size),
+                "dead_devices": list(self._health.dead_ids),
+                "degraded": self._robust["degraded"],
+                "reshard_s": self._reshard_s,
+                "degrade_at": list(self._degrade_at),
             }
         if hasattr(self._bundle.decode_fn, "cache_info"):
             info["silvia"] = self._bundle.decode_fn.cache_info()

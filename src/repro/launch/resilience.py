@@ -203,9 +203,17 @@ class ChaosSchedule(FailureInjector):
 def chaos_from_env() -> Optional[ChaosSchedule]:
     """The process-wide chaos schedule from $REPRO_CHAOS (None if unset).
     Read at engine construction, so the whole engine/sharded test suites
-    run under injected faults simply by exporting the variable."""
+    run under injected faults simply by exporting the variable.  Specs
+    containing device-loss arms (``lose@site``/``lose_rate=``...) parse
+    into a `distributed.elastic.DeviceLossInjector` -- imported lazily,
+    since elastic builds on this module."""
     spec = os.environ.get("REPRO_CHAOS", "").strip()
-    return ChaosSchedule.parse(spec) if spec else None
+    if not spec:
+        return None
+    if "lose" in spec:
+        from repro.distributed import elastic
+        return elastic.DeviceLossInjector.parse(spec)
+    return ChaosSchedule.parse(spec)
 
 
 # ---------------------------------------------------------------------------
@@ -238,10 +246,17 @@ def _encode_requests(requests: Sequence[Any]) -> Tuple[list, dict]:
     return tree, {"requests": meta}
 
 
-def snapshot_requests(ckpt_dir: str, step: int,
-                      requests: Sequence[Any]) -> str:
-    """Atomically persist request-level serve state (ckpt.py layout)."""
+def snapshot_requests(ckpt_dir: str, step: int, requests: Sequence[Any],
+                      extra: Optional[dict] = None) -> str:
+    """Atomically persist request-level serve state (ckpt.py layout).
+    `extra` rides along in the checkpoint meta (the engine stamps its
+    current mesh topology here).  Restore IGNORES it by design: request
+    state is mesh-free, which is exactly why a snapshot taken on one
+    mesh restores onto any other -- replay regenerates device state on
+    whatever topology the restoring engine runs."""
     tree, meta = _encode_requests(requests)
+    if extra:
+        meta = {**extra, **meta}    # "requests" always wins
     return ckpt.save_checkpoint(ckpt_dir, step, tree, extra_meta=meta)
 
 

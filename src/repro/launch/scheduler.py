@@ -59,6 +59,17 @@ def validate_slot_sharding(n_slots: int, dp_size: int) -> None:
             f"{dp_size}: the slot axis cannot split evenly over the mesh")
 
 
+def largest_valid_dp(n_slots: int, max_dp: int) -> int:
+    """Largest data-shard count that `validate_slot_sharding` accepts
+    with at most `max_dp` shards: a power of two dividing n_slots (>= 1).
+    The degraded-mesh planner (distributed/elastic.py) uses this to pick
+    the widest data extent a shrunken device budget still supports."""
+    d = 1
+    while d * 2 <= max_dp and n_slots % (d * 2) == 0:
+        d *= 2
+    return d
+
+
 def bucket_set(minimum: int, maximum: int) -> tuple:
     """All buckets bucket_pow2 can produce in [minimum, maximum]: the
     powers of two in range plus the cap itself.  The compiled-graph count

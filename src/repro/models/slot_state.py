@@ -296,6 +296,16 @@ def tp_plan(cfg, size: int) -> TPPlan:
     return TPPlan(size, attn, ssm)
 
 
+def tp_viable_sizes(cfg, limit: int) -> tuple:
+    """Model-axis sizes in [1, limit] whose tp_plan is ACTIVE for cfg
+    (shards something instead of replicating everything).  The degraded-
+    mesh planner (distributed/elastic.py) prefers shrinking onto one of
+    these, so losing devices narrows tensor parallelism instead of
+    silently turning it off when a TP-capable extent still fits."""
+    return tuple(m for m in range(2, max(1, limit) + 1)
+                 if tp_plan(cfg, m).active)
+
+
 def _tp_probe_cfg(cfg, plan: TPPlan):
     kw: Dict[str, Any] = {}
     if plan.attn:

@@ -1,0 +1,111 @@
+"""scripts/bench_compare.py: the CI regression gate must fail LOUDLY and
+legibly on damaged inputs -- one-line diagnostics, never a traceback, and
+never a vacuously-armed gate (a zero baseline would accept any
+regression)."""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_SCRIPT = pathlib.Path(__file__).resolve().parents[1] / "scripts" \
+    / "bench_compare.py"
+_spec = importlib.util.spec_from_file_location("bench_compare", _SCRIPT)
+bench_compare = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_compare)
+
+
+def _payload(tok_s, host_class="test-host"):
+    return {"engine": {"agg_tok_s": tok_s}, "host_class": host_class}
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    base = tmp_path / "baselines"
+    cur = tmp_path / "results"
+    base.mkdir()
+    cur.mkdir()
+    return base, cur
+
+
+def _write(d, name, payload):
+    (d / f"{name}.json").write_text(
+        payload if isinstance(payload, str) else json.dumps(payload))
+
+
+def test_ok_and_regression(dirs, capsys):
+    base, cur = dirs
+    _write(base, "serve_throughput_a", _payload(100.0))
+    _write(cur, "serve_throughput_a", _payload(90.0))
+    assert bench_compare.compare(base, cur, 0.30) == 0
+    assert "OK serve_throughput_a" in capsys.readouterr().out
+    _write(cur, "serve_throughput_a", _payload(50.0))   # > 30% drop
+    assert bench_compare.compare(base, cur, 0.30) == 1
+    assert "FAIL serve_throughput_a" in capsys.readouterr().out
+
+
+def test_missing_counterpart_skips(dirs, capsys):
+    base, cur = dirs
+    _write(base, "serve_throughput_a", _payload(100.0))
+    assert bench_compare.compare(base, cur, 0.30) == 0
+    assert "SKIP serve_throughput_a: no result file" \
+        in capsys.readouterr().out
+
+
+def test_host_class_mismatch_skips(dirs, capsys):
+    base, cur = dirs
+    _write(base, "serve_throughput_a", _payload(100.0, "ci-runner"))
+    _write(cur, "serve_throughput_a", _payload(1.0, "laptop"))
+    assert bench_compare.compare(base, cur, 0.30) == 0
+    assert "host-class mismatch" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("junk", ['{"engine": {"agg_tok_s',  # truncated
+                                  "not json at all",
+                                  "[1, 2, 3]"])               # not an object
+def test_corrupt_candidate_fails_one_line(dirs, capsys, junk):
+    base, cur = dirs
+    _write(base, "serve_throughput_a", _payload(100.0))
+    _write(cur, "serve_throughput_a", junk)
+    assert bench_compare.compare(base, cur, 0.30) == 1   # no traceback
+    out = capsys.readouterr().out
+    assert "BAD serve_throughput_a" in out
+    diag = [ln for ln in out.splitlines() if ln.startswith("BAD")]
+    assert len(diag) == 1
+
+
+def test_corrupt_baseline_fails(dirs, capsys):
+    base, cur = dirs
+    _write(base, "serve_throughput_a", "{{{")
+    _write(cur, "serve_throughput_a", _payload(100.0))
+    assert bench_compare.compare(base, cur, 0.30) == 1
+    assert "baseline" in capsys.readouterr().out
+
+
+@pytest.mark.parametrize("bv,cv", [(0.0, 100.0), (100.0, 0.0),
+                                   (-5.0, 100.0)])
+def test_non_positive_metric_fails(dirs, capsys, bv, cv):
+    """A zero baseline floor accepts ANY regression; a zero candidate is
+    a broken benchmark run.  Both must fail the gate, not pass it."""
+    base, cur = dirs
+    _write(base, "serve_throughput_a", _payload(bv))
+    _write(cur, "serve_throughput_a", _payload(cv))
+    assert bench_compare.compare(base, cur, 0.30) == 1
+    assert "non-positive metric" in capsys.readouterr().out
+
+
+def test_non_numeric_metric_skips(dirs, capsys):
+    base, cur = dirs
+    _write(base, "serve_throughput_a", _payload(100.0))
+    _write(cur, "serve_throughput_a",
+           {"engine": {"agg_tok_s": "fast"}, "host_class": "test-host"})
+    assert bench_compare.compare(base, cur, 0.30) == 0
+    assert "no comparable metric" in capsys.readouterr().out
+
+
+def test_missing_results_dir_fails(dirs, capsys, tmp_path):
+    base, _ = dirs
+    _write(base, "serve_throughput_a", _payload(100.0))
+    missing = tmp_path / "never-created"
+    assert bench_compare.compare(base, missing, 0.30) == 1
+    assert "does not exist" in capsys.readouterr().out

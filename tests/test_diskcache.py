@@ -1,0 +1,153 @@
+"""Hardened persistent caches (kernels/diskcache.py and its consumers):
+a damaged cache file -- corrupt JSON, truncation, a foreign schema
+version, a checksum mismatch, an unwritable filesystem -- must WARN and
+recompute, never crash an engine; writes are atomic and merge with
+concurrent writers instead of clobbering them."""
+import json
+import pathlib
+
+import pytest
+
+from repro.kernels import autotune, diskcache, timings
+
+
+@pytest.fixture
+def tuner_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    monkeypatch.setattr(autotune, "_cache", None)
+    yield tmp_path / "at.json"
+    autotune._cache = None
+
+
+@pytest.fixture
+def timings_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_LOWERING_TIMINGS", str(tmp_path / "lt.json"))
+    timings.invalidate()
+    yield tmp_path / "lt.json"
+    timings.invalidate()
+
+
+# ---------------------------------------------------------------------------
+# envelope units
+# ---------------------------------------------------------------------------
+
+def test_roundtrip(tmp_path):
+    path = tmp_path / "c.json"
+    entries = {"k": {"block": [64, 128]}}
+    assert diskcache.store(path, 3, entries)
+    assert diskcache.load(path, 3) == entries
+    doc = json.loads(path.read_text())
+    assert doc["schema"] == 3
+    assert doc["checksum"] == diskcache.checksum(entries)
+
+
+def test_missing_file_is_silent_empty(tmp_path, recwarn):
+    assert diskcache.load(tmp_path / "never.json", 1) == {}
+    assert not [w for w in recwarn if "cache file" in str(w.message)]
+
+
+@pytest.mark.parametrize("text,why", [
+    ("{ this is not json", "corrupt JSON"),
+    ('{"schema": 1, "checksum"', "corrupt JSON"),       # truncated write
+    ("[1, 2, 3]", "expected a JSON object"),
+    ('{"v1:quant_matmul:8": {"block": [1]}}', "schema"),  # legacy flat file
+    ('{"schema": 99, "checksum": "x", "entries": {}}', "schema"),
+    ('{"schema": 1, "checksum": "sha256:0"}', "missing entries"),
+    ('{"schema": 1, "checksum": "sha256:0", "entries": {"a": 1}}',
+     "checksum mismatch"),
+])
+def test_damaged_file_warns_and_returns_empty(tmp_path, text, why):
+    path = tmp_path / "c.json"
+    path.write_text(text)
+    with pytest.warns(UserWarning, match=why):
+        assert diskcache.load(path, 1) == {}
+
+
+def test_checksum_detects_edited_entries(tmp_path):
+    path = tmp_path / "c.json"
+    diskcache.store(path, 1, {"k": {"block": [64, 128]}})
+    doc = json.loads(path.read_text())
+    doc["entries"]["k"]["block"] = [9999, 9999]         # manual edit
+    path.write_text(json.dumps(doc))
+    with pytest.warns(UserWarning, match="checksum mismatch"):
+        assert diskcache.load(path, 1) == {}
+
+
+def test_store_unwritable_returns_false(tmp_path):
+    blocker = tmp_path / "file"
+    blocker.write_text("")
+    # parent "directory" is a file: mkdir and the tempfile both fail
+    assert diskcache.store(blocker / "c.json", 1, {}) is False
+
+
+def test_store_leaves_no_tmp_droppings(tmp_path):
+    path = tmp_path / "c.json"
+    diskcache.store(path, 1, {"a": 1})
+    diskcache.store(path, 1, {"a": 2})
+    assert [p.name for p in tmp_path.iterdir()] == ["c.json"]
+    assert diskcache.load(path, 1) == {"a": 2}
+
+
+def test_locked_is_reentrant_across_cycles(tmp_path):
+    path = tmp_path / "c.json"
+    with diskcache.locked(path):
+        diskcache.store(path, 1, {"a": 1})
+    with diskcache.locked(path):
+        assert diskcache.load(path, 1) == {"a": 1}
+    assert pathlib.Path(str(path) + ".lock").exists()
+
+
+# ---------------------------------------------------------------------------
+# consumer integration: damaged caches warn-and-recompute, never raise
+# ---------------------------------------------------------------------------
+
+def test_autotune_survives_corrupt_cache(tuner_cache):
+    tuner_cache.write_text("{ garbage...")
+    with pytest.warns(UserWarning, match="corrupt JSON"):
+        assert autotune.lookup("quant_matmul", 8, 128, 256) is None
+    # tuning recomputes and replaces the damaged file with a valid envelope
+    blk = autotune.tune("quant_matmul", 8, 128, 256,
+                        candidates=((128, 128, 256),), iters=1)
+    assert blk == (128, 128, 256)
+    autotune._cache = None
+    assert autotune.lookup("quant_matmul", 8, 128, 256) == blk
+
+
+def test_autotune_ignores_legacy_flat_cache(tuner_cache):
+    # pre-envelope format: entries at top level, no schema/checksum
+    tuner_cache.write_text(json.dumps(
+        {"v1:quant_matmul:8x128x256:cpu": {"block": [512, 512, 512]}}))
+    with pytest.warns(UserWarning, match="schema"):
+        assert autotune._load() == {}
+
+
+def test_autotune_merges_concurrent_writers(tuner_cache):
+    autotune.tune("simd_add", 8, 128, candidates=((64, 128),), iters=1)
+    # a "second process" that never saw the first's in-memory cache
+    autotune._cache = None
+    autotune.tune("simd_add", 16, 128, candidates=((32, 128),), iters=1)
+    autotune._cache = None                        # re-read the merged file
+    assert autotune.lookup("simd_add", 8, 128) == (64, 128)
+    assert autotune.lookup("simd_add", 16, 128) == (32, 128)
+
+
+def test_timings_survive_corrupt_cache(timings_cache):
+    timings_cache.write_text('{"schema": 1, "checksum": "nope", '
+                             '"entries": {"a": 1}}')
+    with pytest.warns(UserWarning, match="checksum mismatch"):
+        assert timings.stored_best("packed_w8_matmul", "cpu") is None
+    timings.record("cpu", "packed_w8_matmul", "cpu-vector", 12.5,
+                   shape="8x128x256", iters=3)
+    timings.invalidate()
+    assert timings.stored_best("packed_w8_matmul", "cpu") == "cpu-vector"
+
+
+def test_timings_merge_keeps_fastest(timings_cache):
+    timings.record("cpu", "op", "ref", 20.0)
+    timings.invalidate()                          # second recorder process
+    timings.record("cpu", "op", "ref", 30.0)      # slower: must not clobber
+    timings.record("cpu", "op", "cpu-vector", 10.0)
+    timings.invalidate()
+    entries = timings._load()
+    assert entries[timings._key("cpu", "op")]["ref"]["us"] == 20.0
+    assert timings.stored_best("op", "cpu") == "cpu-vector"

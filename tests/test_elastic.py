@@ -1,0 +1,352 @@
+"""Elastic degraded-mesh serving (distributed/elastic.py + the engine's
+`_degrade` path): after losing devices the engine re-plans onto the
+largest valid healthy sub-mesh, re-shards, and replays -- and every
+surviving stream is BIT-IDENTICAL to the fault-free single-device run
+(DESIGN.md sec. 9: rebind slots to fewer devices, same tokens).
+
+Planner/injector/registry units run on any host; the engine matrix needs
+the simulated 8-device mesh (CI tier1-elastic sets XLA_FLAGS=
+--xla_force_host_platform_device_count=8)."""
+import numpy as np
+import jax
+import pytest
+
+from repro import configs
+from repro.distributed import context as dctx
+from repro.distributed import elastic
+from repro.launch import resilience as res
+from repro.launch import scheduler
+from repro.launch.engine import ServeEngine
+from repro.launch.mesh import make_mesh
+from repro.models import lm, slot_state
+
+NDEV = jax.device_count()
+needs_mesh = pytest.mark.skipif(
+    NDEV < 8, reason="elastic mesh tests need 8 simulated devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+FAMILY_ARCHS = {"dense": "smollm-135m", "ssm": "mamba2-2.7b",
+                "hybrid": "jamba-v0.1-52b", "encdec": "whisper-small"}
+ENC_LEN = 16
+
+
+@pytest.fixture(scope="module")
+def family_setup():
+    out = {}
+    for fam, arch in FAMILY_ARCHS.items():
+        cfg = configs.get_reduced_config(arch)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg, max_seq=80)
+        out[fam] = (cfg, params)
+    return out
+
+
+def _requests(cfg, n=6, seed=0):
+    plens = (5, 12, 9, 16, 7, 11)[:n]
+    gens = (8, 6, 9, 5, 10, 7)[:n]
+    reqs = []
+    for i, (pl, g) in enumerate(zip(plens, gens)):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(seed + 10 * i), (pl,), 0, cfg.vocab))
+        kw = {}
+        if cfg.family == "encdec":
+            rng = np.random.default_rng(seed + i)
+            kw["features"] = rng.standard_normal(
+                (ENC_LEN, cfg.d_model)).astype(np.float32)
+        reqs.append(scheduler.Request(rid=i, prompt=prompt,
+                                      max_new_tokens=g, **kw))
+    return reqs
+
+
+def _engine(cfg, params, *, mesh_shape=None, n_slots=8, **kw):
+    if cfg.family == "encdec":
+        kw.setdefault("enc_len", ENC_LEN)
+    kw.setdefault("max_cache_len", 64)
+    kw.setdefault("segment_len", 4)
+    if mesh_shape is None:
+        return ServeEngine(params, cfg, n_slots=n_slots, **kw)
+    mesh = make_mesh(mesh_shape, ("data", "model"))
+    with dctx.mesh_scope(mesh, ("data",), "model"):
+        return ServeEngine(params, cfg, n_slots=n_slots, **kw)
+
+
+def _assert_bit_exact(ref, out):
+    assert set(ref) == set(out)
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], out[rid])
+
+
+# ---------------------------------------------------------------------------
+# degraded-mesh planner units (pure shapes: run on any host)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("old,healthy,n_slots,want", [
+    ((8, 1), 4, 8, (4, 1)),    # the ISSUE's 8x1 -> 4x1
+    ((2, 4), 4, 8, (2, 2)),    # 2x4 -> 2x2 (keep dp, halve model)
+    ((2, 4), 2, 8, (2, 1)),    # 2x4 -> 2x1
+    ((8, 1), 7, 8, (4, 1)),    # dp must divide n_slots: 7 -> 4
+    ((8, 1), 1, 8, (1, 1)),    # last device standing
+    ((8, 1), 5, 6, (2, 1)),    # n_slots=6: dp in {1,2} only
+    ((2, 4), 8, 8, (2, 4)),    # nothing lost -> unchanged
+])
+def test_plan_shape(old, healthy, n_slots, want):
+    assert elastic.plan_shape(old, healthy, n_slots) == want
+
+
+def test_plan_shape_prefers_active_tp():
+    """With a config whose heads shard at m=2, shrinking 2x4 onto 4
+    devices keeps TP active ((2,2)) instead of going data-only ((4,1))."""
+    cfg = configs.get_reduced_config("mamba2-2.7b")
+    assert slot_state.tp_plan(cfg, 2).active          # precondition
+    assert elastic.plan_shape((2, 4), 4, 8, cfg) == (2, 2)
+    assert 2 in slot_state.tp_viable_sizes(cfg, 4)
+
+
+def test_plan_shape_no_healthy_raises():
+    with pytest.raises(ValueError, match="no healthy"):
+        elastic.plan_shape((8, 1), 0, 8)
+
+
+@needs_mesh
+def test_plan_degraded_mesh_builds_submesh():
+    mesh = make_mesh((2, 4), ("data", "model"))
+    reg = elastic.DeviceHealthRegistry(mesh.devices)
+    reg.kill(4)
+    new = elastic.plan_degraded_mesh(mesh, reg.healthy(),
+                                     dp_axes=("data",),
+                                     model_axis="model", n_slots=8)
+    assert new.axis_names == mesh.axis_names
+    assert new.shape["data"] == 2 and new.shape["model"] == 2
+    # survivors only, taken in the old mesh's flattened order
+    survivors = {int(d.id) for d in reg.healthy()}
+    assert {int(d.id) for d in new.devices.flat} <= survivors
+
+
+# ---------------------------------------------------------------------------
+# health registry + loss injector units
+# ---------------------------------------------------------------------------
+
+def test_health_registry_kill_order_and_floor():
+    devs = jax.devices()
+    reg = elastic.DeviceHealthRegistry(devs)
+    assert reg.n_healthy == len(devs)
+    ids = reg.kill(len(devs) + 5)       # clamped: one always survives
+    assert reg.n_healthy == 1
+    assert len(ids) == len(devs) - 1
+    # deterministic: the LAST devices die first, survivors keep order
+    assert [int(d.id) for d in reg.healthy()] == [int(devs[0].id)]
+    assert reg.dead_ids == tuple(int(d.id) for d in devs[1:])
+    assert reg.kill(3) == []            # floor holds on repeat kills
+
+
+def test_injector_parse():
+    inj = elastic.DeviceLossInjector.parse(
+        "lose@segment:1=4;rate=0.5,seed=3,max=2;lose_rate=0.25,"
+        "lose_seed=7,lose_n=2,lose_max=1")
+    assert inj.lose_at_sites == (("segment:1", 4),)
+    assert inj.lose_rate == 0.25 and inj.lose_seed == 7
+    assert inj.lose_n == 2 and inj.lose_max == 1
+    # base ChaosSchedule arms pass through untouched
+    assert inj.rate == 0.5 and inj.seed == 3 and inj.max_failures == 2
+    assert elastic.DeviceLossInjector.parse("lose@chunk:0") \
+        .lose_at_sites == (("chunk:0", 1),)
+
+
+@pytest.mark.parametrize("bad", ["lose@warp:1", "lose@segment:x",
+                                 "lose@segment:1=y", "lose_frobnicate=3"])
+def test_injector_parse_rejects(bad):
+    with pytest.raises(ValueError):
+        elastic.DeviceLossInjector.parse(bad)
+
+
+def test_injector_fires_once_and_caps():
+    inj = elastic.DeviceLossInjector.parse("lose@segment:1=2;lose@chunk:0;"
+                                           "lose_max=1")
+    with pytest.raises(elastic.DeviceLoss) as ei:
+        inj.check_site("segment:1")
+    assert ei.value.n_lost == 2
+    inj.check_site("segment:1")         # at-most-once per site
+    inj.check_site("chunk:0")           # lose_max caps total loss events
+    assert inj.lost_sites == {"segment:1": 2}
+
+
+def test_injector_env_roundtrip(monkeypatch):
+    monkeypatch.setenv("REPRO_CHAOS", "lose@segment:2=3,rate=0.1,seed=5")
+    inj = res.chaos_from_env()
+    assert isinstance(inj, elastic.DeviceLossInjector)
+    assert inj.lose_at_sites == (("segment:2", 3),)
+    assert inj.rate == 0.1 and inj.seed == 5
+    monkeypatch.setenv("REPRO_CHAOS", "rate=0.1,seed=5")
+    assert not isinstance(res.chaos_from_env(),
+                          elastic.DeviceLossInjector)
+
+
+def test_loss_and_fault_sites_independent():
+    """Deterministic accounting: the loss decision and the fault decision
+    for a site are independent pure functions of (seed, site) -- arming
+    loss does not move where plain faults fire, and two identical
+    schedules fire identically (the property test broadens this)."""
+    plain = res.ChaosSchedule(rate=0.3, seed=9)
+    armed = elastic.DeviceLossInjector(rate=0.3, seed=9, lose_rate=0.2,
+                                       lose_seed=4)
+    sites = [f"segment:{i}" for i in range(40)]
+    plain_fires = {s for s in sites if plain.should_fail(s)}
+    armed_fires = {s for s in sites if armed.should_fail(s)}
+    assert plain_fires == armed_fires
+    twin = elastic.DeviceLossInjector(rate=0.3, seed=9, lose_rate=0.2,
+                                      lose_seed=4)
+    assert [armed.loss_at(s) for s in sites] \
+        == [twin.loss_at(s) for s in sites]
+
+
+# ---------------------------------------------------------------------------
+# engine degrade: bit-exact surviving streams on the shrunken mesh
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+@pytest.mark.parametrize("mesh_shape,want", [((8, 1), (4, 1)),
+                                             ((2, 4), (2, 2))])
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_device_loss_bit_exact(family_setup, family, mesh_shape, want):
+    """Lose half the mesh mid-decode: the engine re-shards onto the
+    planned sub-mesh without operator intervention and every stream
+    matches the fault-free single-device run bitwise."""
+    cfg, params = family_setup[family]
+    ref = _engine(cfg, params, chaos=None).run(
+        _requests(cfg), clock=scheduler.FastForwardClock())
+    chaos = elastic.DeviceLossInjector.parse("lose@segment:1=4")
+    eng = _engine(cfg, params, mesh_shape=mesh_shape, chaos=chaos)
+    out = eng.run(_requests(cfg), clock=scheduler.FastForwardClock())
+    info = eng.cache_info()
+    rb = info["robustness"]
+    assert rb["degraded"] == 1
+    assert rb["faults_injected"] == 1 and rb["recoveries"] == 1
+    assert rb["replay_divergence"] == 0
+    assert rb["replayed_tokens"] > 0
+    assert (info["mesh"]["shape"]["data"],
+            info["mesh"]["shape"]["model"]) == want
+    assert len(info["mesh"]["dead_devices"]) == 4
+    assert info["mesh"]["reshard_s"] > 0
+    assert info["resilience"]["chaos"]["lost_sites"] == {"segment:1": 4}
+    assert all(r.outcome == res.OK for r in eng.finished)
+    _assert_bit_exact(ref, out)
+
+
+@needs_mesh
+def test_device_loss_bit_exact_silvia_all(family_setup):
+    cfg, params = family_setup["dense"]
+    ref = _engine(cfg, params, silvia_passes="all", chaos=None).run(
+        _requests(cfg), clock=scheduler.FastForwardClock())
+    chaos = elastic.DeviceLossInjector.parse("lose@segment:2=4")
+    eng = _engine(cfg, params, mesh_shape=(8, 1), silvia_passes="all",
+                  chaos=chaos)
+    out = eng.run(_requests(cfg), clock=scheduler.FastForwardClock())
+    rb = eng.cache_info()["robustness"]
+    assert rb["degraded"] == 1 and rb["replay_divergence"] == 0
+    _assert_bit_exact(ref, out)
+
+
+@needs_mesh
+def test_repeated_loss_shrinks_again(family_setup):
+    """8x1 loses 4, then 2 more: two degrades, 8 -> 4 -> 2 data shards,
+    still bit-exact."""
+    cfg, params = family_setup["dense"]
+    ref = _engine(cfg, params, chaos=None).run(
+        _requests(cfg), clock=scheduler.FastForwardClock())
+    chaos = elastic.DeviceLossInjector.parse(
+        "lose@segment:1=4;lose@segment:3=2")
+    eng = _engine(cfg, params, mesh_shape=(8, 1), chaos=chaos)
+    out = eng.run(_requests(cfg), clock=scheduler.FastForwardClock())
+    info = eng.cache_info()
+    assert info["robustness"]["degraded"] == 2
+    assert info["robustness"]["replay_divergence"] == 0
+    assert info["mesh"]["shape"]["data"] == 2
+    assert len(info["mesh"]["dead_devices"]) == 6
+    _assert_bit_exact(ref, out)
+
+
+@needs_mesh
+def test_deep_loss_2x4_to_2x1(family_setup):
+    """The ISSUE's deep-shrink arm: 2x4 losing 6 devices lands on 2x1."""
+    cfg, params = family_setup["ssm"]
+    ref = _engine(cfg, params, chaos=None).run(
+        _requests(cfg, n=4), clock=scheduler.FastForwardClock())
+    chaos = elastic.DeviceLossInjector.parse("lose@segment:1=6")
+    eng = _engine(cfg, params, mesh_shape=(2, 4), chaos=chaos)
+    out = eng.run(_requests(cfg, n=4), clock=scheduler.FastForwardClock())
+    info = eng.cache_info()
+    assert (info["mesh"]["shape"]["data"],
+            info["mesh"]["shape"]["model"]) == (2, 1)
+    assert info["robustness"]["replay_divergence"] == 0
+    _assert_bit_exact(ref, out)
+
+
+def test_unmeshed_engine_treats_loss_as_plain_fault(family_setup):
+    """A single-device engine has no mesh to shrink: DeviceLoss recovers
+    through the ordinary fault path (it IS a SimulatedFailure) and the
+    streams still match."""
+    cfg, params = family_setup["dense"]
+    ref = _engine(cfg, params, n_slots=4, chaos=None).run(
+        _requests(cfg), clock=scheduler.FastForwardClock())
+    chaos = elastic.DeviceLossInjector.parse("lose@segment:1=4")
+    eng = _engine(cfg, params, n_slots=4, chaos=chaos)
+    out = eng.run(_requests(cfg), clock=scheduler.FastForwardClock())
+    rb = eng.cache_info()["robustness"]
+    assert rb["degraded"] == 0
+    assert rb["faults_injected"] == 1 and rb["replay_divergence"] == 0
+    _assert_bit_exact(ref, out)
+
+
+@needs_mesh
+def test_degrade_rebuckets_admission(family_setup):
+    """Shrinking 8 -> 4 data shards lowers the batch-bucket floor with it
+    (slot re-bucketing: post-degrade segments may run at bucket 4)."""
+    cfg, params = family_setup["dense"]
+    chaos = elastic.DeviceLossInjector.parse("lose@segment:1=4")
+    eng = _engine(cfg, params, mesh_shape=(8, 1), chaos=chaos)
+    assert eng.min_batch_bucket == 8
+    eng.run(_requests(cfg), clock=scheduler.FastForwardClock())
+    assert eng.min_batch_bucket == 4
+    assert eng._adm_floor == 4
+    assert min(eng.batch_buckets) == 4
+    info = eng.cache_info()
+    assert info["graphs"] <= info["graph_bound"]
+
+
+# ---------------------------------------------------------------------------
+# snapshot on mesh A, restore on mesh B (satellite: cross-mesh restore)
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_snapshot_2x4_restores_on_8x1_and_single(family_setup, family,
+                                                 tmp_path):
+    """Request snapshots are mesh-free: taken mid-flight on a 2x4 engine,
+    they restore onto an 8x1 engine AND a single-device engine, and the
+    merged streams match the uninterrupted single-device run bitwise."""
+    cfg, params = family_setup[family]
+    ref = _engine(cfg, params, n_slots=4, chaos=None).run(
+        _requests(cfg, n=4), clock=scheduler.FastForwardClock())
+
+    eng = _engine(cfg, params, mesh_shape=(2, 4), n_slots=4, chaos=None)
+    clock = scheduler.FastForwardClock()
+    for r in _requests(cfg, n=4):
+        eng.submit(r)
+    eng.step(clock)                       # partial progress on 2x4
+    eng.snapshot(str(tmp_path), step=1)
+    done_before = {r.rid: np.asarray(r.tokens, np.int32)
+                   for r in eng.finished}
+
+    from repro.checkpoint import ckpt
+    meta, _ = ckpt.load_meta(str(tmp_path))
+    assert meta["mesh"]["shape"] == {"data": 2, "model": 4}
+
+    for shape in [(8, 1), None]:          # None = single device
+        eng2 = _engine(cfg, params, mesh_shape=shape,
+                       n_slots=8 if shape else 4, chaos=None)
+        n = eng2.restore(str(tmp_path))
+        assert n + len(done_before) == 4
+        out = eng2.run(clock=scheduler.FastForwardClock())
+        merged = dict(done_before)
+        merged.update(out)
+        _assert_bit_exact(ref, merged)
+        assert eng2.cache_info()["robustness"]["replay_divergence"] == 0

@@ -108,7 +108,12 @@ def test_sharded_matches_single_device(family_setup, family, mesh_shape):
         np.testing.assert_array_equal(out[rid], base[rid])
     info = eng.cache_info()
     assert info["graphs"] <= info["graph_bound"]
+    # the serving mesh accounts for every device: the live (possibly
+    # degraded under a $REPRO_CHAOS device-loss arm) extents multiply to
+    # the healthy count, and healthy + dead is the original mesh
     assert info["mesh"]["dp_size"] * info["mesh"]["shape"]["model"] \
+        == info["mesh"]["n_devices"]
+    assert info["mesh"]["n_devices"] + len(info["mesh"]["dead_devices"]) \
         == mesh_shape[0] * mesh_shape[1]
 
 
