@@ -48,10 +48,23 @@ Streams stay bit-identical throughout (tests/test_elastic.py).  The
 BENCH file gains an `_elastic` suffix so the gate tracks degraded-mesh
 throughput against its own baseline.
 
+`--prefix-reuse` swaps the Poisson traffic for zipfian shared-prefix
+traffic (scheduler.shared_prefix_traffic: a few hot system-prompt-style
+prefixes dominate, fresh random tails) and serves it TWICE -- once with
+the cross-request prefix cache on (launch/prefix_cache.py; this is the
+gated `engine` row) and once cold (`engine_cold`).  The `prefix` block
+reports the cache hit rate, prefill tokens skipped, warm-vs-cold p50
+TTFT, and `bit_exact` (the warm token streams must equal the cold ones
+byte for byte -- the pool's correctness bar).  The BENCH file gains a
+`_prefix` suffix so the gate tracks warm throughput against its own
+baseline.  Composes with `--chaos` and `--mesh`.  `--admit-budget N`
+additionally caps uncached prefill tokens per admission round (the
+fairness dial; deferral counts land in the engine row).
+
     PYTHONPATH=src python -m benchmarks.serve_throughput [--smoke]
         [--family {dense,ssm,hybrid,encdec}] [--silvia {off,add,muladd,all}]
         [--mesh DxM] [--chaos [SPEC]] [--device-loss [SPEC]]
-        [--n-requests N] [--rate R]
+        [--prefix-reuse] [--admit-budget N] [--n-requests N] [--rate R]
 """
 from __future__ import annotations
 
@@ -104,7 +117,9 @@ def parse_mesh(spec: str):
 
 def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
                segment_len, silvia_passes, prefill_chunk=None,
-               enc_len=None, mesh=None, warmup=True, chaos=None) -> dict:
+               enc_len=None, mesh=None, warmup=True, chaos=None,
+               prefix_cache=None, admit_token_budget=None,
+               return_tokens=False):
     kw = {"enc_len": enc_len} if enc_len is not None else {}
     scope = contextlib.nullcontext()
     if mesh is not None:
@@ -116,6 +131,8 @@ def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
                           segment_len=segment_len,
                           silvia_passes=silvia_passes,
                           prefill_chunk=prefill_chunk,
+                          prefix_cache=prefix_cache,
+                          admit_token_budget=admit_token_budget,
                           chaos=chaos if chaos is not None else "env", **kw)
     if warmup:
         # startup pre-compilation over the advertised traffic profile --
@@ -130,12 +147,20 @@ def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
     out = _summary(eng.finished, elapsed)
     out["mean_occupancy"] = round(float(np.mean(eng.occupancy)), 3) \
         if eng.occupancy else 0.0
+    ttfts = [r.first_token_time - r.arrival_time for r in eng.finished
+             if r.first_token_time is not None]
+    out["ttft_p50_ms"] = round(float(np.percentile(ttfts, 50)) * 1e3, 2) \
+        if ttfts else None
     out["graphs"] = info["graphs"]
     out["graph_bound"] = info["graph_bound"]
     out["graph_keys"] = [" ".join(map(str, k)) for k in info["graph_keys"]]
     out["has_length_axis"] = info["has_length_axis"]
     out["compactions"] = info["compactions"]
     out["lowerings"] = info["lowerings"]
+    if "prefix_cache" in info:
+        out["prefix_cache"] = info["prefix_cache"]
+    if admit_token_budget is not None:
+        out["admission"] = info["admission"]
     if "mesh" in info:
         out["mesh"] = info["mesh"]
     if "silvia" in info:
@@ -168,6 +193,8 @@ def run_engine(params, cfg, requests, *, n_slots, max_cache_len,
         out["reshard_s"] = round(info["mesh"]["reshard_s"], 4)
         out["final_mesh"] = "x".join(
             str(v) for v in info["mesh"]["shape"].values())
+    if return_tokens:
+        return out, {r.rid: list(r.tokens) for r in eng.finished}
     return out
 
 
@@ -241,9 +268,11 @@ CHAOS_TTLS = (None, None, None, 5.0)
 def run(smoke: bool = False, silvia_passes: str = "off",
         n_requests: int | None = None, rate: float | None = None,
         family: str = "dense", mesh=None, chaos: str | None = None,
-        device_loss: str | None = None) -> dict:
+        device_loss: str | None = None, prefix_reuse: bool = False,
+        admit_budget: int | None = None) -> dict:
     arch = FAMILY_ARCHS[family]
     cfg = configs.get_reduced_config(arch)
+    rate_arg = rate
     if smoke:
         n_req = n_requests or 8
         rate = rate or 50.0
@@ -268,6 +297,25 @@ def run(smoke: bool = False, silvia_passes: str = "off",
     enc_len = None
     if family == "encdec":
         enc_len = 16 if smoke else 32
+    # --prefix-reuse: zipfian shared-prefix traffic + chunked prefill for
+    # chunkable families, so chain (per-chunk) sharing engages; others
+    # share at exact-repeat (terminal) granularity
+    pchunk = None
+    if prefix_reuse:
+        # denser trace + longer shared prefix than the plain rows: the
+        # cache's win is queueing relief from skipped prefill chunks, so
+        # the trace needs enough simultaneous arrivals (and enough shared
+        # chunks per arrival) for the delta to clear run-to-run noise
+        if smoke:
+            n_prefixes, zipf_a, prefix_len, tail_lens = 3, 1.4, 32, (2, 6, 10)
+            pchunk = 8 if family == "dense" else None
+            n_req = n_requests or 16
+            rate = rate_arg or 200.0
+        else:
+            n_prefixes, zipf_a, prefix_len, tail_lens = 4, 1.4, 64, (4, 8, 16)
+            pchunk = 16 if family == "dense" else None
+            n_req = n_requests or 48
+            rate = rate_arg or 100.0
     rng = jax.random.PRNGKey(0)
     registry.reset_dispatch_counts()
     # force=True: reduced-config weights all sit under the production
@@ -277,16 +325,43 @@ def run(smoke: bool = False, silvia_passes: str = "off",
         lm.init_params(rng, cfg, max_seq=max_len + 8), "w8a8", force=True)
 
     def traffic():
-        reqs = scheduler.synthetic_traffic(
-            seed=0, n_requests=n_req, rate=rate,
-            prompt_lens=prompt_lens, gen_lens=gen_lens, vocab=cfg.vocab,
-            ttls=CHAOS_TTLS if chaos is not None else None)
+        if prefix_reuse:
+            reqs = scheduler.shared_prefix_traffic(
+                seed=0, n_requests=n_req, rate=rate,
+                n_prefixes=n_prefixes, prefix_len=prefix_len,
+                tail_lens=tail_lens, gen_lens=gen_lens, vocab=cfg.vocab,
+                zipf_a=zipf_a,
+                ttls=CHAOS_TTLS if chaos is not None else None)
+        else:
+            reqs = scheduler.synthetic_traffic(
+                seed=0, n_requests=n_req, rate=rate,
+                prompt_lens=prompt_lens, gen_lens=gen_lens, vocab=cfg.vocab,
+                ttls=CHAOS_TTLS if chaos is not None else None)
         if family == "encdec":
             frng = np.random.default_rng(1)
-            for r in reqs:
-                r.features = frng.standard_normal(
+            if prefix_reuse:
+                # a small feature pool (assigned by rid) so exact repeats
+                # can terminal-hit -- the features digest is part of the
+                # pool key, fresh-noise features would force all-miss
+                pool = [frng.standard_normal(
                     (enc_len, cfg.d_model)).astype(np.float32)
+                    for _ in range(2)]
+                for r in reqs:
+                    r.features = pool[r.rid % 2]
+            else:
+                for r in reqs:
+                    r.features = frng.standard_normal(
+                        (enc_len, cfg.d_model)).astype(np.float32)
         return reqs
+
+    def chaos_obj():
+        # a fresh stateful schedule per engine run (fired-site bookkeeping
+        # must not leak from the warm run into the cold one)
+        if chaos is None:
+            return None
+        if "lose" in chaos:
+            return elastic.DeviceLossInjector.parse(chaos)
+        return resilience.ChaosSchedule.parse(chaos)
 
     result = {
         "config": {"arch": f"{arch}(reduced)", "family": family,
@@ -298,20 +373,49 @@ def run(smoke: bool = False, silvia_passes: str = "off",
                    "silvia": silvia_passes, "enc_len": enc_len,
                    "mesh": None if mesh is None else f"{mesh[0]}x{mesh[1]}",
                    "chaos": chaos, "device_loss": device_loss,
+                   "prefix_reuse": prefix_reuse,
+                   "prefill_chunk": pchunk,
+                   "admit_budget": admit_budget,
                    "devices": jax.device_count(),
                    "backend": jax.default_backend(),
                    "lowerings": registry.active_lowerings()},
-        "engine": run_engine(params, cfg, traffic(), n_slots=n_slots,
-                             max_cache_len=max_len, segment_len=seg,
-                             silvia_passes=silvia_passes, enc_len=enc_len,
-                             mesh=mesh,
-                             chaos=None if chaos is None
-                             else elastic.DeviceLossInjector.parse(chaos)
-                             if "lose" in chaos
-                             else resilience.ChaosSchedule.parse(chaos)),
-        "static": run_static(params, cfg, traffic(), n_slots=n_slots,
-                             silvia_passes=silvia_passes, enc_len=enc_len),
     }
+    if prefix_reuse:
+        result["config"]["prefix_traffic"] = {
+            "n_prefixes": n_prefixes, "prefix_len": prefix_len,
+            "tail_lens": list(tail_lens), "zipf_a": zipf_a}
+    engine_kw = dict(n_slots=n_slots, max_cache_len=max_len,
+                     segment_len=seg, silvia_passes=silvia_passes,
+                     enc_len=enc_len, mesh=mesh, prefill_chunk=pchunk,
+                     admit_token_budget=admit_budget)
+    if prefix_reuse:
+        # the gated `engine` row is the WARM (pool-backed) run; the cold
+        # run rides along for the TTFT delta and the bit-exactness bar
+        warm, warm_toks = run_engine(params, cfg, traffic(),
+                                     prefix_cache=256, chaos=chaos_obj(),
+                                     return_tokens=True, **engine_kw)
+        cold, cold_toks = run_engine(params, cfg, traffic(),
+                                     chaos=chaos_obj(),
+                                     return_tokens=True, **engine_kw)
+        result["engine"] = warm
+        result["engine_cold"] = cold
+        result["prefix"] = {
+            "hit_rate": warm["prefix_cache"]["hit_rate"],
+            "prefill_tokens_skipped": warm["prefix_cache"]["tokens_skipped"],
+            "pages_resident": warm["prefix_cache"]["pages_resident"],
+            "pages_evicted": warm["prefix_cache"]["pages_evicted"],
+            "ttft_warm_ms": warm["ttft_p50_ms"],
+            "ttft_cold_ms": cold["ttft_p50_ms"],
+            "bit_exact": (set(warm_toks) == set(cold_toks)
+                          and all(warm_toks[k] == cold_toks[k]
+                                  for k in warm_toks)),
+        }
+    else:
+        result["engine"] = run_engine(params, cfg, traffic(),
+                                      chaos=chaos_obj(), **engine_kw)
+    result["static"] = run_static(params, cfg, traffic(), n_slots=n_slots,
+                                  silvia_passes=silvia_passes,
+                                  enc_len=enc_len)
     result["speedup_tok_s"] = round(
         result["engine"]["agg_tok_s"]
         / max(result["static"]["agg_tok_s"], 1e-9), 2)
@@ -350,6 +454,16 @@ def main():
                          "syntax, e.g. 'lose@segment:1=4'); bare "
                          "--device-loss loses half the mesh at segment 1; "
                          "requires --mesh")
+    ap.add_argument("--prefix-reuse", action="store_true",
+                    help="zipfian shared-prefix traffic served warm (with "
+                         "the cross-request prefix cache) AND cold; "
+                         "reports hit rate, prefill tokens skipped, "
+                         "warm/cold TTFT and bit-exactness")
+    ap.add_argument("--admit-budget", type=int, default=None,
+                    metavar="N",
+                    help="cap uncached prefill tokens per admission round "
+                         "(token-budget admission fairness; deferrals are "
+                         "reported in the engine row)")
     ap.add_argument("--n-requests", type=int, default=None)
     ap.add_argument("--rate", type=float, default=None,
                     help="Poisson arrival rate (req/s)")
@@ -365,7 +479,9 @@ def main():
     result = run(smoke=args.smoke, silvia_passes=args.silvia,
                  n_requests=args.n_requests, rate=args.rate,
                  family=args.family, mesh=mesh, chaos=args.chaos,
-                 device_loss=args.device_loss)
+                 device_loss=args.device_loss,
+                 prefix_reuse=args.prefix_reuse,
+                 admit_budget=args.admit_budget)
     print(json.dumps(result, indent=2))
     name = f"serve_throughput_{args.family}"
     if args.mesh:
@@ -374,6 +490,8 @@ def main():
         name += "_elastic"
     elif args.chaos is not None:
         name += "_chaos"
+    if args.prefix_reuse:
+        name += "_prefix"
     common.write_bench_json(result, name)
     print("BENCH " + json.dumps(result))
 

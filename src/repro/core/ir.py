@@ -175,6 +175,26 @@ class WidthAnalysis:
         self._memo[v] = w
         return w
 
+    def rebind(self, eqns: Sequence, outvars: Sequence, avail: set) -> None:
+        """Re-point the analysis at a PATCHED item schedule (a packing
+        rewrite of the same BB) without discarding the memo.
+
+        Packing is value-preserving and keeps the root output vars, so a
+        memoized width stays correct as long as the vars it references are
+        still live: entries whose subject or value/match source was DCE'd
+        away are pruned (a later pass must not emit a read of a var that
+        no longer has a definition); everything else is carried over --
+        this is what makes patching ~free next to a full rebuild."""
+        self.eqns = eqns
+        self.def_idx, _ = defs_uses(eqns, outvars)
+
+        def live(v):
+            return is_literal(v) or v in avail
+
+        self._memo = {v: w for v, w in self._memo.items()
+                      if v in avail and live(w.value_src)
+                      and live(w.match_src)}
+
     def _leaf(self, v) -> Width:
         b = dtype_bits(v.aval.dtype)
         signed = np.dtype(v.aval.dtype).kind != "u" if b is not None else True
@@ -230,18 +250,37 @@ class AnalysisCache:
 
     Entries keep a strong reference to their jaxpr so CPython cannot recycle
     the id() while the entry is live.
+
+    `patched` counts in-place schedule patches (BBContext.patch): a packing
+    rewrite that used to cost a full re-emit + re-analysis but now only
+    splices the item schedule and locally repairs def/use + width state.
+    The pass pipeline increments it; patched >> builds is the incremental
+    re-analysis proof (tests/test_pipeline_cache.py).
     """
 
     def __init__(self):
         self._entries: dict[int, tuple[Any, Any]] = {}
         self.builds = 0
         self.hits = 0
+        self.patched = 0
 
     def get_or_build(self, jaxpr, build: Callable[[], Any]):
         ent = self._entries.get(id(jaxpr))
         if ent is not None and ent[0] is jaxpr:
             self.hits += 1
             return ent[1]
+        self.builds += 1
+        val = build()
+        self._entries[id(jaxpr)] = (jaxpr, val)
+        return val
+
+    def rebuild(self, jaxpr, build: Callable[[], Any]):
+        """Force-build a pristine entry, replacing whatever was cached.
+
+        Needed when a cached context was PATCHED past `jaxpr` by a previous
+        pipeline walk (e.g. a different pass list sharing this cache): the
+        entry no longer describes the un-rewritten BB, so the new walk must
+        start from a fresh analysis."""
         self.builds += 1
         val = build()
         self._entries[id(jaxpr)] = (jaxpr, val)
@@ -257,6 +296,7 @@ class AnalysisCache:
         self._entries.clear()
         self.builds = 0
         self.hits = 0
+        self.patched = 0
 
 
 # ---------------------------------------------------------------------------
@@ -278,6 +318,26 @@ class EqnItem:
     @property
     def effects(self):
         return self.eqn.effects
+
+    @property
+    def primitive(self):
+        return self.eqn.primitive
+
+    @property
+    def params(self):
+        return self.eqn.params
+
+
+class _PackedPrimitive:
+    """Duck-type stand-in so schedule items are uniform: passes and the
+    width analysis probe `item.primitive.name`, and a packed call must look
+    like an opaque equation (its name matches no packable pattern, so a
+    later pass never tries to re-pack it)."""
+    name = "silvia_packed"
+    multiple_results = True
+
+
+_PACKED_PRIM = _PackedPrimitive()
 
 
 @dataclasses.dataclass
@@ -303,6 +363,14 @@ class PackedItem:
     @property
     def effects(self):
         return ()
+
+    @property
+    def primitive(self):
+        return _PACKED_PRIM
+
+    @property
+    def params(self):
+        return {}
 
 
 def dce_items(items: list, outvars: Sequence) -> list:

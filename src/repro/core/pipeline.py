@@ -23,9 +23,11 @@ run-many, realized by three cache layers:
   inner BBs (repeated layer bodies, identical scan/cond branches) are
   rewritten once and the result is spliced everywhere,
 * a **shared analysis cache** (`ir.AnalysisCache`): the ALAP schedule,
-  def/use maps and width analysis of a BB are built once per BB *version*
-  and reused by every pass in the pipeline; a rewrite produces a new jaxpr
-  object, which is exactly the invalidation event.
+  def/use maps and width analysis of a BB are built once per traced BB and
+  shared by every pass in the pipeline; packing rewrites PATCH the context
+  in place (`BBContext.patch` splices the item schedule and locally repairs
+  def/use + widths -- counted as `analysis_patched`) and the rewritten BB
+  is retraced once after the whole pipeline, not once per rewriting pass.
 
 `optimize()`-wrapped functions expose `cache_info()` / `cache_clear()` so
 tests and benchmarks can assert the compile-once behaviour.
@@ -43,6 +45,7 @@ import jax
 from jax.extend import core as jex_core
 
 from repro.core import ir
+from repro.core import silvia as silvia_mod
 from repro.core.silvia import SILVIA
 from repro.core.silvia_add import SILVIAAdd
 from repro.core.silvia_muladd import SILVIAMul4, SILVIAMuladd
@@ -175,6 +178,7 @@ class RewriteCache:
             "subjaxpr_misses": self.subjaxpr_misses,
             "analysis_builds": self.analysis.builds,
             "analysis_hits": self.analysis.hits,
+            "analysis_patched": self.analysis.patched,
         }
 
     def clear(self):
@@ -216,12 +220,32 @@ def optimize_closed_jaxpr(closed: ClosedJaxpr, passes: Sequence[SILVIA],
     if changed:
         jaxpr = closed.jaxpr.replace(eqns=new_eqns)
         closed = ClosedJaxpr(jaxpr, closed.consts)
-    # 2. run each pass on this BB, sharing the analysis state
-    for p in passes:
-        closed, st = p.run(closed, loop_info=loop_info, cache=cache.analysis)
+    # 2. run each pass on this BB against ONE shared analysis context.
+    #    Packing rewrites patch the context in place (def/use + width info
+    #    repaired locally -- ir.AnalysisCache.patched counts them) and the
+    #    rewritten BB is emitted/retraced ONCE after the whole pipeline,
+    #    instead of once per rewriting pass.
+    if not passes:
+        return closed
+    ctx = None
+    for pass_i, p in enumerate(passes):
+        ctx = cache.analysis.get_or_build(
+            closed.jaxpr, lambda: silvia_mod.BBContext(closed))
+        if pass_i == 0 and ctx.dirty:
+            # stale: a previous walk (different pass list sharing this
+            # cache) patched the context past closed.jaxpr -- this walk
+            # must start from the un-rewritten BB
+            ctx = cache.analysis.rebuild(
+                closed.jaxpr, lambda: silvia_mod.BBContext(closed))
+        before = ctx.patches
+        st = p.run_ctx(ctx, loop_info=loop_info)
+        if ctx.patches != before:
+            cache.analysis.patched += 1
         if stats is not None:
             st["pass"] = p.name
             stats.append(st)
+    if ctx is not None and ctx.dirty:
+        closed = ir.emit_closed_jaxpr(closed, ctx.eqns)
     return closed
 
 

@@ -46,14 +46,46 @@ class Tuple_:
 
 
 class BBContext:
-    """Analysis state for one basic block (one jaxpr body)."""
+    """Analysis state for one basic block (one jaxpr body).
+
+    `eqns` is a schedule of ITEMS (ir.EqnItem / ir.PackedItem) rather than
+    raw jaxpr equations: a packing rewrite splices packed items in via
+    `patch()` and the analysis state (def/use, widths) is repaired locally,
+    so one context survives the whole pass pipeline and the rewritten BB is
+    re-emitted (retraced) only once at the end.
+    """
 
     def __init__(self, closed):
         self.closed = closed
-        self.eqns = ir.alap_schedule(closed.jaxpr.eqns, closed.jaxpr.outvars)
+        self.eqns = ir.alap_schedule(ir.items_of(closed),
+                                     closed.jaxpr.outvars)
         self.outvars = closed.jaxpr.outvars
         self.def_idx, self.use_idxs = ir.defs_uses(self.eqns, self.outvars)
         self.widths = ir.WidthAnalysis(self.eqns, self.outvars)
+        self.patches = 0        # in-place packing rewrites applied
+
+    @property
+    def dirty(self) -> bool:
+        """True when the schedule diverged from closed.jaxpr.eqns and the
+        caller must emit_closed_jaxpr(closed, ctx.eqns) to materialize."""
+        return self.patches > 0
+
+    def _avail_vars(self) -> set:
+        avail = set(self.def_idx)
+        avail.update(v for v in self.closed.jaxpr.invars)
+        avail.update(v for v in self.closed.jaxpr.constvars)
+        return avail
+
+    def patch(self, items: list) -> None:
+        """Splice a rewritten (packed + DCE'd) item schedule in WITHOUT
+        re-emitting the jaxpr: re-ALAP over the items, rebuild the (cheap)
+        def/use maps, and rebind the width analysis pruning only memo
+        entries whose vars died -- the incremental alternative to the old
+        whole-BB invalidation (ROADMAP carried item)."""
+        self.eqns = ir.alap_schedule(items, self.outvars)
+        self.def_idx, self.use_idxs = ir.defs_uses(self.eqns, self.outvars)
+        self.widths.rebind(self.eqns, self.outvars, self._avail_vars())
+        self.patches += 1
 
     def pos_of_def(self, v) -> int:
         """Schedule position of v's defining eqn (-1 for invars/consts)."""
@@ -163,30 +195,25 @@ class SILVIA:
         closed.extend(t for t in open_tuples if self.tuple_viable(t))
         return closed
 
-    def run(self, closed, loop_info=None, cache=None) -> tuple[Any, dict]:
-        """Apply the pass to one ClosedJaxpr; returns (new_closed, stats).
+    def run_ctx(self, ctx: BBContext, loop_info=None) -> dict:
+        """Apply Algorithm 1 against a shared BBContext, rewriting IN PLACE
+        via ctx.patch() (no retrace).  Returns the stats dict; the caller
+        checks ctx.dirty / ctx.patches to decide whether to re-emit.
 
         loop_info: optional (num_consts, num_carry) when this BB is a scan
-        body -- enables the II-aware tuple filter (sec. 3.5.1).
-        cache: optional ir.AnalysisCache shared by the pass pipeline; the
-        ALAP schedule / def-use maps / width analysis bundled in BBContext
-        are then built once per BB version and reused by later passes."""
-        if cache is None:
-            ctx = BBContext(closed)
-        else:
-            ctx = cache.get_or_build(closed.jaxpr, lambda: BBContext(closed))
+        body -- enables the II-aware tuple filter (sec. 3.5.1)."""
         cands = self.get_candidates(ctx)
         stats = {"candidates": len(cands), "tuples": 0, "packed_ops": 0,
                  "ii_dropped": 0}
         if not cands:
-            return closed, stats
+            return stats
         tuples = self.get_tuples(cands, ctx)
         if tuples and self.filter_ii and loop_info is not None:
-            tuples, dropped = self._filter_ii_tuples(tuples, ctx, closed,
+            tuples, dropped = self._filter_ii_tuples(tuples, ctx, ctx.closed,
                                                      loop_info)
             stats["ii_dropped"] = dropped
         if not tuples:
-            return closed, stats
+            return stats
         stats["tuples"] = len(tuples)
         stats["packed_ops"] = sum(len(t.cands) for t in tuples)
         # replaceTuple: splice packed items in at a valid insertion point,
@@ -200,15 +227,32 @@ class SILVIA:
             for c in tup.cands:
                 consumed |= c.covered
         items: list = []
-        for i, eqn in enumerate(ctx.eqns):
-            for it in inserts.get(i, []):
-                items.append(it)
+        for i, it in enumerate(ctx.eqns):
+            for ins in inserts.get(i, []):
+                items.append(ins)
             if i not in consumed:
-                items.append(ir.EqnItem(eqn))
-        for it in inserts.get(len(ctx.eqns), []):
-            items.append(it)
-        items = ir.dce_items(items, ctx.outvars)
-        return ir.emit_closed_jaxpr(closed, items), stats
+                items.append(it)
+        for ins in inserts.get(len(ctx.eqns), []):
+            items.append(ins)
+        ctx.patch(ir.dce_items(items, ctx.outvars))
+        return stats
+
+    def run(self, closed, loop_info=None, cache=None) -> tuple[Any, dict]:
+        """Apply the pass to one ClosedJaxpr; returns (new_closed, stats).
+
+        Compatibility wrapper over run_ctx for single-pass callers: builds
+        (or fetches from `cache`, an ir.AnalysisCache) the BBContext, packs
+        in place, and emits a fresh ClosedJaxpr only if this call packed
+        something."""
+        if cache is None:
+            ctx = BBContext(closed)
+        else:
+            ctx = cache.get_or_build(closed.jaxpr, lambda: BBContext(closed))
+        before = ctx.patches
+        stats = self.run_ctx(ctx, loop_info=loop_info)
+        if ctx.patches == before:
+            return closed, stats
+        return ir.emit_closed_jaxpr(closed, ctx.eqns), stats
 
     def _filter_ii_tuples(self, tuples, ctx, closed, loop_info):
         """Drop tuples whose packed super-node raises II_min (Fig. 5).

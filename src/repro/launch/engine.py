@@ -31,6 +31,18 @@ ever-changing request mix:
   same decode path C tokens at a time (same bucket shapes, same compiled
   family).  KV-cache families only: sequential-state families would change
   the floating-point reduction order (see slot_state.FamilyState).
+* **cross-request prefix caching** -- with `prefix_cache=N`, prompt chunks
+  are hashed into a content-addressed pool of immutable host-resident
+  prefix pages (launch/prefix_cache.py) shared copy-on-write across
+  requests: admission copies the longest cached prefix into the slot's
+  private pages and prefills only the uncached tail, skipping whole chunk
+  dispatches (the TTFT win).  Eviction is LRU-by-refcount -- a page is
+  pinned while a live slot was admitted from it.  KV rows are a pure
+  function of the token prefix and masking hides everything beyond them,
+  so warm streams stay BIT-IDENTICAL to cold ones
+  (tests/test_prefix_cache.py) -- including under chaos replay and
+  elastic degrade (host pages are mesh-free and re-enter device state
+  through the CURRENT plan's PartitionSpecs; DESIGN.md sec. 10).
 * **stop tokens** -- a request carrying `stop_tokens` is harvested the
   segment it emits one (the stop token ends the output), instead of
   always running to max_new_tokens.
@@ -102,6 +114,7 @@ from repro.distributed import fault as dfault
 from repro.distributed import sharding as dshard
 from repro.distributed.fault import SimulatedFailure
 from repro.kernels import registry
+from repro.launch import prefix_cache as pfx
 from repro.launch import resilience as res
 from repro.launch import scheduler
 from repro.launch import serve
@@ -375,6 +388,18 @@ class ServeEngine:
                     faults under the whole suite); pass an explicit
                     resilience.ChaosSchedule to pin a schedule, or None
                     to disable injection regardless of the environment.
+    prefix_cache:   if set, the page capacity of the cross-request prefix
+                    cache (launch/prefix_cache.py): admission reuses
+                    pooled prefix pages instead of re-prefilling cached
+                    prompt prefixes, bit-identically.  None (the
+                    default) disables the pool entirely -- admission is
+                    byte-for-byte the pre-pool engine.
+    admit_token_budget: admission-fairness cap: each admission round
+                    prefills at most this many UNCACHED prompt tokens
+                    (the head-of-queue request always proceeds, so big
+                    prompts cannot starve); the overflow is deferred back
+                    to the queue with arrival order preserved, counted in
+                    cache_info()["admission"]["deferrals"].
     """
 
     def __init__(self, params, cfg, *, n_slots: int = 8,
@@ -384,7 +409,9 @@ class ServeEngine:
                  enc_len: Optional[int] = None,
                  min_len_bucket: int = 32, min_batch_bucket: int = 1,
                  resilience: Optional[res.ResilienceConfig] = None,
-                 chaos: object = "env"):
+                 chaos: object = "env",
+                 prefix_cache: Optional[int] = None,
+                 admit_token_budget: Optional[int] = None):
         if cfg.family == "encdec" and enc_len is None:
             raise ValueError("encdec serving needs enc_len (the fixed "
                              "encoder length of every request's features)")
@@ -492,6 +519,26 @@ class ServeEngine:
             "quarantined", "faults_injected", "errors", "recoveries",
             "replayed_tokens", "replay_divergence", "duplicate_rejects",
             "snapshots", "restores", "drains", "degraded")}
+        # -- cross-request prefix cache (launch/prefix_cache.py) --
+        self._prefix: Optional[pfx.PrefixCache] = None
+        if prefix_cache is not None:
+            # chain (per-chunk) sharing needs EVERY leaf length-paged:
+            # resuming mid-prompt would otherwise skip the sequential
+            # updates a constant-size leaf accumulated over the skipped
+            # chunks.  Families with any constant-size state still share
+            # at exact-full-prompt (terminal) granularity.
+            chain_ok = prefill_chunk is not None and all(
+                la is not None for la in self._spec.length_axes)
+            self._prefix = pfx.PrefixCache(
+                prefix_cache, chunk=prefill_chunk, chain_ok=chain_ok,
+                salt=f"{cfg.family}:{prefill_chunk}")
+            if self._plan is not None:
+                self._prefix.note_remesh(self._plan.key)
+        # keys pinned in the pool per slot, released at eviction
+        self._slot_pins: List[tuple] = [()] * n_slots
+        # -- admission fairness (token budget) --
+        self._admit_budget = admit_token_budget
+        self._deferrals = 0
 
     # -- request lifecycle --------------------------------------------------
 
@@ -566,6 +613,9 @@ class ServeEngine:
         self._pos[slot] = 0
         self._tok[slot] = 0
         self._replay[slot] = []
+        if self._prefix is not None and self._slot_pins[slot]:
+            self._prefix.release(self._slot_pins[slot])
+        self._slot_pins[slot] = ()
 
     @staticmethod
     def _stopped(req: scheduler.Request, tok: int) -> bool:
@@ -598,10 +648,12 @@ class ServeEngine:
         self._remaining = self._remaining[perm]
         self._slot_req = [self._slot_req[i] for i in perm]
         self._replay = [self._replay[i] for i in perm]
+        self._slot_pins = [self._slot_pins[i] for i in perm]
         self.compactions += 1
         return True
 
-    def _admit(self, now: float, resume_only: bool = False) -> int:
+    def _admit(self, now: float, clock: scheduler.Clock,
+               resume_only: bool = False) -> int:
         self._compact()
         free = [i for i in range(self.n_slots) if not self._active[i]]
         # resume_only (drain): only requests already carrying emitted
@@ -609,6 +661,8 @@ class ServeEngine:
         # requests keep their queue position
         pred = (lambda r: bool(r.tokens)) if resume_only else None
         ready = self._queue.pop_ready(now, limit=len(free), predicate=pred)
+        if ready and self._admit_budget is not None:
+            ready = self._defer_over_budget(ready)
         if not ready:
             return 0
         # popped but not yet registered in a slot: a fault mid-admission
@@ -623,9 +677,33 @@ class ServeEngine:
                                        maximum=self.max_cache_len)
             groups.setdefault(sb, []).append(r)
         for sb, group in sorted(groups.items()):
-            self._admit_group(group, sb, free, now)
+            self._admit_group(group, sb, free, clock)
         self._admitting = []
         return len(ready)
+
+    def _defer_over_budget(
+            self, ready: List[scheduler.Request]) -> List[scheduler.Request]:
+        """Admission fairness: take ready requests in queue order until
+        their summed UNCACHED prompt tokens exceed admit_token_budget,
+        then defer the rest back to the queue (ordered re-insertion
+        preserves arrival order, so deferral never reorders).  The head
+        request always proceeds -- an over-budget prompt stalls behind
+        the budget forever otherwise.  With the prefix cache on, a
+        request's cost is only its uncached tail (peek, so the budget
+        probe never perturbs hit/miss counters or LRU order)."""
+        take, spent = [], 0
+        for r in ready:
+            cost = r.prompt_len
+            if self._prefix is not None:
+                cost -= min(self._prefix.peek_cached_tokens(r), cost)
+            if take and spent + cost > self._admit_budget:
+                break
+            take.append(r)
+            spent += cost
+        for r in ready[len(take):]:
+            self._deferrals += 1
+            self._queue.submit(r)
+        return take
 
     def _prefill_bucket(self, sb: int) -> int:
         """static cache_len for a prefill dispatch.  Families without a
@@ -653,27 +731,49 @@ class ServeEngine:
         return (audio, jnp.asarray(prompts)), lens
 
     def _admit_group(self, group: List[scheduler.Request], sb: int,
-                     free: List[int], now: float) -> None:
+                     free: List[int], clock: scheduler.Clock) -> None:
         g = len(group)
-        bb = scheduler.bucket_pow2(g, minimum=self._adm_floor,
-                                   maximum=self.n_slots)
         t_pre = self._prefill_bucket(sb)
-        inputs, lens = self._prefill_inputs(group, bb, sb)
-        if self.prefill_chunk is None:
-            self._graphs.add(("prefill", bb, sb, t_pre))
-            tok0, rows, bad0 = self._guarded(
-                "prefill", self._bundle.prefill, self.params, inputs,
-                jnp.asarray(lens - 1), t_pre)
+        if self._prefix is None:
+            bb = scheduler.bucket_pow2(g, minimum=self._adm_floor,
+                                       maximum=self.n_slots)
+            inputs, lens = self._prefill_inputs(group, bb, sb)
+            if self.prefill_chunk is None:
+                self._graphs.add(("prefill", bb, sb, t_pre))
+                tok0, rows, bad0 = self._guarded(
+                    "prefill", self._bundle.prefill, self.params, inputs,
+                    jnp.asarray(lens - 1), t_pre)
+            else:
+                tok0, rows, bad0 = self._chunked_prefill(np.asarray(inputs),
+                                                         lens, t_pre)
+            tok0 = np.asarray(tok0)
+            bad0 = np.asarray(bad0)
+            slots = np.asarray([free.pop(0) for _ in range(g)], np.int32)
+            # scatter the admitted pages into their slots; leaves without
+            # a length axis (SSM/conv state, cross-KV) are reset wholesale
+            self._cache = self._spec.admit(self._cache, rows, slots, g,
+                                           t_pre=t_pre)
+            pins: List[tuple] = [()] * g
+        elif self.prefill_chunk is not None:
+            tok0, bad0, slots, pins = self._prefix_admit_chunked(
+                group, sb, t_pre, free)
         else:
-            tok0, rows, bad0 = self._chunked_prefill(np.asarray(inputs),
-                                                     lens, t_pre)
-        tok0 = np.asarray(tok0)
-        bad0 = np.asarray(bad0)
-        slots = np.asarray([free.pop(0) for _ in range(g)], np.int32)
-        # scatter the admitted pages into their slots; leaves without a
-        # length axis (SSM/conv state, cross-KV) are reset wholesale
-        self._cache = self._spec.admit(self._cache, rows, slots, g,
-                                       t_pre=t_pre)
+            tok0, bad0, slots, pins = self._prefix_admit_full(
+                group, sb, t_pre, free)
+        # registration time is read AFTER the admitting dispatch, so a
+        # request's TTFT (first_token_time - arrival) includes its own
+        # prefill cost -- the time a prefix hit actually saves
+        self._register_admitted(group, tok0, bad0, slots, pins, free,
+                                clock.now())
+
+    def _register_admitted(self, group: List[scheduler.Request],
+                           tok0: np.ndarray, bad0: np.ndarray,
+                           slots: np.ndarray, pins: List[tuple],
+                           free: List[int], now: float) -> None:
+        """Per-request bookkeeping once a group's pages are in their
+        slots -- the shared tail of the cold and prefix-cache admission
+        paths: quarantine, recovery-replay scheduling, fresh-stream
+        start."""
         for i, r in enumerate(group):
             slot = int(slots[i])
             self._admitting = [x for x in self._admitting if x is not r]
@@ -681,7 +781,10 @@ class ServeEngine:
                 # quarantine at prefill: structured FAILED outcome, and
                 # the slot's freshly-scattered pages are scrubbed -- the
                 # mask zeroes stale FINITE values exactly, but 0*NaN=NaN
-                # would leak into a later tenant's softmax
+                # would leak into a later tenant's softmax.  The slot
+                # never owned its pins (release directly)
+                if self._prefix is not None and pins[i]:
+                    self._prefix.release(pins[i])
                 self._robust["quarantined"] += 1
                 self._finish(r, now, res.FAILED,
                              "non-finite logits at prefill")
@@ -689,6 +792,9 @@ class ServeEngine:
                 free.append(slot)
                 free.sort()
                 continue
+            # pins transfer to the slot BEFORE any eviction path below,
+            # so _evict is the single release point for owned pins
+            self._slot_pins[slot] = tuple(pins[i])
             if r.tokens:
                 # recovery-as-replay: this request was requeued by
                 # _recover with its already-emitted tokens.  The prefill
@@ -720,6 +826,200 @@ class ServeEngine:
             self._pos[slot] = r.prompt_len
             self._tok[slot] = tok0[i]
             self._remaining[slot] = r.max_new_tokens - 1
+
+    def _concat_pages(self, entries: List[pfx.Entry]) -> list:
+        """Concatenate consecutive chain entries' pages along each leaf's
+        length axis (host-side; chain entries exist only for all-length-
+        paged families, so no leaf is None)."""
+        out = []
+        for j, la in enumerate(self._spec.length_axes):
+            ps = [e.pages[j] for e in entries]
+            out.append(ps[0] if len(ps) == 1 else np.concatenate(ps,
+                                                                 axis=la))
+        return out
+
+    def _chunk_pages(self, span: list, j: int, c: int) -> list:
+        """Host-side chunk j of an extracted multi-chunk span."""
+        out = []
+        for la, p in zip(self._spec.length_axes, span):
+            if p is None:
+                out.append(None)
+                continue
+            idx = [slice(None)] * p.ndim
+            idx[la] = slice(j * c, (j + 1) * c)
+            out.append(np.ascontiguousarray(p[tuple(idx)]))
+        return out
+
+    def _reshard_state(self) -> None:
+        """Host-sourced page writes re-enter device state under the
+        CURRENT plan's PartitionSpecs (the _scrub pattern) -- this is
+        where pooled pages get 're-sharded' after an elastic degrade."""
+        if self._plan is not None:
+            self._cache = jax.device_put(
+                self._cache, dshard.to_shardings(self._plan.state_specs(),
+                                                 self._plan.mesh))
+
+    def _prefix_admit_full(self, group: List[scheduler.Request], sb: int,
+                           t_pre: int, free: List[int]):
+        """Prefix-cache admission for full-prefill engines (every family,
+        including sequential-state ones): an exact-repeat (terminal) hit
+        copies its pooled pages -- KV rows plus constant-size state
+        snapshots -- straight into the slot, ZERO prefill dispatches; the
+        misses prefill as one smaller bucketed sub-group (batch
+        composition cannot perturb a row, module docstring, so the
+        shrunken bucket is bit-safe) and donate their pages back to the
+        pool."""
+        g = len(group)
+        slots = np.asarray([free.pop(0) for _ in range(g)], np.int32)
+        tok0 = np.zeros((g, 1), np.int32)
+        bad0 = np.zeros((g,), bool)
+        pins: List[tuple] = [()] * g
+        miss_idx: List[int] = []
+        wrote = False
+        for i, r in enumerate(group):
+            hit = self._prefix.lookup(r)
+            if hit.terminal is None:
+                miss_idx.append(i)
+                continue
+            ent = hit.terminal
+            self._cache = self._spec.write_row_pages(
+                self._cache, int(slots[i]), 0, ent.pages)
+            wrote = True
+            tok0[i, 0] = ent.tok0
+            pins[i] = self._prefix.pin([ent.key])
+            self._prefix.note_skip(r.prompt_len)
+        if miss_idx:
+            sub = [group[i] for i in miss_idx]
+            bb = scheduler.bucket_pow2(len(sub), minimum=self._adm_floor,
+                                       maximum=self.n_slots)
+            inputs, lens = self._prefill_inputs(sub, bb, sb)
+            self._graphs.add(("prefill", bb, sb, t_pre))
+            stok0, rows, sbad0 = self._guarded(
+                "prefill", self._bundle.prefill, self.params, inputs,
+                jnp.asarray(lens - 1), t_pre)
+            stok0 = np.asarray(stok0)
+            sbad0 = np.asarray(sbad0)
+            sub_slots = slots[np.asarray(miss_idx, np.int64)]
+            self._cache = self._spec.admit(self._cache, rows, sub_slots,
+                                           len(sub), t_pre=t_pre)
+            for j, i in enumerate(miss_idx):
+                tok0[i, 0] = stok0[j, 0]
+                bad0[i] = sbad0[j]
+                if not sbad0[j]:
+                    r = group[i]
+                    self._prefix.insert_terminal(
+                        r, self._spec.extract_row_pages(
+                            rows, j, 0, r.prompt_len),
+                        int(stok0[j, 0]))
+        if wrote:
+            self._reshard_state()
+        return tok0, bad0, slots, pins
+
+    def _prefix_admit_chunked(self, group: List[scheduler.Request],
+                              sb: int, t_pre: int, free: List[int]):
+        """Prefix-cache admission for chunked-prefill engines: each row
+        resumes at its first uncached chunk -- pooled chunk pages are
+        copied in below the resume point (copy-on-write: everything at or
+        past it is computed into the row's private pages) -- and a chunk
+        dispatch is skipped outright once every row is past it.  The rows
+        that do run go through the SAME compiled ("chunk", bb, c, t_pre)
+        graph as a cold admission; copied pages are bitwise what this
+        row's own chunks would have written (KV purity), and masking
+        hides batch composition, so the harvested logits -- and every
+        downstream token -- are bit-identical to the cold path."""
+        g = len(group)
+        bb = scheduler.bucket_pow2(g, minimum=self._adm_floor,
+                                   maximum=self.n_slots)
+        c = min(self.prefill_chunk, sb)
+        n_chunks = sb // c
+        prompts = np.zeros((bb, sb), np.int32)
+        lens = np.ones((bb,), np.int32)
+        for i, r in enumerate(group):
+            prompts[i, :r.prompt_len] = r.prompt
+            lens[i] = r.prompt_len
+        last_chunk = (lens - 1) // c
+        cache = self._spec.init_state(bb, t_pre)
+        resume = np.full((bb,), n_chunks, np.int64)  # padding: never runs
+        term: List[Optional[pfx.Entry]] = [None] * g
+        n_chain = [0] * g
+        pin_keys: List[List[bytes]] = [[] for _ in range(g)]
+        for i, r in enumerate(group):
+            hit = self._prefix.lookup(r)
+            if hit.terminal is not None:
+                cache = self._spec.write_row_pages(cache, i, 0,
+                                                   hit.terminal.pages)
+                term[i] = hit.terminal
+                pin_keys[i].append(hit.terminal.key)
+                self._prefix.note_skip(r.prompt_len)
+                continue
+            if hit.chain:
+                # one write per leaf for the whole cached span (chunk
+                # pages concatenated host-side), not one per chunk
+                cache = self._spec.write_row_pages(
+                    cache, i, 0, self._concat_pages(hit.chain))
+                pin_keys[i].extend(ent.key for ent in hit.chain)
+            n_chain[i] = len(hit.chain)
+            # resume at the first uncached chunk; a chain covering the
+            # final chunk still re-runs it (rewriting identical bits)
+            # to recover the first-token logits
+            resume[i] = min(len(hit.chain), int(last_chunk[i]))
+            self._prefix.note_skip(int(resume[i]) * c)
+        last: Dict[int, object] = {}
+        for k in range(n_chunks):
+            act = (resume <= k) & (k <= last_chunk)
+            act[g:] = False
+            if not act.any():
+                continue    # every row is past this chunk: no dispatch
+            self._graphs.add(("chunk", bb, c, t_pre))
+            toks = jnp.asarray(prompts[:, k * c:(k + 1) * c])
+            pos = jnp.full((bb,), k * c, jnp.int32)
+            logits, cache = self._guarded(
+                "chunk", self._bundle.chunk_step, self.params, toks,
+                cache, pos, jnp.asarray(act))
+            hit_rows = np.nonzero((last_chunk == k) & act)[0]
+            if hit_rows.size:
+                # harvest on the host: a device gather would compile one
+                # program per hit-row arity, and argmax over the exact
+                # same bits is order-free either way
+                lg = np.asarray(logits)
+                for b in hit_rows:
+                    last[int(b)] = lg[int(b), int((lens[b] - 1) % c)]
+        tok0 = np.zeros((g, 1), np.int32)
+        bad0 = np.zeros((g,), bool)
+        for i in range(g):
+            if term[i] is not None:
+                tok0[i, 0] = term[i].tok0
+                continue
+            row = np.asarray(last[i])
+            # host argmax over identical logits bits == the device argmax
+            # (comparison-based, no float accumulation; same argument as
+            # _replay_step)
+            tok0[i, 0] = int(np.argmax(row))
+            bad0[i] = not bool(np.all(np.isfinite(row)))
+        # donate computed pages back to the pool (never from a faulted
+        # dispatch -- an exception above unwinds before this point)
+        for i in range(g):
+            if term[i] is not None or bad0[i]:
+                continue
+            r = group[i]
+            # ONE extraction (and one blocking device transfer) per miss
+            # row: the terminal pages cover [0, prompt_len), and chain
+            # chunk pages are host-side slices of them (chain_ok engines
+            # have every leaf length-paged, so the slices line up)
+            full = self._spec.extract_row_pages(cache, i, 0, r.prompt_len)
+            n_full = r.prompt_len // c
+            if self._prefix.chain_ok and n_full > n_chain[i]:
+                keys = self._prefix.chain_keys(r.prompt)
+                for k in range(n_chain[i], n_full):
+                    self._prefix.insert_chain(
+                        keys[k], self._chunk_pages(full, k, c))
+            self._prefix.insert_terminal(r, full, int(tok0[i, 0]))
+        pins = [self._prefix.pin(pk) for pk in pin_keys]
+        slots = np.asarray([free.pop(0) for _ in range(g)], np.int32)
+        self._cache = self._spec.admit(self._cache, cache, slots, g,
+                                       t_pre=t_pre)
+        self._reshard_state()
+        return tok0, bad0, slots, pins
 
     def _chunked_prefill(self, prompts: np.ndarray, lens: np.ndarray,
                          t_pre: int):
@@ -981,6 +1281,12 @@ class ServeEngine:
         self.params = dfault.elastic_remesh(self.params, new_mesh, self.cfg)
         self._graphs = set()
         self._robust["degraded"] += 1
+        if self._prefix is not None:
+            # pooled pages are host-resident and mesh-free: nothing to
+            # invalidate, they re-shard through the NEW plan's
+            # PartitionSpecs on the next write-back (_reshard_state);
+            # the pool records the new fingerprint for observability
+            self._prefix.note_remesh(self._plan.key)
         self._reshard_s += time.perf_counter() - t0
         del lost  # recorded in self._health.dead_ids (cache_info)
 
@@ -1027,6 +1333,11 @@ class ServeEngine:
         self._remaining[:] = 0
         self._slot_req = [None] * self.n_slots
         self._replay = [[] for _ in range(self.n_slots)]
+        if self._prefix is not None:
+            for pk in self._slot_pins:
+                if pk:
+                    self._prefix.release(pk)
+        self._slot_pins = [()] * self.n_slots
 
     # -- driver -------------------------------------------------------------
 
@@ -1047,7 +1358,7 @@ class ServeEngine:
                     resume_only: bool = False) -> bool:
         now = clock.now()
         expired = self._expire(now)
-        admitted = self._admit(now, resume_only=resume_only)
+        admitted = self._admit(now, clock, resume_only=resume_only)
         self._drain_replay(clock)
         if not self._active.any():
             return bool(admitted or expired)
@@ -1171,12 +1482,25 @@ class ServeEngine:
         known -- the prefill graphs it maps to; returns the number of
         graphs compiled."""
         n = 0
+        state0 = self._spec.init_state(self.n_slots, self.max_cache_len)
+        if self._plan is not None:
+            state0 = jax.device_put(
+                state0, dshard.to_shardings(self._plan.state_specs(),
+                                            self._plan.mesh))
         for bb in self.batch_buckets:
             for t_b in (self.len_buckets or (None,)):
                 key = ("segment", bb, t_b, self.segment_len)
                 if key in self._graphs:
                     continue
-                cache = self._spec.init_state(bb, t_b or self.max_cache_len)
+                # feed the segment the same state the serve loop will:
+                # the live slot state (plan-sharded on a mesh) for the
+                # "fast" full combo, a slice_live view otherwise --
+                # compiling on a fresh unsharded init_state would leave
+                # the sharded variant to lazy-compile mid-traffic
+                fast = (bb == self.n_slots
+                        and t_b in (None, self.max_cache_len))
+                cache = state0 if fast else \
+                    self._spec.slice_live(state0, bb, t_b)
                 out = self._bundle.segment(
                     self.params, jnp.zeros((bb, 1), jnp.int32), cache,
                     jnp.zeros((bb,), jnp.int32), jnp.zeros((bb,), bool),
@@ -1184,6 +1508,12 @@ class ServeEngine:
                 jax.block_until_ready(out[0])
                 self._graphs.add(key)
                 n += 1
+                # also pre-compile the eager merge wrapper a non-"fast"
+                # segment step runs on the FULL slot state, with the
+                # segment's own output sub-state as the merge source --
+                # exactly the operands the serve loop hands it
+                if not fast:
+                    state0 = self._spec.merge_live(state0, out[2], bb, t_b)
         if self._chaos is not None:
             # a chaos-armed engine WILL recover, and recovery replays
             # through single-token chunk dispatches: pre-compile that grid
@@ -1229,6 +1559,64 @@ class ServeEngine:
                 jax.block_until_ready(out[0])
                 self._graphs.add(key)
                 n += 1
+        if self._prefix is not None:
+            # pre-compile the pool's page ops.  The dynamic_slice /
+            # dynamic_update_slice programs are keyed by the FULL operand
+            # shape, not just the page size, so the warm set must cover
+            # every state shape admission actually touches: the
+            # (bb, t_pre) local prefill states (chunked path + full-path
+            # extraction from prefill rows) and the engine's own
+            # (n_slots, max_cache_len) slot state (full-path terminal
+            # writes).  Sizes are the advertised prompt lengths plus every
+            # whole-chunk span up to the longest.
+            sizes = {int(pl) for pl in prompt_lens}
+            if self.prefill_chunk is not None:
+                cc = self.prefill_chunk
+                sizes |= {k * cc for k in range(1, max(sizes) // cc + 1)}
+            big = self._spec.init_state(self.n_slots, self.max_cache_len)
+            if self._plan is not None:
+                # the live slot state is sharded: warm the sharded
+                # variant of the programs, not the host one
+                big = jax.device_put(
+                    big, dshard.to_shardings(self._plan.state_specs(),
+                                             self._plan.mesh))
+            for s in sorted(sizes):
+                pages = self._spec.extract_row_pages(big, 0, 0, s)
+                big = self._spec.write_row_pages(big, 0, 0, pages)
+            for bb in self.admission_batch_buckets:
+                for t in sorted({self._prefill_bucket(sb) for sb in sbs}):
+                    local = self._spec.init_state(bb, t)
+                    for s in sorted(x for x in sizes if x <= t):
+                        pages = self._spec.extract_row_pages(
+                            local, 0, 0, s)
+                        local = self._spec.write_row_pages(
+                            local, 0, 0, pages)
+                    if (self._plan is not None
+                            and self.prefill_chunk is not None):
+                        # what admission actually scatters is the CHUNK
+                        # DISPATCH's output state, whose leaves carry the
+                        # shard_map out-shardings -- run one chunk on the
+                        # written state (an already-warmed graph key) so
+                        # the admit below compiles on those shardings
+                        cands = [min(self.prefill_chunk, sb) for sb in sbs
+                                 if self._prefill_bucket(sb) == t]
+                        if cands:
+                            c = max(cands)
+                            _, local = self._bundle.chunk_step(
+                                self.params,
+                                jnp.zeros((bb, c), jnp.int32), local,
+                                jnp.zeros((bb,), jnp.int32),
+                                jnp.zeros((bb,), bool))
+                    # admission also scatters the local rows into the
+                    # slot state with one eager program per admitted
+                    # GROUP SIZE (the slots index array is [g]):
+                    # pre-compile every arity so neither the warm nor
+                    # the cold serving path pays it mid-run
+                    for g in range(1, min(bb, self.n_slots) + 1):
+                        big = self._spec.admit(
+                            big, local,
+                            np.arange(g, dtype=np.int32), g, t_pre=t)
+            jax.block_until_ready(jax.tree_util.tree_leaves(big))
         return n
 
     def cache_info(self) -> dict:
@@ -1250,6 +1638,10 @@ class ServeEngine:
             "lowerings": dict(self._lowerings),
             "decode_bundle_lru": serve.decode_cache_info(),
             "robustness": dict(self._robust),
+            "admission": {
+                "token_budget": self._admit_budget,
+                "deferrals": self._deferrals,
+            },
             "resilience": {
                 "max_queue": self._res.max_queue,
                 "shed_policy": self._res.shed_policy,
@@ -1264,6 +1656,8 @@ class ServeEngine:
                 },
             },
         }
+        if self._prefix is not None:
+            info["prefix_cache"] = self._prefix.info()
         chaos = info["resilience"]["chaos"]
         if chaos is not None and isinstance(self._chaos,
                                             delastic.DeviceLossInjector):

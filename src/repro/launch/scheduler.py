@@ -226,6 +226,43 @@ def synthetic_traffic(seed: int, n_requests: int, rate: float,
     return reqs
 
 
+def shared_prefix_traffic(seed: int, n_requests: int, rate: float,
+                          n_prefixes: int, prefix_len: int,
+                          tail_lens: Sequence[int],
+                          gen_lens: Sequence[int], vocab: int,
+                          zipf_a: float = 1.2,
+                          ttls: Optional[Sequence[Optional[float]]] = None,
+                          ) -> List[Request]:
+    """Poisson arrivals whose prompts share prefixes zipfian-style: each
+    request draws one of `n_prefixes` fixed prefix token blocks with
+    P(k) proportional to 1/(k+1)^zipf_a (a few system prompts dominate,
+    a long tail of rare ones -- the real-traffic shape that makes a
+    cross-request prefix cache pay), then appends a fresh random tail of
+    a length drawn from `tail_lens`.  Same rate/gen/TTL machinery as
+    synthetic_traffic."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab, size=prefix_len, dtype=np.int32)
+                for _ in range(n_prefixes)]
+    w = 1.0 / np.arange(1, n_prefixes + 1, dtype=np.float64) ** zipf_a
+    w /= w.sum()
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        pre = prefixes[int(rng.choice(n_prefixes, p=w))]
+        tl = int(rng.choice(np.asarray(tail_lens)))
+        tail = rng.integers(0, vocab, size=tl, dtype=np.int32)
+        gl = int(rng.choice(np.asarray(gen_lens)))
+        deadline = None
+        if ttls is not None:
+            ttl = ttls[int(rng.integers(0, len(ttls)))]
+            deadline = None if ttl is None else t + float(ttl)
+        reqs.append(Request(rid=i, prompt=np.concatenate([pre, tail]),
+                            max_new_tokens=gl, arrival_time=t,
+                            deadline=deadline))
+    return reqs
+
+
 # ---------------------------------------------------------------------------
 # clocks (real serving vs fast-forward benchmarking)
 # ---------------------------------------------------------------------------

@@ -49,6 +49,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,6 +189,106 @@ class SlotStateSpec:
         def f(ba, la, leaf):
             return jnp.take(leaf, perm, axis=ba)
         return self._apply(f, state)
+
+    # -- prefix pages (launch/prefix_cache.py) ------------------------------
+    #
+    # A "prefix page" is the per-slot, per-leaf slice of state that a token
+    # prefix fully determines: for leaves WITH a length axis that is rows
+    # [lo:hi) (attention KV written by per-row dynamic_update_slice -- a
+    # pure function of the token prefix, see models/attention.py); for
+    # constant-size leaves (SSM recurrent state, conv windows, cross-KV)
+    # it is the whole leaf -- a state SNAPSHOT, cheap precisely because
+    # length_axis=None pages are fixed-size.  Pages are extracted to host
+    # numpy (mesh-free: they survive elastic degrade and are re-placed
+    # under whatever PartitionSpecs the current mesh plan dictates when
+    # written back) and carried bit-exactly.
+
+    @functools.lru_cache(maxsize=None)
+    def _extract_prog(self, size: int, with_const: bool):
+        """One jitted program slicing EVERY leaf's [lo:lo+size) page in a
+        single dispatch.  `row`/`lo` are traced scalars, so one compiled
+        program (per leaf-aval signature, handled by jit) serves every
+        row and chunk offset -- python slices would bake each offset into
+        its own XLA program, and per-leaf eager dynamic_slice calls would
+        pay a host->device transfer per start index per leaf."""
+        axes = tuple(zip(self.batch_axes, self.length_axes))
+
+        @jax.jit
+        def prog(leaves, row, lo):
+            out = []
+            for (ba, la), leaf in zip(axes, leaves):
+                if la is None and not with_const:
+                    out.append(None)
+                    continue
+                sizes = list(leaf.shape)
+                sizes[ba] = 1
+                starts = [0] * leaf.ndim
+                starts[ba] = row
+                if la is not None:
+                    sizes[la] = size
+                    starts[la] = lo
+                out.append(jax.lax.dynamic_slice(leaf, tuple(starts),
+                                                 tuple(sizes)))
+            return out
+        return prog
+
+    @functools.lru_cache(maxsize=None)
+    def _write_prog(self):
+        """Jitted counterpart of _extract_prog: every page written in one
+        dispatch (None pages pass their leaf through untouched -- they
+        are empty pytree subtrees, so jit specializes on the pattern)."""
+        axes = tuple(zip(self.batch_axes, self.length_axes))
+
+        @jax.jit
+        def prog(leaves, pages, row, lo):
+            out = []
+            for (ba, la), leaf, page in zip(axes, leaves, pages):
+                if page is None:
+                    out.append(leaf)
+                    continue
+                starts = [0] * leaf.ndim
+                starts[ba] = row
+                if la is not None:
+                    starts[la] = lo
+                out.append(jax.lax.dynamic_update_slice(
+                    leaf, page, tuple(starts)))
+            return out
+        return prog
+
+    def extract_row_pages(self, state, row: int, lo: int, hi: int,
+                          with_const: bool = True) -> list:
+        """Per-leaf host pages for ONE slot row (tree_flatten order).
+
+        Length-axis leaves are sliced [lo:hi) along the length axis; the
+        slot axis is kept as a singleton slice so axis numbering is
+        position-stable for write_row_pages.  Leaves without a length axis
+        are taken whole when `with_const`, else None (mid-prompt chunks of
+        a chunked prefill carry no constant-size state)."""
+        leaves, td = jax.tree_util.tree_flatten(state)
+        if td != self.treedef:
+            raise ValueError(
+                f"state tree mismatch for family {self.family!r}: "
+                f"got {td}, spec has {self.treedef}")
+        out = self._extract_prog(hi - lo, with_const)(
+            tuple(leaves), np.int32(row), np.int32(lo))
+        # one batched transfer for all leaves (device_get keeps None
+        # subtrees), not a blocking sync per leaf
+        return jax.device_get(out)
+
+    def write_row_pages(self, state, row: int, lo: int, pages: list):
+        """Write extract_row_pages output into slot `row` of `state`:
+        length-axis leaves at [lo:lo+page_len), constant-size leaves
+        replaced whole.  None pages leave their leaf untouched.  The
+        written bits are exactly the extracted bits, which is what makes
+        a prefix-cache hit reproduce the cold-prefill stream."""
+        leaves, td = jax.tree_util.tree_flatten(state)
+        if td != self.treedef:
+            raise ValueError(
+                f"state tree mismatch for family {self.family!r}: "
+                f"got {td}, spec has {self.treedef}")
+        out = self._write_prog()(tuple(leaves), tuple(pages),
+                                 np.int32(row), np.int32(lo))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
 
 
 def _leaf_axis_diff(base, other, what: str, family: str):

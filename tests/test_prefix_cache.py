@@ -1,0 +1,371 @@
+"""Cross-request prefix caching (launch/prefix_cache.py + engine
+admission): content-addressed pool units (rolling chain keys, LRU +
+pinning, peek), and the engine-level exactness bar -- a prefix-cache HIT
+must reproduce the cold-prefill token stream BITWISE for every family,
+with SILVIA passes on, under injected faults (recovery-as-replay), and
+on a sharded mesh (DESIGN.md sec. 10).
+
+The exactness argument under test: slot KV rows are a pure function of
+the token prefix (per-row dynamic_update_slice + causal masking), so
+pooled pages captured from one request's prefill are bit-identical to
+what any same-prefix request would compute -- sharing is free, not
+approximate."""
+import numpy as np
+import jax
+import pytest
+
+from repro import configs
+from repro.distributed import context as dctx
+from repro.distributed import elastic
+from repro.launch import prefix_cache as pfx
+from repro.launch import resilience as res
+from repro.launch import scheduler
+from repro.launch.engine import ServeEngine
+from repro.launch.mesh import make_mesh
+from repro.models import lm
+
+FAMILY_ARCHS = {"dense": "smollm-135m", "ssm": "mamba2-2.7b",
+                "hybrid": "jamba-v0.1-52b", "encdec": "whisper-small"}
+ENC_LEN = 16
+NDEV = jax.device_count()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Lazy per-family (cfg, params): only the families a test touches
+    pay their init cost."""
+    cache = {}
+
+    def get(fam):
+        if fam not in cache:
+            cfg = configs.get_reduced_config(FAMILY_ARCHS[fam])
+            cache[fam] = (cfg, lm.init_params(jax.random.PRNGKey(0), cfg,
+                                              max_seq=96))
+        return cache[fam]
+    return get
+
+
+def _engine(cfg, params, **kw):
+    if cfg.family == "encdec":
+        kw.setdefault("enc_len", ENC_LEN)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_cache_len", 64)
+    kw.setdefault("segment_len", 4)
+    kw.setdefault("chaos", None)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _zipf_requests(cfg, n=10, seed=0, rate=300.0):
+    """Shared-prefix (zipfian) traffic: chain sharing engages on chunked
+    engines; prompts stay inside the test cache/prompt buckets."""
+    return scheduler.shared_prefix_traffic(
+        seed=seed, n_requests=n, rate=rate, n_prefixes=2, prefix_len=8,
+        tail_lens=(2, 4, 6), gen_lens=(4, 6), vocab=cfg.vocab, zipf_a=1.3)
+
+
+def _repeat_requests(cfg, n_unique=3, repeats=1, stagger=0.05, seed=0):
+    """`n_unique` staggered prompts, each repeated EXACTLY `repeats` more
+    times later in the trace -- the terminal-hit shape every family
+    (including sequential-state ones) can share."""
+    plens = (6, 11, 9, 14)[:n_unique]
+    reqs = []
+    rid = 0
+    for rep in range(repeats + 1):
+        for i, pl in enumerate(plens):
+            prompt = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(seed + 10 * i), (pl,), 0, cfg.vocab))
+            kw = {}
+            if cfg.family == "encdec":
+                rng = np.random.default_rng(seed + i)   # per-prompt, not
+                kw["features"] = rng.standard_normal(   # per-request
+                    (ENC_LEN, cfg.d_model)).astype(np.float32)
+            reqs.append(scheduler.Request(
+                rid=rid, prompt=prompt, max_new_tokens=5,
+                arrival_time=stagger * (rep * n_unique + i), **kw))
+            rid += 1
+    return reqs
+
+
+def _assert_bit_exact(ref, out):
+    assert set(ref) == set(out)
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], out[rid])
+
+
+# ---------------------------------------------------------------------------
+# pool units
+# ---------------------------------------------------------------------------
+
+def test_chain_keys_roll_over_exact_prefix():
+    """Chunk k's key is a function of ALL tokens [0:(k+1)C): same prefix
+    -> same keys; any earlier token change reroutes every later key."""
+    pc = pfx.PrefixCache(8, chunk=4)
+    a = pc.chain_keys(np.arange(10, dtype=np.int32))
+    assert len(a) == 2                      # only fully-real chunks
+    b = pc.chain_keys(np.arange(12, dtype=np.int32))
+    assert a == b[:2] and len(b) == 3       # shared prefix shares keys
+    mutated = np.arange(10, dtype=np.int32)
+    mutated[1] = 99
+    m = pc.chain_keys(mutated)
+    assert m[0] != a[0] and m[1] != a[1]    # divergence cascades
+    # keys are salted: two pools with different salts never share pages
+    other = pfx.PrefixCache(8, chunk=4, salt="other")
+    assert other.chain_keys(np.arange(10, dtype=np.int32))[0] != a[0]
+
+
+def test_chain_disabled_without_chunk_or_const_leaves():
+    assert pfx.PrefixCache(8).chain_ok is False
+    assert pfx.PrefixCache(8).chain_keys(np.arange(8)) == []
+    assert pfx.PrefixCache(8, chunk=4, chain_ok=False).chain_ok is False
+    pc = pfx.PrefixCache(8, chunk=4, chain_ok=False)
+    pc.insert_chain(b"k", [np.zeros(2)])    # silently refused
+    assert pc.info()["pages_resident"] == 0
+
+
+def test_terminal_key_covers_features():
+    """encdec: same prompt + different encoder features must NOT share
+    state (cross-KV depends on the features)."""
+    pc = pfx.PrefixCache(8)
+    prompt = np.arange(6, dtype=np.int32)
+    r1 = scheduler.Request(rid=0, prompt=prompt, max_new_tokens=2,
+                           features=np.ones((4, 8), np.float32))
+    r2 = scheduler.Request(rid=1, prompt=prompt, max_new_tokens=2,
+                           features=np.zeros((4, 8), np.float32))
+    pc.insert_terminal(r1, [np.zeros(2)], tok0=7)
+    assert pc.lookup(r1).terminal is not None
+    assert pc.lookup(r2).terminal is None
+
+
+def test_peek_does_not_mutate():
+    pc = pfx.PrefixCache(8, chunk=4)
+    r = scheduler.Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                          max_new_tokens=2)
+    pc.insert_terminal(r, [np.zeros(2)], tok0=1)
+    before = pc.info()
+    assert pc.peek_cached_tokens(r) == 8
+    after = pc.info()
+    assert (after["hits"], after["misses"]) \
+        == (before["hits"], before["misses"])
+
+
+def test_lru_eviction_skips_pinned():
+    pc = pfx.PrefixCache(2, chunk=4)
+    keys = [bytes([i]) * 4 for i in range(3)]
+    pc.insert_chain(keys[0], [np.zeros(1)])
+    pc.insert_chain(keys[1], [np.zeros(1)])
+    pinned = pc.pin([keys[0]])              # oldest entry is now pinned
+    assert pinned == (keys[0],)
+    pc.insert_chain(keys[2], [np.zeros(1)])
+    info = pc.info()
+    # LRU victim would be keys[0], but it is pinned -> keys[1] evicted
+    assert info["pages_evicted"] == 1
+    assert pc.pin([keys[0]]) == (keys[0],)
+    assert pc.pin([keys[1]]) == ()          # gone
+    # releasing makes it evictable again once over capacity
+    pc.release(pinned)
+    pc.release((keys[0],))
+    pc.insert_chain(bytes([9]) * 4, [np.zeros(1)])
+    assert pc.info()["pages_resident"] <= 2
+
+
+def test_duplicate_insert_is_touch_not_growth():
+    pc = pfx.PrefixCache(4, chunk=4)
+    pc.insert_chain(b"a", [np.zeros(1)])
+    pc.insert_chain(b"a", [np.ones(1)])     # dup: refreshed, not replaced
+    info = pc.info()
+    assert info["insertions"] == 1 and info["pages_resident"] == 1
+
+
+# ---------------------------------------------------------------------------
+# engine: chain sharing on chunked prefill (dense)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("silvia", ["off", "all"])
+def test_chunked_warm_stream_matches_cold(setup, silvia):
+    """The tentpole bar: zipfian shared-prefix traffic through a pooled
+    engine is BIT-IDENTICAL to the cold-cache run -- including with the
+    full SILVIA pass pipeline lowering the serve graphs."""
+    cfg, params = setup("dense")
+    reqs = lambda: _zipf_requests(cfg)  # noqa: E731
+    cold = _engine(cfg, params, prefill_chunk=4, silvia_passes=silvia).run(
+        reqs(), clock=scheduler.FastForwardClock())
+    eng = _engine(cfg, params, prefill_chunk=4, silvia_passes=silvia,
+                  prefix_cache=64)
+    warm = eng.run(reqs(), clock=scheduler.FastForwardClock())
+    _assert_bit_exact(cold, warm)
+    info = eng.cache_info()["prefix_cache"]
+    assert info["chain_ok"] is True
+    assert info["hits"] > 0 and info["tokens_skipped"] > 0
+    assert info["pages_resident"] > 0
+
+
+def test_terminal_repeat_skips_all_prefill_dispatches(setup):
+    """An exact-repeat prompt terminal-hits: its admission runs ZERO
+    chunk/prefill dispatches (pages + first token come from the pool),
+    and the generated stream is identical to the first serving."""
+    cfg, params = setup("dense")
+    eng = _engine(cfg, params, prefill_chunk=4, prefix_cache=64)
+    first = eng.run(_repeat_requests(cfg, n_unique=2),
+                    clock=scheduler.FastForwardClock())
+    chunks_before = eng._site_counts["chunk"]
+    again = [scheduler.Request(rid=100 + r.rid, prompt=r.prompt.copy(),
+                               max_new_tokens=r.max_new_tokens)
+             for r in _repeat_requests(cfg, n_unique=2)]
+    second = eng.run(again, clock=scheduler.FastForwardClock())
+    assert eng._site_counts["chunk"] == chunks_before
+    for r in _repeat_requests(cfg, n_unique=2):
+        np.testing.assert_array_equal(first[r.rid], second[100 + r.rid])
+
+
+# ---------------------------------------------------------------------------
+# engine: terminal sharing, every family (full prefill)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_terminal_repeat_bit_exact_all_families(setup, family):
+    """Sequential-state families (SSM/hybrid/encdec) share at terminal
+    granularity only; the repeated prompts must still stream bitwise
+    what the cold engine streams, and must actually hit."""
+    cfg, params = setup(family)
+    reqs = lambda: _repeat_requests(cfg, repeats=2)  # noqa: E731
+    cold = _engine(cfg, params).run(reqs(),
+                                    clock=scheduler.FastForwardClock())
+    eng = _engine(cfg, params, prefix_cache=64)
+    warm = eng.run(reqs(), clock=scheduler.FastForwardClock())
+    _assert_bit_exact(cold, warm)
+    info = eng.cache_info()["prefix_cache"]
+    assert info["hits"] > 0
+    assert info["chain_ok"] is False        # no chunking -> no chains
+
+
+# ---------------------------------------------------------------------------
+# engine: admission token budget (fairness satellite)
+# ---------------------------------------------------------------------------
+
+def test_admit_token_budget_defers_and_stays_bit_exact(setup):
+    cfg, params = setup("dense")
+    reqs = lambda: _zipf_requests(cfg, n=8, rate=500.0)  # noqa: E731
+    ref = _engine(cfg, params, prefill_chunk=4).run(
+        reqs(), clock=scheduler.FastForwardClock())
+    eng = _engine(cfg, params, prefill_chunk=4, prefix_cache=64,
+                  admit_token_budget=8)
+    out = eng.run(reqs(), clock=scheduler.FastForwardClock())
+    _assert_bit_exact(ref, out)             # deferral reorders nothing
+    adm = eng.cache_info()["admission"]
+    assert adm["token_budget"] == 8 and adm["deferrals"] > 0
+    assert all(r.outcome == res.OK for r in eng.finished)
+
+
+def test_budget_head_request_always_admitted(setup):
+    """A prompt wider than the whole budget must not starve."""
+    cfg, params = setup("dense")
+    r = scheduler.Request(rid=0, prompt=np.arange(20) % cfg.vocab,
+                          max_new_tokens=3)
+    eng = _engine(cfg, params, prefill_chunk=4, admit_token_budget=4)
+    out = eng.run([r], clock=scheduler.FastForwardClock())
+    assert len(out[0]) == 3
+
+
+# ---------------------------------------------------------------------------
+# engine: chaos + recovery through prefix hits
+# ---------------------------------------------------------------------------
+
+def test_chaos_recovery_with_prefix_hits_bit_exact(setup):
+    """Faults on chunk + segment sites while the pool is hot: recovery
+    replays through admission (which may now HIT), and every stream must
+    equal the fault-free cold-cache run."""
+    cfg, params = setup("dense")
+    reqs = lambda: _zipf_requests(cfg)  # noqa: E731
+    ref = _engine(cfg, params, prefill_chunk=4).run(
+        reqs(), clock=scheduler.FastForwardClock())
+    chaos = res.ChaosSchedule(fail_at_sites=("chunk:1", "segment:2"))
+    eng = _engine(cfg, params, prefill_chunk=4, prefix_cache=64,
+                  chaos=chaos)
+    out = eng.run(reqs(), clock=scheduler.FastForwardClock())
+    rb = eng.cache_info()["robustness"]
+    assert rb["faults_injected"] >= 2
+    assert rb["replay_divergence"] == 0
+    _assert_bit_exact(ref, out)
+
+
+def test_chaos_recovery_terminal_path_bit_exact(setup):
+    """Same bar for a sequential-state family on the terminal-only
+    (full-prefill) path."""
+    cfg, params = setup("ssm")
+    reqs = lambda: _repeat_requests(cfg, repeats=2)  # noqa: E731
+    ref = _engine(cfg, params).run(reqs(),
+                                   clock=scheduler.FastForwardClock())
+    chaos = res.ChaosSchedule(fail_at_sites=("prefill:1", "segment:2"))
+    eng = _engine(cfg, params, prefix_cache=64, chaos=chaos)
+    out = eng.run(reqs(), clock=scheduler.FastForwardClock())
+    assert eng.cache_info()["robustness"]["replay_divergence"] == 0
+    _assert_bit_exact(ref, out)
+
+
+# ---------------------------------------------------------------------------
+# engine: mesh + elastic degrade
+# ---------------------------------------------------------------------------
+
+needs_mesh = pytest.mark.skipif(
+    NDEV < 2,
+    reason="needs >1 device (XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+
+
+@needs_mesh
+def test_sharded_warm_stream_matches_single_device_cold(setup):
+    cfg, params = setup("dense")
+    reqs = lambda: _zipf_requests(cfg)  # noqa: E731
+    ref = _engine(cfg, params, prefill_chunk=4).run(
+        reqs(), clock=scheduler.FastForwardClock())
+    mesh = make_mesh((2, 1), ("data", "model"))
+    with dctx.mesh_scope(mesh, ("data",), "model"):
+        eng = _engine(cfg, params, prefill_chunk=4, prefix_cache=64)
+    out = eng.run(reqs(), clock=scheduler.FastForwardClock())
+    _assert_bit_exact(ref, out)
+    info = eng.cache_info()["prefix_cache"]
+    assert info["hits"] > 0
+    assert info["mesh_fingerprint"] is not None
+
+
+@needs_mesh
+def test_degrade_reshards_pooled_pages_bit_exact(setup):
+    """Lose half the mesh mid-run with a hot pool: host-resident pages
+    re-enter device state under the shrunken plan's specs, the pool
+    records the re-mesh, and surviving streams stay bitwise equal to the
+    fault-free single-device run."""
+    cfg, params = setup("dense")
+    reqs = lambda: _zipf_requests(cfg)  # noqa: E731
+    ref = _engine(cfg, params, prefill_chunk=4).run(
+        reqs(), clock=scheduler.FastForwardClock())
+    inj = elastic.DeviceLossInjector.parse("lose@segment:1=1")
+    mesh = make_mesh((2, 1), ("data", "model"))
+    with dctx.mesh_scope(mesh, ("data",), "model"):
+        eng = _engine(cfg, params, prefill_chunk=4, prefix_cache=64,
+                      chaos=inj)
+    out = eng.run(reqs(), clock=scheduler.FastForwardClock())
+    assert eng.cache_info()["robustness"]["degraded"] >= 1
+    info = eng.cache_info()["prefix_cache"]
+    assert info["remeshes"] >= 1            # fingerprint rolled over
+    _assert_bit_exact(ref, out)
+
+
+# ---------------------------------------------------------------------------
+# observability
+# ---------------------------------------------------------------------------
+
+def test_cache_info_reports_pool_and_budget(setup):
+    cfg, params = setup("dense")
+    eng = _engine(cfg, params, prefill_chunk=4, prefix_cache=32,
+                  admit_token_budget=64)
+    info = eng.cache_info()
+    pc = info["prefix_cache"]
+    for k in ("hits", "misses", "hit_rate", "tokens_skipped",
+              "pages_resident", "pages_evicted", "pages_pinned",
+              "max_pages", "remeshes", "mesh_fingerprint"):
+        assert k in pc
+    assert info["admission"] == {"token_budget": 64, "deferrals": 0}
+    # prefix-less engines still report the admission block
+    plain = _engine(cfg, params)
+    assert "prefix_cache" not in plain.cache_info()
+    assert plain.cache_info()["admission"]["token_budget"] is None

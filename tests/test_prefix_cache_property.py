@@ -1,0 +1,120 @@
+"""Property-based prefix-cache testing: for RANDOM shared-prefix traffic
+mixes crossed with RANDOM fault schedules, a pooled (warm) engine's
+streams must be byte-identical to the cold-cache fault-free run's
+(DESIGN.md sec. 10 x sec. 8).
+
+The mix strategy draws, per request, a prefix block, a tail length, and a
+tail seed from a SMALL pool -- so the space contains partial prefix
+overlaps (chain hits on the chunked dense engine), exact duplicates
+(terminal hits, the only sharing a sequential-state family does), and
+all-miss traffic.  The fault schedule can land on chunk sites mid-chunked
+prefill, on the prefill site of the terminal path, and on decode
+segments; recovery re-admits through the (now hot) pool, so replay
+itself exercises hit-path admission."""
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.launch import resilience as res
+from repro.launch import scheduler
+from repro.launch.engine import ServeEngine
+from repro.models import lm
+
+FAMILY_ARCHS = {"dense": "smollm-135m", "ssm": "mamba2-2.7b"}
+N_REQ = 6
+GENS = (5, 4, 6, 3, 5, 4)
+PREFIX_LEN, CHUNK = 8, 4
+
+
+@pytest.fixture(scope="module")
+def setups():
+    out = {}
+    for fam, arch in FAMILY_ARCHS.items():
+        cfg = configs.get_reduced_config(arch)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg, max_seq=80)
+        out[fam] = (cfg, params)
+    return out
+
+
+def _traffic(cfg, mix):
+    """mix: per-request (prefix_id, tail_len, tail_seed) over small pools
+    -- duplicates and partial overlaps arise naturally."""
+    rng = np.random.default_rng(7)
+    prefixes = [rng.integers(0, cfg.vocab, size=PREFIX_LEN, dtype=np.int32)
+                for _ in range(2)]
+    tails = {}
+    reqs = []
+    for i, (pid, tlen, tseed) in enumerate(mix):
+        key = (tlen, tseed)
+        if key not in tails:
+            trng = np.random.default_rng(100 + 10 * tlen + tseed)
+            tails[key] = trng.integers(0, cfg.vocab, size=tlen,
+                                       dtype=np.int32)
+        prompt = np.concatenate([prefixes[pid], tails[key]])
+        reqs.append(scheduler.Request(rid=i, prompt=prompt,
+                                      max_new_tokens=GENS[i],
+                                      arrival_time=0.01 * i))
+    return reqs
+
+
+def _run(cfg, params, mix, *, chaos=None, prefix_cache=None):
+    eng = ServeEngine(
+        params, cfg, n_slots=2, max_cache_len=64, segment_len=4,
+        prefill_chunk=CHUNK if cfg.family == "dense" else None,
+        chaos=chaos, prefix_cache=prefix_cache)
+    out = eng.run(_traffic(cfg, mix), clock=scheduler.FastForwardClock())
+    return eng, out
+
+
+# cold-cache fault-free reference streams per (family, mix): neither the
+# drawn fault schedule nor the pool may change a single byte
+_REF_CACHE: dict = {}
+
+
+def _reference(setups, fam, mix):
+    key = (fam, mix)
+    if key not in _REF_CACHE:
+        cfg, params = setups[fam]
+        _REF_CACHE[key] = _run(cfg, params, mix)[1]
+    return _REF_CACHE[key]
+
+
+_MIXES = st.lists(
+    st.tuples(st.integers(0, 1),        # which shared prefix block
+              st.integers(0, 4),        # tail length (0 = exact prefix)
+              st.integers(0, 2)),       # tail seed (small pool -> dups)
+    min_size=N_REQ, max_size=N_REQ)
+
+_SCHEDULES = st.lists(
+    st.tuples(st.sampled_from(sorted(res.ChaosSchedule.SITE_KINDS)),
+              st.integers(0, 7)),
+    min_size=0, max_size=3, unique=True)
+
+
+@pytest.mark.parametrize("fam", sorted(FAMILY_ARCHS))
+@given(mix=_MIXES, sched=_SCHEDULES)
+@settings(max_examples=6, deadline=None)
+def test_warm_chaos_streams_equal_cold_fault_free(setups, fam, mix, sched):
+    mix = tuple(mix)
+    cfg, params = setups[fam]
+    ref = _reference(setups, fam, mix)
+    chaos = None
+    if sched:
+        chaos = res.ChaosSchedule(
+            fail_at_sites=tuple(f"{k}:{i}" for k, i in sched))
+    eng, out = _run(cfg, params, mix, chaos=chaos, prefix_cache=64)
+
+    rb = eng.cache_info()["robustness"]
+    assert rb["replay_divergence"] == 0
+    info = eng.cache_info()["prefix_cache"]
+    assert info["hits"] + info["misses"] >= N_REQ
+
+    assert set(out) == set(ref) == set(range(N_REQ))
+    for rid in range(N_REQ):
+        np.testing.assert_array_equal(np.asarray(out[rid], np.int64),
+                                      np.asarray(ref[rid], np.int64))
+    assert all(r.outcome == res.OK for r in eng.finished)
