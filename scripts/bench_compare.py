@@ -6,8 +6,9 @@
 For every baseline file `benchmarks/baselines/<name>.json` that has a
 matching `<name>.json` in --results, the comparable metrics are checked:
 
-* serve_throughput_*:  engine.agg_tok_s   (higher is better)
-* pipeline_overhead:   decode.fused_tok_s (higher is better, if present)
+* serve_throughput_*:  engine.agg_tok_s      (higher is better)
+* serve_latency_*:     overlap.stream_tok_s  (higher is better)
+* pipeline_overhead:   decode.fused_tok_s    (higher is better, if present)
 
 The job FAILS (exit 1) when a current metric drops more than
 `--threshold` (default 30%) below its committed baseline -- the AutoDSE
@@ -38,6 +39,12 @@ def _metric(name: str, payload: dict):
     if name.startswith("serve_throughput"):
         try:
             return "engine.agg_tok_s", float(payload["engine"]["agg_tok_s"])
+        except (KeyError, TypeError, ValueError):
+            return None
+    if name.startswith("serve_latency"):
+        try:
+            return ("overlap.stream_tok_s",
+                    float(payload["overlap"]["stream_tok_s"]))
         except (KeyError, TypeError, ValueError):
             return None
     if name.startswith("pipeline_overhead"):

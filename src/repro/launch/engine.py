@@ -114,6 +114,7 @@ from repro.distributed import fault as dfault
 from repro.distributed import sharding as dshard
 from repro.distributed.fault import SimulatedFailure
 from repro.kernels import registry
+from repro.launch import methods as smethods
 from repro.launch import prefix_cache as pfx
 from repro.launch import resilience as res
 from repro.launch import scheduler
@@ -130,6 +131,7 @@ class _EngineBundle:
     segment: object        # jitted segment loop (static n_steps)
     chunk_step: object     # jitted single chunk-decode dispatch
     prefill: object        # jitted bucketed full prefill (static cache_len)
+    embed: object          # jitted pooled-embedding dispatch (no cache out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,14 +246,42 @@ def _build_bundle(cfg, silvia_passes: str, census: dict,
                                                    None, length=n_steps)
         return seq[:, :, 0], tok, cache, pos, bad
 
-    def prefill_fn(params, prompts, last_positions, cache_len):
-        # prompts: [B,S] tokens, or (features, [B,S]) for encdec
-        logits, cache = lm.prefill(params, prompts, cfg, cache_len=cache_len,
-                                   last_positions=last_positions)
+    def prefill_fn(params, prompts, last_positions, cache_len, enc_pad):
+        # prompts: [B,S] tokens, or (features, [B,S], enc_lens) for encdec
+        # (ragged encoder lengths; enc_pad is the static cross-page width
+        # every enc bucket pads up to -- zero-extension is exact, see
+        # models/attention.py).  `last` -- each row's final logits row --
+        # rides along so score admissions get their first logprob from
+        # the SAME dispatch that sampled tok0.
+        if isinstance(prompts, tuple) and len(prompts) == 3:
+            audio, dec, enc_lens = prompts
+            logits, cache = lm.prefill(params, (audio, dec), cfg,
+                                       cache_len=cache_len,
+                                       last_positions=last_positions,
+                                       enc_lengths=enc_lens,
+                                       enc_pad=enc_pad)
+        else:
+            logits, cache = lm.prefill(params, prompts, cfg,
+                                       cache_len=cache_len,
+                                       last_positions=last_positions)
         last = logits[:, -1, :]
         tok0 = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
         bad0 = ~jnp.all(jnp.isfinite(last), axis=-1)
-        return tok0, cache, bad0
+        return tok0, last, cache, bad0
+
+    def embed_fn(params, prompts, last_positions):
+        # pooled final-hidden-state embedding (lm.embed_pool): one
+        # prefill-shaped dispatch, caches never materialize (DCE'd)
+        if isinstance(prompts, tuple) and len(prompts) == 3:
+            audio, dec, enc_lens = prompts
+            emb = lm.embed_pool(params, (audio, dec), cfg,
+                                last_positions=last_positions,
+                                enc_lengths=enc_lens)
+        else:
+            emb = lm.embed_pool(params, prompts, cfg,
+                                last_positions=last_positions)
+        bad = ~jnp.all(jnp.isfinite(emb), axis=-1)
+        return emb, bad
 
     if plan is None:
         @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(2,))
@@ -259,17 +289,20 @@ def _build_bundle(cfg, silvia_passes: str, census: dict,
             return decode_scan(params, tok, cache, pos, active, n_steps)
 
         chunk_step = jax.jit(decode_fn, donate_argnums=(2,))
-        prefill = functools.partial(jax.jit, static_argnums=(3,))(prefill_fn)
+        prefill = functools.partial(jax.jit,
+                                    static_argnums=(3, 4))(prefill_fn)
+        embed = jax.jit(embed_fn)
     else:
-        segment, chunk_step, prefill = _shard_bundle_fns(
-            plan, decode_scan, decode_fn, prefill_fn)
+        segment, chunk_step, prefill, embed = _shard_bundle_fns(
+            plan, decode_scan, decode_fn, prefill_fn, embed_fn)
 
     pin = lambda fn: serve._pin_lowerings(fn, census)
     return _EngineBundle(pin(decode_fn), pin(segment), pin(chunk_step),
-                         pin(prefill))
+                         pin(prefill), pin(embed))
 
 
-def _shard_bundle_fns(plan: _MeshPlan, decode_scan, decode_fn, prefill_fn):
+def _shard_bundle_fns(plan: _MeshPlan, decode_scan, decode_fn, prefill_fn,
+                      embed_fn):
     """shard_map'd segment / chunk-step / prefill over plan.mesh.
 
     Inside each body the single-device functions run UNMODIFIED on this
@@ -323,8 +356,8 @@ def _shard_bundle_fns(plan: _MeshPlan, decode_scan, decode_fn, prefill_fn):
                        check_rep=False)
         return fn(params, tok, cache, pos, active)
 
-    @functools.partial(jax.jit, static_argnums=(3,))
-    def prefill(params, prompts, last_positions, cache_len):
+    @functools.partial(jax.jit, static_argnums=(3, 4))
+    def prefill(params, prompts, last_positions, cache_len, enc_pad):
         pspecs = pspecs_for(params)
         prspecs = jax.tree_util.tree_map(lambda _: P(dp), prompts)
 
@@ -332,15 +365,31 @@ def _shard_bundle_fns(plan: _MeshPlan, decode_scan, decode_fn, prefill_fn):
             with tp_ctx():
                 params = dshard.gather_sharded(params, pspecs)
                 return prefill_fn(params, prompts, last_positions,
-                                  cache_len)
+                                  cache_len, enc_pad)
 
         fn = shard_map(body, mesh=mesh,
                        in_specs=(pspecs, prspecs, P(dp)),
-                       out_specs=(P(dp), sspecs, P(dp)),
+                       out_specs=(P(dp), P(dp), sspecs, P(dp)),
                        check_rep=False)
         return fn(params, prompts, last_positions)
 
-    return segment, chunk_step, prefill
+    @jax.jit
+    def embed(params, prompts, last_positions):
+        pspecs = pspecs_for(params)
+        prspecs = jax.tree_util.tree_map(lambda _: P(dp), prompts)
+
+        def body(params, prompts, last_positions):
+            with tp_ctx():
+                params = dshard.gather_sharded(params, pspecs)
+                return embed_fn(params, prompts, last_positions)
+
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(pspecs, prspecs, P(dp)),
+                       out_specs=(P(dp), P(dp)),
+                       check_rep=False)
+        return fn(params, prompts, last_positions)
+
+    return segment, chunk_step, prefill, embed
 
 
 def _engine_bundle(cfg, silvia_passes: str, census: dict,
@@ -353,6 +402,20 @@ def _engine_bundle(cfg, silvia_passes: str, census: dict,
         (cfg, silvia_passes, tuple(sorted(census.items())), "engine",
          None if plan is None else plan.key),
         lambda: _build_bundle(cfg, silvia_passes, census, plan))
+
+
+@dataclasses.dataclass
+class _PendingSegment:
+    """A dispatched-but-not-harvested decode segment (step_begin /
+    step_finish).  The fields are DEVICE arrays still being computed --
+    JAX's async dispatch returns futures -- which is what lets the host
+    run admission planning and stream publishing while the device works
+    (the double-buffered serve loop, launch/frontend.py)."""
+    bb: int
+    seq: object     # [n_steps, bb] token block
+    tok: object     # [bb, 1] final tokens
+    pos: object     # [bb] final positions
+    bad: object     # [bb] non-finite quarantine flags
 
 
 class ServeEngine:
@@ -475,6 +538,14 @@ class ServeEngine:
         self.len_buckets = scheduler.bucket_set(self.min_len_bucket,
                                                 max_cache_len) \
             if self._spec.has_length_axis else ()
+        # encdec: encoder-length buckets for RAGGED features.  The encoder
+        # runs at the request's bucket width; the cross-KV page is padded
+        # to the full enc_len (slot pages have ONE constant shape) and the
+        # padding is masked to exact softmax zeros -- so a short request
+        # is bit-identical to itself zero-padded to enc_len
+        # (models/attention.py zero-extension invariant).
+        self.enc_buckets = scheduler.bucket_set(min(8, enc_len), enc_len) \
+            if enc_len is not None else ()
 
         # pin the lowering census at construction: the bundle (and every
         # graph compiled from it) is traced under THIS resolution, even if
@@ -509,16 +580,25 @@ class ServeEngine:
         self._res = resilience if resilience is not None \
             else res.ResilienceConfig()
         self._chaos = res.chaos_from_env() if chaos == "env" else chaos
-        self._site_counts = {"segment": 0, "prefill": 0, "chunk": 0}
+        self._site_counts = {"segment": 0, "prefill": 0, "chunk": 0,
+                             "embed": 0}
         self._replay: List[List[int]] = [[] for _ in range(n_slots)]
+        # score: remaining teacher-forced completion tokens per slot --
+        # drained through the SAME single-token chunk path as recovery
+        # replay (_drain_replay), logprobs harvested host-side
+        self._score: List[List[int]] = [[] for _ in range(n_slots)]
         self._admitting: List[scheduler.Request] = []
         self._rids: set = set()
         self._results: Dict[int, res.RequestResult] = {}
+        # per-method admission bucket accounting (launch/methods.py)
+        self._method_admits: Dict[str, int] = {m: 0
+                                               for m in smethods.METHODS}
         self._robust: Dict[str, int] = {k: 0 for k in (
             "shed", "expired_queued", "expired_inflight", "failed",
             "quarantined", "faults_injected", "errors", "recoveries",
             "replayed_tokens", "replay_divergence", "duplicate_rejects",
-            "snapshots", "restores", "drains", "degraded")}
+            "snapshots", "restores", "drains", "degraded",
+            "cancelled_queued", "cancelled_inflight")}
         # -- cross-request prefix cache (launch/prefix_cache.py) --
         self._prefix: Optional[pfx.PrefixCache] = None
         if prefix_cache is not None:
@@ -555,19 +635,20 @@ class ServeEngine:
                 f"duplicate request id {req.rid}: this engine already "
                 f"tracks that rid (rids key structured results and "
                 f"recovery requeues)")
-        if req.total_len > self.max_cache_len:
+        if req.served_len > self.max_cache_len:
             raise ValueError(
-                f"request {req.rid}: prompt+gen {req.total_len} exceeds "
+                f"request {req.rid}: prompt+gen {req.served_len} exceeds "
                 f"max_cache_len {self.max_cache_len}")
         if self.cfg.family == "encdec":
-            want = (self.enc_len, self.cfg.d_model)
-            if req.features is None or \
-                    np.asarray(req.features).shape != want:
-                got = None if req.features is None \
-                    else np.asarray(req.features).shape
+            shape = None if req.features is None \
+                else np.asarray(req.features).shape
+            if shape is None or len(shape) != 2 \
+                    or shape[1] != self.cfg.d_model \
+                    or not 1 <= shape[0] <= self.enc_len:
                 raise ValueError(
                     f"request {req.rid}: encdec serving needs features of "
-                    f"shape {want}, got {got}")
+                    f"shape [1..enc_len={self.enc_len}, "
+                    f"{self.cfg.d_model}], got {shape}")
         elif req.features is not None:
             raise ValueError(f"request {req.rid}: features are encdec-only "
                              f"(family {self.cfg.family!r})")
@@ -603,7 +684,10 @@ class ServeEngine:
         self.finished.append(req)
         self._results[req.rid] = res.RequestResult(
             rid=req.rid, outcome=outcome, tokens=list(req.tokens),
-            error=error, retries=req.retries)
+            error=error, retries=req.retries,
+            logprobs=list(req.logprobs) if req.logprobs else None,
+            embedding=None if req.embedding is None
+            else np.asarray(req.embedding, np.float32))
 
     def _evict(self, slot: int) -> None:
         """Free a page: no scrubbing needed (see module docstring)."""
@@ -613,6 +697,7 @@ class ServeEngine:
         self._pos[slot] = 0
         self._tok[slot] = 0
         self._replay[slot] = []
+        self._score[slot] = []
         if self._prefix is not None and self._slot_pins[slot]:
             self._prefix.release(self._slot_pins[slot])
         self._slot_pins[slot] = ()
@@ -648,6 +733,7 @@ class ServeEngine:
         self._remaining = self._remaining[perm]
         self._slot_req = [self._slot_req[i] for i in perm]
         self._replay = [self._replay[i] for i in perm]
+        self._score = [self._score[i] for i in perm]
         self._slot_pins = [self._slot_pins[i] for i in perm]
         self.compactions += 1
         return True
@@ -655,31 +741,95 @@ class ServeEngine:
     def _admit(self, now: float, clock: scheduler.Clock,
                resume_only: bool = False) -> int:
         self._compact()
+        # resume_only (drain): only requests a fault recovery requeued --
+        # carrying emitted tokens (generate) or a retry count (score/embed
+        # leave no token trail) -- are taken; fresh requests keep their
+        # queue position
+        pred = (lambda r: bool(r.tokens) or r.retries > 0) \
+            if resume_only else None
+        # embed admission runs FIRST and separately: an embed request is
+        # one prefill-shaped dispatch with no decode slot, so embeds admit
+        # even when every slot is busy and never count against the slot
+        # path's free-list or token budget (its own admission bucket
+        # accounting, cache_info()["methods"])
+        embeds = self._queue.pop_ready(
+            now, limit=self.n_slots,
+            predicate=lambda r: r.method == "embed"
+            and (pred is None or pred(r)))
+        n_embed = self._admit_embed(embeds, clock) if embeds else 0
         free = [i for i in range(self.n_slots) if not self._active[i]]
-        # resume_only (drain): only requests already carrying emitted
-        # tokens -- i.e. requeued by fault recovery -- are taken; fresh
-        # requests keep their queue position
-        pred = (lambda r: bool(r.tokens)) if resume_only else None
-        ready = self._queue.pop_ready(now, limit=len(free), predicate=pred)
+        ready = self._queue.pop_ready(
+            now, limit=len(free),
+            predicate=lambda r: r.method != "embed"
+            and (pred is None or pred(r)))
         if ready and self._admit_budget is not None:
             ready = self._defer_over_budget(ready)
         if not ready:
-            return 0
+            return n_embed
         # popped but not yet registered in a slot: a fault mid-admission
         # leaves the leftovers here for _recover to requeue
         self._admitting = list(ready)
-        # group by prompt-length bucket so one compiled prefill graph per
-        # (batch bucket, prompt bucket) covers the mix
-        groups: Dict[int, List[scheduler.Request]] = {}
+        # group by (prompt bucket, enc bucket) so one compiled prefill
+        # graph per (batch bucket, prompt bucket[, enc bucket]) covers
+        # the mix
+        groups: Dict[tuple, List[scheduler.Request]] = {}
         for r in ready:
             sb = scheduler.bucket_pow2(r.prompt_len,
                                        minimum=self.min_prompt_bucket,
                                        maximum=self.max_cache_len)
-            groups.setdefault(sb, []).append(r)
-        for sb, group in sorted(groups.items()):
-            self._admit_group(group, sb, free, clock)
+            groups.setdefault((sb, self._enc_bucket(r)), []).append(r)
+        for (sb, eb), group in sorted(
+                groups.items(), key=lambda kv: (kv[0][0], kv[0][1] or 0)):
+            self._admit_group(group, sb, eb, free, clock)
         self._admitting = []
-        return len(ready)
+        return len(ready) + n_embed
+
+    def _enc_bucket(self, r: scheduler.Request) -> Optional[int]:
+        if self.cfg.family != "encdec":
+            return None
+        return scheduler.bucket_pow2(int(np.asarray(r.features).shape[0]),
+                                     minimum=self.enc_buckets[0],
+                                     maximum=self.enc_len)
+
+    def _admit_embed(self, group: List[scheduler.Request],
+                     clock: scheduler.Clock) -> int:
+        """Serve embed requests: per (prompt bucket, enc bucket) group,
+        one pooled-embedding dispatch (lm.embed_pool through the bundle)
+        whose result finishes each request immediately -- no slot state is
+        touched, so embeds coexist with a full decode batch."""
+        self._admitting = list(group)
+        groups: Dict[tuple, List[scheduler.Request]] = {}
+        for r in group:
+            sb = scheduler.bucket_pow2(r.prompt_len,
+                                       minimum=self.min_prompt_bucket,
+                                       maximum=self.max_cache_len)
+            groups.setdefault((sb, self._enc_bucket(r)), []).append(r)
+        for (sb, eb), g in sorted(
+                groups.items(), key=lambda kv: (kv[0][0], kv[0][1] or 0)):
+            bb = scheduler.bucket_pow2(len(g), minimum=self._adm_floor,
+                                       maximum=self.n_slots)
+            inputs, lens = self._prefill_inputs(g, bb, sb, eb)
+            self._graphs.add(("embed", bb, sb)
+                             + (() if eb is None else (eb,)))
+            emb, bad = self._guarded("embed", self._bundle.embed,
+                                     self.params, inputs,
+                                     jnp.asarray(lens - 1))
+            emb = np.asarray(emb)
+            bad = np.asarray(bad)
+            now = clock.now()
+            for i, r in enumerate(g):
+                self._admitting = [x for x in self._admitting if x is not r]
+                self._method_admits["embed"] += 1
+                if bad[i]:
+                    self._robust["quarantined"] += 1
+                    self._finish(r, now, res.FAILED,
+                                 "non-finite pooled embedding")
+                    continue
+                r.embedding = np.asarray(emb[i], np.float32)
+                r.first_token_time = now
+                self._finish(r, now)
+        self._admitting = []
+        return len(group)
 
     def _defer_over_budget(
             self, ready: List[scheduler.Request]) -> List[scheduler.Request]:
@@ -716,7 +866,7 @@ class ServeEngine:
                                      maximum=self.max_cache_len)
 
     def _prefill_inputs(self, group: List[scheduler.Request], bb: int,
-                        sb: int):
+                        sb: int, eb: Optional[int] = None):
         prompts = np.zeros((bb, sb), np.int32)
         lens = np.ones((bb,), np.int32)
         for i, r in enumerate(group):
@@ -724,28 +874,37 @@ class ServeEngine:
             lens[i] = r.prompt_len
         if self.cfg.family != "encdec":
             return jnp.asarray(prompts), lens
-        feats = np.zeros((bb, self.enc_len, self.cfg.d_model), np.float32)
+        # ragged features, right-padded to the group's enc bucket; the
+        # real frame counts ride along and mask the padding to exact
+        # zeros inside the encoder and the cross-attention
+        eb = eb or self.enc_len
+        feats = np.zeros((bb, eb, self.cfg.d_model), np.float32)
+        enc_lens = np.ones((bb,), np.int32)
         for i, r in enumerate(group):
-            feats[i] = np.asarray(r.features, np.float32)
+            f = np.asarray(r.features, np.float32)
+            feats[i, :f.shape[0]] = f
+            enc_lens[i] = f.shape[0]
         audio = jnp.asarray(feats).astype(jnp.dtype(self.cfg.dtype))
-        return (audio, jnp.asarray(prompts)), lens
+        return (audio, jnp.asarray(prompts), jnp.asarray(enc_lens)), lens
 
     def _admit_group(self, group: List[scheduler.Request], sb: int,
-                     free: List[int], clock: scheduler.Clock) -> None:
+                     eb: Optional[int], free: List[int],
+                     clock: scheduler.Clock) -> None:
         g = len(group)
         t_pre = self._prefill_bucket(sb)
         if self._prefix is None:
             bb = scheduler.bucket_pow2(g, minimum=self._adm_floor,
                                        maximum=self.n_slots)
-            inputs, lens = self._prefill_inputs(group, bb, sb)
+            inputs, lens = self._prefill_inputs(group, bb, sb, eb)
             if self.prefill_chunk is None:
-                self._graphs.add(("prefill", bb, sb, t_pre))
-                tok0, rows, bad0 = self._guarded(
+                self._graphs.add(("prefill", bb, sb, t_pre)
+                                 + (() if eb is None else (eb,)))
+                tok0, last, rows, bad0 = self._guarded(
                     "prefill", self._bundle.prefill, self.params, inputs,
-                    jnp.asarray(lens - 1), t_pre)
+                    jnp.asarray(lens - 1), t_pre, self.enc_len)
             else:
-                tok0, rows, bad0 = self._chunked_prefill(np.asarray(inputs),
-                                                         lens, t_pre)
+                tok0, last, rows, bad0 = self._chunked_prefill(
+                    np.asarray(inputs), lens, t_pre)
             tok0 = np.asarray(tok0)
             bad0 = np.asarray(bad0)
             slots = np.asarray([free.pop(0) for _ in range(g)], np.int32)
@@ -755,28 +914,33 @@ class ServeEngine:
                                            t_pre=t_pre)
             pins: List[tuple] = [()] * g
         elif self.prefill_chunk is not None:
-            tok0, bad0, slots, pins = self._prefix_admit_chunked(
+            tok0, bad0, slots, pins, last = self._prefix_admit_chunked(
                 group, sb, t_pre, free)
         else:
-            tok0, bad0, slots, pins = self._prefix_admit_full(
-                group, sb, t_pre, free)
+            tok0, bad0, slots, pins, last = self._prefix_admit_full(
+                group, sb, eb, t_pre, free)
         # registration time is read AFTER the admitting dispatch, so a
         # request's TTFT (first_token_time - arrival) includes its own
         # prefill cost -- the time a prefix hit actually saves
         self._register_admitted(group, tok0, bad0, slots, pins, free,
-                                clock.now())
+                                clock.now(), last=last)
 
     def _register_admitted(self, group: List[scheduler.Request],
                            tok0: np.ndarray, bad0: np.ndarray,
                            slots: np.ndarray, pins: List[tuple],
-                           free: List[int], now: float) -> None:
+                           free: List[int], now: float,
+                           last=None) -> None:
         """Per-request bookkeeping once a group's pages are in their
         slots -- the shared tail of the cold and prefix-cache admission
         paths: quarantine, recovery-replay scheduling, fresh-stream
-        start."""
+        start.  `last` gives each row's final prefill logits (an array or
+        an {index: row} dict); score admissions read their first logprob
+        from it (score rows never take the terminal-hit shortcut, so the
+        row is always present for them)."""
         for i, r in enumerate(group):
             slot = int(slots[i])
             self._admitting = [x for x in self._admitting if x is not r]
+            self._method_admits[r.method] += 1
             if bad0[i]:
                 # quarantine at prefill: structured FAILED outcome, and
                 # the slot's freshly-scattered pages are scrubbed -- the
@@ -795,6 +959,30 @@ class ServeEngine:
             # pins transfer to the slot BEFORE any eviction path below,
             # so _evict is the single release point for owned pins
             self._slot_pins[slot] = tuple(pins[i])
+            if r.method == "score":
+                # teacher-forced scoring: the prefill's last logits row is
+                # the distribution completion[0] is scored under; the rest
+                # of the completion drains through the replay chunk path.
+                # A recovery re-admission recomputes bitwise-identical
+                # rows, so resetting logprobs repeats the lost floats.
+                comp = list(r.score_tokens)
+                row = np.asarray(last[i], np.float32)
+                r.logprobs = [smethods.logprob_from_logits(row, comp[0])]
+                if r.first_token_time is None:
+                    r.first_token_time = now
+                if len(comp) == 1:
+                    self._finish(r, now)
+                    self._evict(slot)
+                    free.append(slot)
+                    free.sort()
+                    continue
+                self._slot_req[slot] = r
+                self._active[slot] = True
+                self._pos[slot] = r.prompt_len
+                self._tok[slot] = comp[0]
+                self._remaining[slot] = 0
+                self._score[slot] = [int(t) for t in comp[1:]]
+                continue
             if r.tokens:
                 # recovery-as-replay: this request was requeued by
                 # _recover with its already-emitted tokens.  The prefill
@@ -860,7 +1048,8 @@ class ServeEngine:
                                                  self._plan.mesh))
 
     def _prefix_admit_full(self, group: List[scheduler.Request], sb: int,
-                           t_pre: int, free: List[int]):
+                           eb: Optional[int], t_pre: int,
+                           free: List[int]):
         """Prefix-cache admission for full-prefill engines (every family,
         including sequential-state ones): an exact-repeat (terminal) hit
         copies its pooled pages -- KV rows plus constant-size state
@@ -874,11 +1063,16 @@ class ServeEngine:
         tok0 = np.zeros((g, 1), np.int32)
         bad0 = np.zeros((g,), bool)
         pins: List[tuple] = [()] * g
+        last: Dict[int, np.ndarray] = {}
         miss_idx: List[int] = []
         wrote = False
         for i, r in enumerate(group):
-            hit = self._prefix.lookup(r)
-            if hit.terminal is None:
+            # score requests need the final LOGITS row, which pooled pages
+            # don't carry -- they always take the prefill path (and still
+            # donate their pages for later generate hits); skipping lookup
+            # keeps their traffic out of the hit/miss stats and LRU order
+            hit = self._prefix.lookup(r) if r.method != "score" else None
+            if hit is None or hit.terminal is None:
                 miss_idx.append(i)
                 continue
             ent = hit.terminal
@@ -892,19 +1086,24 @@ class ServeEngine:
             sub = [group[i] for i in miss_idx]
             bb = scheduler.bucket_pow2(len(sub), minimum=self._adm_floor,
                                        maximum=self.n_slots)
-            inputs, lens = self._prefill_inputs(sub, bb, sb)
-            self._graphs.add(("prefill", bb, sb, t_pre))
-            stok0, rows, sbad0 = self._guarded(
+            inputs, lens = self._prefill_inputs(sub, bb, sb, eb)
+            self._graphs.add(("prefill", bb, sb, t_pre)
+                             + (() if eb is None else (eb,)))
+            stok0, slast, rows, sbad0 = self._guarded(
                 "prefill", self._bundle.prefill, self.params, inputs,
-                jnp.asarray(lens - 1), t_pre)
+                jnp.asarray(lens - 1), t_pre, self.enc_len)
             stok0 = np.asarray(stok0)
             sbad0 = np.asarray(sbad0)
+            need_last = any(group[i].method == "score" for i in miss_idx)
+            slast_np = np.asarray(slast) if need_last else None
             sub_slots = slots[np.asarray(miss_idx, np.int64)]
             self._cache = self._spec.admit(self._cache, rows, sub_slots,
                                            len(sub), t_pre=t_pre)
             for j, i in enumerate(miss_idx):
                 tok0[i, 0] = stok0[j, 0]
                 bad0[i] = sbad0[j]
+                if slast_np is not None:
+                    last[i] = slast_np[j]
                 if not sbad0[j]:
                     r = group[i]
                     self._prefix.insert_terminal(
@@ -913,7 +1112,7 @@ class ServeEngine:
                         int(stok0[j, 0]))
         if wrote:
             self._reshard_state()
-        return tok0, bad0, slots, pins
+        return tok0, bad0, slots, pins, last
 
     def _prefix_admit_chunked(self, group: List[scheduler.Request],
                               sb: int, t_pre: int, free: List[int]):
@@ -944,6 +1143,12 @@ class ServeEngine:
         n_chain = [0] * g
         pin_keys: List[List[bytes]] = [[] for _ in range(g)]
         for i, r in enumerate(group):
+            if r.method == "score":
+                # score needs the final logits row: run every chunk cold
+                # (resume stays 0; pages still donate back to the pool)
+                # without touching the pool's stats or LRU order
+                resume[i] = 0
+                continue
             hit = self._prefix.lookup(r)
             if hit.terminal is not None:
                 cache = self._spec.write_row_pages(cache, i, 0,
@@ -1009,7 +1214,7 @@ class ServeEngine:
             full = self._spec.extract_row_pages(cache, i, 0, r.prompt_len)
             n_full = r.prompt_len // c
             if self._prefix.chain_ok and n_full > n_chain[i]:
-                keys = self._prefix.chain_keys(r.prompt)
+                keys = self._prefix.chain_keys(r.prompt, req=r)
                 for k in range(n_chain[i], n_full):
                     self._prefix.insert_chain(
                         keys[k], self._chunk_pages(full, k, c))
@@ -1019,7 +1224,7 @@ class ServeEngine:
         self._cache = self._spec.admit(self._cache, cache, slots, g,
                                        t_pre=t_pre)
         self._reshard_state()
-        return tok0, bad0, slots, pins
+        return tok0, bad0, slots, pins, last
 
     def _chunked_prefill(self, prompts: np.ndarray, lens: np.ndarray,
                          t_pre: int):
@@ -1051,7 +1256,7 @@ class ServeEngine:
         stack = jnp.stack(last)
         tok0 = jnp.argmax(stack, axis=-1)
         bad0 = ~jnp.all(jnp.isfinite(stack), axis=-1)
-        return tok0.astype(jnp.int32)[:, None], cache, bad0
+        return tok0.astype(jnp.int32)[:, None], stack, cache, bad0
 
     # -- decode segments ----------------------------------------------------
 
@@ -1070,10 +1275,11 @@ class ServeEngine:
                                     maximum=self.max_cache_len)
         return bb, t_b
 
-    def _segment(self):
-        """Run one fused decode segment over the bucketed active prefix;
-        returns the [n_steps, bb] token block and the [bb] non-finite
-        quarantine flags."""
+    def _begin_segment(self) -> "_PendingSegment":
+        """DISPATCH one fused decode segment over the bucketed active
+        prefix and return immediately -- the outputs stay device arrays
+        (JAX async dispatch), so the host is free to do other work while
+        the device crunches.  `_finish_segment` is the blocking sync."""
         bb, t_b = self._segment_shape()
         n_steps = self.segment_len
         self._graphs.add(("segment", bb, t_b, n_steps))
@@ -1091,10 +1297,20 @@ class ServeEngine:
         else:
             self._cache = self._spec.merge_live(self._cache, cache_out,
                                                 bb, t_b)
-        self._tok[:bb] = np.asarray(tok)
-        self._pos[:bb] = np.asarray(pos)
         self.occupancy.append(float(np.sum(self._active)) / self.n_slots)
-        return np.asarray(seq), np.asarray(bad)
+        return _PendingSegment(bb=bb, seq=seq, tok=tok, pos=pos, bad=bad)
+
+    def _finish_segment(self, p: "_PendingSegment",
+                        clock: scheduler.Clock) -> None:
+        """Block on a dispatched segment's outputs and harvest.  An
+        eviction between begin and finish (cancel/expire) is safe: the
+        tok/pos writeback lands stale values on the freed slot, but an
+        inactive slot's tok/pos are dead state -- admission overwrites
+        them before the slot decodes again, and _harvest skips slots
+        whose request is gone."""
+        self._tok[:p.bb] = np.asarray(p.tok)
+        self._pos[:p.bb] = np.asarray(p.pos)
+        self._harvest(np.asarray(p.seq), np.asarray(p.bad), clock.now())
 
     def _harvest(self, seq: np.ndarray, bad: np.ndarray,
                  now: float) -> None:
@@ -1190,8 +1406,14 @@ class ServeEngine:
         repeats the fault-free step's ops bitwise.  Each replayed token is
         verified against the recorded stream (`replay_divergence` --
         determinism doubling as the recovery proof obligation, DESIGN.md
-        sec. 8)."""
-        while any(self._replay):
+        sec. 8).
+
+        Score requests drain through the SAME dispatches: teacher-forcing
+        a fixed completion is exactly replay with the expected token
+        supplied by the caller instead of the recorded stream, plus a
+        host logprob harvested from each step's logits row
+        (methods.logprob_from_logits)."""
+        while any(self._replay) or any(self._score):
             self._replay_step(clock.now())
 
     def _replay_step(self, now: float) -> None:
@@ -1205,10 +1427,13 @@ class ServeEngine:
                                         minimum=self.min_len_bucket,
                                         maximum=self.max_cache_len)
         self._graphs.add(("chunk", bb, 1, t_b))
-        # only slots mid-replay are active in this dispatch: co-resident
-        # caught-up requests neither advance nor perturb (masking + batch
-        # composition invariants, module docstring)
-        replaying = np.asarray([bool(self._replay[s]) for s in range(bb)])
+        # only slots mid-replay (or mid-score) are active in this
+        # dispatch: co-resident caught-up requests neither advance nor
+        # perturb (masking + batch composition invariants, module
+        # docstring)
+        replaying = np.asarray([bool(self._replay[s])
+                                or bool(self._score[s])
+                                for s in range(bb)])
         fast = bb == self.n_slots and (t_b is None
                                        or t_b == self.max_cache_len)
         cache_in = self._cache if fast else \
@@ -1225,11 +1450,12 @@ class ServeEngine:
         last = logits[:, -1, :]
         nxt = np.asarray(jnp.argmax(last, axis=-1))
         bad = np.asarray(~jnp.all(jnp.isfinite(last), axis=-1))
+        # full rows only transfer when a score slot needs its logprob
+        last_np = np.asarray(last) \
+            if any(self._score[s] for s in range(bb)) else None
         for slot in range(bb):
             if not replaying[slot]:
                 continue
-            expect = self._replay[slot].pop(0)
-            self._robust["replayed_tokens"] += 1
             if bad[slot]:
                 self._robust["quarantined"] += 1
                 self._finish(self._slot_req[slot], now, res.FAILED,
@@ -1237,6 +1463,19 @@ class ServeEngine:
                 self._evict(slot)
                 self._scrub(slot)
                 continue
+            if self._score[slot]:
+                req = self._slot_req[slot]
+                tok = self._score[slot].pop(0)
+                req.logprobs.append(
+                    smethods.logprob_from_logits(last_np[slot], tok))
+                self._tok[slot] = tok      # teacher forcing
+                self._pos[slot] += 1
+                if not self._score[slot]:
+                    self._finish(req, now)
+                    self._evict(slot)
+                continue
+            expect = self._replay[slot].pop(0)
+            self._robust["replayed_tokens"] += 1
             # host argmax over identical logits bits == the in-scan
             # argmax (comparison-based, no float accumulation)
             if int(nxt[slot]) != expect:
@@ -1333,6 +1572,7 @@ class ServeEngine:
         self._remaining[:] = 0
         self._slot_req = [None] * self.n_slots
         self._replay = [[] for _ in range(self.n_slots)]
+        self._score = [[] for _ in range(self.n_slots)]
         if self._prefix is not None:
             for pk in self._slot_pins:
                 if pk:
@@ -1346,32 +1586,96 @@ class ServeEngine:
         False when there was nothing to do (caller should wait for the next
         arrival).  Dispatch failures -- injected or real -- never escape:
         `_recover` requeues the in-flight work and subsequent steps replay
-        it bit-exactly."""
+        it bit-exactly.  Equivalent to step_begin + an immediate
+        step_finish (same dispatch order, same bits)."""
         clock = clock or scheduler.Clock()
         try:
-            return self._step_inner(clock)
+            pending, progressed = self._step_begin_inner(clock)
+            if pending is None:
+                return progressed
+            self._finish_segment(pending, clock)
+            return True
         except Exception as e:  # noqa: BLE001 -- the serve loop survives
             self._recover(e, clock.now())
             return True
 
-    def _step_inner(self, clock: scheduler.Clock,
-                    resume_only: bool = False) -> bool:
+    def step_begin(self, clock: Optional[scheduler.Clock] = None):
+        """First half of step(): expire/admit/replay, then DISPATCH one
+        decode segment WITHOUT syncing on it.  Returns (pending,
+        progressed); pending is None when no segment ran.  While the
+        segment is in flight, the host may submit(), cancel(), publish
+        already-harvested tokens and run admission_plan() -- the
+        double-buffered serve pipeline (launch/frontend.py) -- then MUST
+        call step_finish(pending).  Failures surfacing at dispatch
+        recover here (returning (None, True)); failures surfacing at the
+        blocking sync recover in step_finish."""
+        clock = clock or scheduler.Clock()
+        try:
+            return self._step_begin_inner(clock)
+        except Exception as e:  # noqa: BLE001
+            self._recover(e, clock.now())
+            return None, True
+
+    def step_finish(self, pending,
+                    clock: Optional[scheduler.Clock] = None) -> bool:
+        """Second half of step(): block on the dispatched segment and
+        harvest its tokens."""
+        clock = clock or scheduler.Clock()
+        try:
+            self._finish_segment(pending, clock)
+        except Exception as e:  # noqa: BLE001
+            self._recover(e, clock.now())
+        return True
+
+    def _step_begin_inner(self, clock: scheduler.Clock,
+                          resume_only: bool = False):
         now = clock.now()
         expired = self._expire(now)
         admitted = self._admit(now, clock, resume_only=resume_only)
         self._drain_replay(clock)
         if not self._active.any():
-            return bool(admitted or expired)
-        seq, bad = self._segment()
-        self._harvest(seq, bad, clock.now())
+            return None, bool(admitted or expired)
+        return self._begin_segment(), True
+
+    def _step_inner(self, clock: scheduler.Clock,
+                    resume_only: bool = False) -> bool:
+        pending, progressed = self._step_begin_inner(clock, resume_only)
+        if pending is None:
+            return progressed
+        self._finish_segment(pending, clock)
         return True
+
+    def cancel(self, rid: int, now: float = 0.0,
+               reason: Optional[str] = None) -> bool:
+        """Cancel a request by rid (stream disconnects, client aborts).
+        Queued: removed before it ever dispatches.  In flight: the slot
+        is evicted mid-stream and the request finishes CANCELLED with the
+        tokens (or logprobs) harvested so far -- per-slot state isolation
+        means the surviving batch mates are not perturbed by even one ULP
+        (module docstring).  Returns False when the rid is not live
+        (unknown, or already finished)."""
+        req = self._queue.remove(rid)
+        if req is not None:
+            self._robust["cancelled_queued"] += 1
+            self._finish(req, now, res.CANCELLED,
+                         reason or "cancelled while queued")
+            return True
+        for slot in range(self.n_slots):
+            req = self._slot_req[slot]
+            if req is not None and req.rid == rid:
+                self._robust["cancelled_inflight"] += 1
+                self._finish(req, now, res.CANCELLED,
+                             reason or "cancelled in flight")
+                self._evict(slot)
+                return True
+        return False
 
     def drain(self, clock: Optional[scheduler.Clock] = None) -> None:
         """Finish all in-flight work WITHOUT admitting fresh requests
-        (recovering requests -- requeued with emitted tokens by a fault
-        mid-drain -- are still re-admitted so their streams complete).
-        Fresh queued requests stay queued; pair with snapshot()/restore()
-        for rolling restarts."""
+        (recovering requests -- requeued by a fault mid-drain with
+        emitted tokens or a retry count -- are still re-admitted so their
+        streams complete).  Fresh queued requests stay queued; pair with
+        snapshot()/restore() for rolling restarts."""
         clock = clock or scheduler.Clock()
         self._robust["drains"] += 1
         while True:
@@ -1381,7 +1685,8 @@ class ServeEngine:
                 self._recover(e, clock.now())
                 continue
             if not self._active.any() and not any(
-                    r.tokens for r in self._queue.pending()):
+                    r.tokens or r.retries > 0
+                    for r in self._queue.pending()):
                 return
 
     def snapshot(self, ckpt_dir: str, step: int = 0) -> str:
@@ -1423,9 +1728,33 @@ class ServeEngine:
 
     def results(self) -> Dict[int, res.RequestResult]:
         """Structured terminal outcome per finished request, keyed by rid
-        (resilience.RequestResult: outcome OK/SHED/EXPIRED/FAILED, tokens,
-        error, retries)."""
+        (resilience.RequestResult: outcome OK/SHED/EXPIRED/FAILED/
+        CANCELLED, tokens, logprobs, embedding, error, retries)."""
         return dict(self._results)
+
+    def result(self, rid: int) -> Optional[res.RequestResult]:
+        """The structured result of one request, or None while it is
+        still queued/in flight."""
+        return self._results.get(rid)
+
+    def next_arrival(self, now: float) -> Optional[float]:
+        """Earliest future arrival_time in the queue (None when nothing
+        is in transit) -- the front-end's idle-wait target."""
+        return self._queue.next_arrival(now)
+
+    def admission_plan(self) -> int:
+        """Host-side admission planning that is safe to run while a
+        dispatched segment is in flight (between step_begin and
+        step_finish): precompute and memoize the prefix-cache content
+        digests of queued requests, so the NEXT admission starts with its
+        sha256 work already done.  Pure host bookkeeping -- no device
+        dispatch, no admission decision, no LRU mutation -- so running it
+        mid-segment cannot perturb a single bit of the served streams.
+        Returns the number of requests whose digests were warmed."""
+        if self._prefix is None:
+            return 0
+        return sum(1 for r in self._queue.pending()
+                   if self._prefix.warm_digest(r))
 
     def run(self, requests: Sequence[scheduler.Request] = (),
             clock: Optional[scheduler.Clock] = None) -> Dict[int, np.ndarray]:
@@ -1457,30 +1786,37 @@ class ServeEngine:
     def graph_bound(self) -> int:
         """Upper bound on distinct compiled graphs: the segment bucket grid
         (batch buckets only for constant-size state) plus one prefill (or
-        chunk) graph per (admission batch bucket, prompt bucket) -- what
-        `warmup()` walks.  Chaos-armed (or snapshot-restoring) engines add
-        the recovery-replay grid: one single-token chunk graph per
-        (batch bucket, length bucket), the same grid shape as segments."""
+        chunk) graph per (admission batch bucket, prompt bucket[, enc
+        bucket]) -- what `warmup()` walks -- plus the same-size embed grid
+        and the single-token chunk grid that BOTH recovery replay and the
+        score method walk (score traffic can arrive on any engine, so the
+        chunk grid is always in the bound)."""
+        enc = max(1, len(self.enc_buckets))
         seg = len(self.batch_buckets) * max(1, len(self.len_buckets))
-        pre = len(self.admission_batch_buckets) * len(self.prompt_buckets)
-        bound = seg + pre
-        if self._chaos is not None or self._robust["restores"]:
-            bound += seg
-        return bound
+        pre = len(self.admission_batch_buckets) \
+            * len(self.prompt_buckets) * enc
+        return seg + pre + seg + pre
 
-    def _warmup_prefill_inputs(self, bb: int, sb: int):
+    def _warmup_prefill_inputs(self, bb: int, sb: int,
+                               eb: Optional[int] = None):
         prompts = jnp.zeros((bb, sb), jnp.int32)
         if self.cfg.family != "encdec":
             return prompts
-        audio = jnp.zeros((bb, self.enc_len, self.cfg.d_model),
+        eb = eb or self.enc_len
+        audio = jnp.zeros((bb, eb, self.cfg.d_model),
                           jnp.dtype(self.cfg.dtype))
-        return (audio, prompts)
+        return (audio, prompts, jnp.full((bb,), eb, jnp.int32))
 
-    def warmup(self, prompt_lens: Optional[Sequence[int]] = None) -> int:
+    def warmup(self, prompt_lens: Optional[Sequence[int]] = None,
+               methods: Sequence[str] = ("generate",)) -> int:
         """Pre-compile the (batch bucket x length bucket) segment grid on
         throwaway state, plus -- when the expected prompt-length mix is
         known -- the prefill graphs it maps to; returns the number of
-        graphs compiled."""
+        graphs compiled.  `methods` names the servable methods the
+        traffic will use: "score" additionally warms the single-token
+        chunk grid its teacher-forcing drains through, "embed" the pooled
+        embedding graphs (launch/methods.py) -- without these a
+        multi-method front-end pays their compiles mid-traffic."""
         n = 0
         state0 = self._spec.init_state(self.n_slots, self.max_cache_len)
         if self._plan is not None:
@@ -1514,11 +1850,12 @@ class ServeEngine:
                 # exactly the operands the serve loop hands it
                 if not fast:
                     state0 = self._spec.merge_live(state0, out[2], bb, t_b)
-        if self._chaos is not None:
+        if self._chaos is not None or "score" in methods:
             # a chaos-armed engine WILL recover, and recovery replays
             # through single-token chunk dispatches: pre-compile that grid
             # too, so the census stays warm-bounded under injected faults
-            # (tier1-chaos runs the warmup-census tests unchanged)
+            # (tier1-chaos runs the warmup-census tests unchanged).
+            # Scoring teacher-forces completions through the SAME grid.
             for bb in self.batch_buckets:
                 for t_b in (self.len_buckets or (None,)):
                     key = ("chunk", bb, 1, t_b)
@@ -1539,26 +1876,51 @@ class ServeEngine:
                                             minimum=self.min_prompt_bucket,
                                             maximum=self.max_cache_len)
                       for pl in prompt_lens})
+        # encdec admission groups ragged features by enc bucket, and the
+        # compile cache keys on the audio operand shape: warm every
+        # bucket or ragged traffic pays the smaller ones mid-stream
+        ebs = self.enc_buckets or (None,)
         for bb in self.admission_batch_buckets:
             for sb in sbs:
-                t_pre = self._prefill_bucket(sb)
-                lens = jnp.ones((bb,), jnp.int32)
-                if self.prefill_chunk is None:
-                    key = ("prefill", bb, sb, t_pre)
-                    if key in self._graphs:
-                        continue
-                    out = self._bundle.prefill(
-                        self.params, self._warmup_prefill_inputs(bb, sb),
-                        lens - 1, t_pre)
-                else:
-                    key = ("chunk", bb, min(self.prefill_chunk, sb), t_pre)
-                    if key in self._graphs:
-                        continue
-                    out = self._chunked_prefill(np.zeros((bb, sb), np.int32),
-                                                np.asarray(lens), t_pre)
-                jax.block_until_ready(out[0])
-                self._graphs.add(key)
-                n += 1
+                for eb in ebs:
+                    t_pre = self._prefill_bucket(sb)
+                    lens = jnp.ones((bb,), jnp.int32)
+                    if self.prefill_chunk is None:
+                        key = ("prefill", bb, sb, t_pre) \
+                            + (() if eb is None else (eb,))
+                        if key in self._graphs:
+                            continue
+                        out = self._bundle.prefill(
+                            self.params,
+                            self._warmup_prefill_inputs(bb, sb, eb),
+                            lens - 1, t_pre, self.enc_len)
+                    else:
+                        key = ("chunk", bb, min(self.prefill_chunk, sb),
+                               t_pre)
+                        if key in self._graphs:
+                            continue
+                        out = self._chunked_prefill(
+                            np.zeros((bb, sb), np.int32),
+                            np.asarray(lens), t_pre)
+                    jax.block_until_ready(out[0])
+                    self._graphs.add(key)
+                    n += 1
+        if "embed" in methods:
+            for bb in self.admission_batch_buckets:
+                for sb in sbs:
+                    for eb in ebs:
+                        key = ("embed", bb, sb) \
+                            + (() if eb is None else (eb,))
+                        if key in self._graphs:
+                            continue
+                        lens = jnp.ones((bb,), jnp.int32)
+                        out = self._bundle.embed(
+                            self.params,
+                            self._warmup_prefill_inputs(bb, sb, eb),
+                            lens - 1)
+                        jax.block_until_ready(out[0])
+                        self._graphs.add(key)
+                        n += 1
         if self._prefix is not None:
             # pre-compile the pool's page ops.  The dynamic_slice /
             # dynamic_update_slice programs are keyed by the FULL operand
@@ -1634,7 +1996,9 @@ class ServeEngine:
                                  key=lambda k: tuple(str(x) for x in k)),
             "batch_buckets": list(self.batch_buckets),
             "len_buckets": list(self.len_buckets),
+            "enc_buckets": list(self.enc_buckets),
             "compactions": self.compactions,
+            "methods": {"admits": dict(self._method_admits)},
             "lowerings": dict(self._lowerings),
             "decode_bundle_lru": serve.decode_cache_info(),
             "robustness": dict(self._robust),

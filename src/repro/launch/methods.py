@@ -1,0 +1,106 @@
+"""Servable methods: request builders + result decoding for the front-end.
+
+The engine serves three request *methods* (scheduler.Request.method), all
+through the same compiled decode family:
+
+* ``generate`` -- greedy decode of up to max_new_tokens (streaming or
+  batch; the tokens are identical either way, tests/test_frontend.py).
+* ``score``    -- per-token logprobs of a FIXED completion under the
+  prompt.  The engine teacher-forces the completion through the same
+  single-token chunk dispatches recovery replay uses (engine._drain_replay),
+  so the logits row each scored token is conditioned on is bitwise the row
+  greedy decode would have produced at that position -- scoring is exact
+  by construction, not by tolerance.
+* ``embed``    -- one pooled vector per request: final-hidden-state masked
+  mean over the prompt (lm.embed_pool), a single prefill-shaped dispatch
+  that consumes NO decode slot.
+
+``logprob_from_logits`` is THE canonical logits-row -> logprob map: the
+engine scores with it and tests recompute references with it, so
+score-vs-decode parity is a statement about logits BITS (covered by the
+engine's exactness invariants), never about a tolerance on the host math.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.launch import resilience as res
+from repro.launch import scheduler
+
+METHODS = ("generate", "score", "embed")
+
+
+def logprob_from_logits(row, token: int) -> float:
+    """log softmax(row)[token] in float32 on the host (max-shifted, one
+    np.sum).  Deterministic: bitwise-identical rows give bitwise-identical
+    logprobs, which is what lets score parity tests demand exact floats."""
+    row = np.asarray(row, np.float32)
+    m = row.max()
+    z = np.log(np.sum(np.exp(row - m), dtype=np.float32))
+    return float(row[int(token)] - m - z)
+
+
+# -- request builders -------------------------------------------------------
+
+def generate_request(rid: int, prompt, max_new_tokens: int, *,
+                     arrival_time: float = 0.0,
+                     stop_tokens: Optional[Sequence[int]] = None,
+                     features=None,
+                     deadline: Optional[float] = None) -> scheduler.Request:
+    return scheduler.Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                             max_new_tokens=int(max_new_tokens),
+                             arrival_time=arrival_time,
+                             stop_tokens=stop_tokens, features=features,
+                             deadline=deadline)
+
+
+def score_request(rid: int, prompt, completion: Sequence[int], *,
+                  arrival_time: float = 0.0, features=None,
+                  deadline: Optional[float] = None) -> scheduler.Request:
+    """Score `completion` under `prompt`; the result's ``logprobs[i]`` is
+    the logprob of completion[i] given prompt + completion[:i].
+    max_new_tokens is unused by scoring (the completion bounds the work)
+    but the Request invariant wants >= 1."""
+    return scheduler.Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                             max_new_tokens=1, arrival_time=arrival_time,
+                             features=features, deadline=deadline,
+                             method="score",
+                             score_tokens=tuple(int(t) for t in completion))
+
+
+def embed_request(rid: int, prompt, *, arrival_time: float = 0.0,
+                  features=None,
+                  deadline: Optional[float] = None) -> scheduler.Request:
+    return scheduler.Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                             max_new_tokens=1, arrival_time=arrival_time,
+                             features=features, deadline=deadline,
+                             method="embed")
+
+
+# -- result decoding --------------------------------------------------------
+
+def _check_ok(result: res.RequestResult, want: str) -> None:
+    if result.outcome != res.OK:
+        raise RuntimeError(
+            f"request {result.rid}: {want} unavailable, outcome "
+            f"{result.outcome!r} ({result.error})")
+
+
+def completion_logprobs(result: res.RequestResult) -> list:
+    """The per-token logprobs of a finished score request."""
+    _check_ok(result, "logprobs")
+    if result.logprobs is None:
+        raise RuntimeError(f"request {result.rid}: no logprobs recorded "
+                           f"(not a score request?)")
+    return list(result.logprobs)
+
+
+def embedding(result: res.RequestResult) -> np.ndarray:
+    """The pooled embedding of a finished embed request."""
+    _check_ok(result, "embedding")
+    if result.embedding is None:
+        raise RuntimeError(f"request {result.rid}: no embedding recorded "
+                           f"(not an embed request?)")
+    return np.asarray(result.embedding, np.float32)

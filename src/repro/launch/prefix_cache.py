@@ -118,7 +118,34 @@ class PrefixCache:
 
     # -- keys ---------------------------------------------------------------
 
+    @property
+    def _memo_tag(self) -> tuple:
+        # digests depend on these; a memo from a differently-configured
+        # pool must never be trusted
+        return (self._salt, self.chunk, self.chain_ok)
+
+    def warm_digest(self, req) -> bool:
+        """Precompute and memoize this request's content digests -- the
+        terminal sha256 and the rolling chain keys -- ON the request
+        object, so later lookups do no hashing at admission time.  This
+        is the host-side admission planning the front-end overlaps with
+        an in-flight decode segment (engine.admission_plan): pure
+        hashing, no pool mutation, no counters.  Idempotent; returns
+        True when work was done, False when already warm."""
+        memo = getattr(req, "_prefix_memo", None)
+        if memo is not None and memo[0] == self._memo_tag:
+            return False
+        req._prefix_memo = (self._memo_tag, self._hash_terminal(req),
+                            tuple(self._hash_chain(req.prompt)))
+        return True
+
     def _terminal_key(self, req) -> bytes:
+        memo = getattr(req, "_prefix_memo", None)
+        if memo is not None and memo[0] == self._memo_tag:
+            return memo[1]
+        return self._hash_terminal(req)
+
+    def _hash_terminal(self, req) -> bytes:
         h = hashlib.sha256()
         h.update(b"terminal:")
         h.update(self._salt)
@@ -126,9 +153,17 @@ class PrefixCache:
         h.update(np.asarray(req.prompt, np.int32).tobytes())
         return h.digest()
 
-    def chain_keys(self, prompt) -> List[bytes]:
+    def chain_keys(self, prompt, req=None) -> List[bytes]:
         """Rolling keys for every FULLY-real chunk of `prompt`: chunk k is
-        reachable only through the exact tokens [0:(k+1)C)."""
+        reachable only through the exact tokens [0:(k+1)C).  Pass the
+        owning request as `req` to reuse a warm_digest memo."""
+        memo = getattr(req, "_prefix_memo", None) if req is not None \
+            else None
+        if memo is not None and memo[0] == self._memo_tag:
+            return list(memo[2])
+        return self._hash_chain(prompt)
+
+    def _hash_chain(self, prompt) -> List[bytes]:
         if not self.chain_ok:
             return []
         c = self.chunk
@@ -158,7 +193,7 @@ class PrefixCache:
             self.hits += 1
             return Lookup(self._touch(ent), [], req.prompt_len)
         chain: List[Entry] = []
-        for key in self.chain_keys(req.prompt):
+        for key in self.chain_keys(req.prompt, req=req):
             ce = self._entries.get(key)
             if ce is None:
                 break
@@ -175,7 +210,7 @@ class PrefixCache:
         if self._terminal_key(req) in self._entries:
             return req.prompt_len
         n = 0
-        for key in self.chain_keys(req.prompt):
+        for key in self.chain_keys(req.prompt, req=req):
             if key not in self._entries:
                 break
             n += 1

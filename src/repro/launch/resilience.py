@@ -57,7 +57,7 @@ from repro.checkpoint import ckpt
 from repro.distributed.fault import FailureInjector, SimulatedFailure
 
 __all__ = [
-    "OK", "SHED", "EXPIRED", "FAILED", "QUEUED",
+    "OK", "SHED", "EXPIRED", "FAILED", "CANCELLED", "QUEUED",
     "RequestResult", "ResilienceConfig", "ChaosSchedule",
     "chaos_from_env", "snapshot_requests", "restore_requests",
     "SimulatedFailure",
@@ -68,6 +68,7 @@ OK = "ok"              # full stream delivered
 SHED = "shed"          # rejected by admission control (bounded queue)
 EXPIRED = "expired"    # deadline/TTL passed (queued or in-flight)
 FAILED = "failed"      # quarantined (non-finite logits) / retries exhausted
+CANCELLED = "cancelled"  # client cancelled (stream disconnect / cancel(rid))
 # submit() return value for an accepted request (not a terminal outcome)
 QUEUED = "queued"
 
@@ -76,10 +77,12 @@ QUEUED = "queued"
 class RequestResult:
     """Structured terminal outcome of one request (engine.results())."""
     rid: int
-    outcome: str                      # OK | SHED | EXPIRED | FAILED
-    tokens: List[int]                 # possibly partial (EXPIRED/FAILED)
+    outcome: str                # OK | SHED | EXPIRED | FAILED | CANCELLED
+    tokens: List[int]           # possibly partial (EXPIRED/FAILED/CANCELLED)
     error: Optional[str] = None
     retries: int = 0                  # fault recoveries this request rode
+    logprobs: Optional[List[float]] = None   # score method: per-token lp
+    embedding: Optional[np.ndarray] = None   # embed method: [d_model] f32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,7 +142,7 @@ class ChaosSchedule(FailureInjector):
     max_failures: Optional[int] = None
 
     # the engine's guarded dispatch kinds (launch/engine.py _guarded)
-    SITE_KINDS = frozenset({"segment", "prefill", "chunk"})
+    SITE_KINDS = frozenset({"segment", "prefill", "chunk", "embed"})
 
     def should_fail(self, site: str) -> bool:
         if site in self.fail_at_sites:
@@ -192,7 +195,7 @@ class ChaosSchedule(FailureInjector):
                 if kind not in cls.SITE_KINDS or not idx.isdigit():
                     raise ValueError(
                         f"REPRO_CHAOS: bad site {tok!r} (want "
-                        f"segment:N, prefill:N or chunk:N)")
+                        f"segment:N, prefill:N, chunk:N or embed:N)")
                 sites.append(tok)
             else:
                 raise ValueError(f"REPRO_CHAOS: cannot parse token {tok!r}")
@@ -232,6 +235,8 @@ def _encode_requests(requests: Sequence[Any]) -> Tuple[list, dict]:
                 "tokens": np.asarray(r.tokens, np.int32)}
         if r.features is not None:
             leaf["features"] = np.asarray(r.features, np.float32)
+        if r.score_tokens is not None:
+            leaf["score_tokens"] = np.asarray(r.score_tokens, np.int32)
         tree.append(leaf)
         meta.append({
             "rid": int(r.rid),
@@ -242,6 +247,8 @@ def _encode_requests(requests: Sequence[Any]) -> Tuple[list, dict]:
             else [int(t) for t in r.stop_tokens],
             "retries": int(r.retries),
             "has_features": r.features is not None,
+            "method": r.method,
+            "has_score_tokens": r.score_tokens is not None,
         })
     return tree, {"requests": meta}
 
@@ -276,6 +283,8 @@ def restore_requests(ckpt_dir: str, step: Optional[int] = None) -> list:
                 "tokens": np.zeros(0, np.int32)}
         if e["has_features"]:
             leaf["features"] = np.zeros(0, np.float32)
+        if e.get("has_score_tokens"):
+            leaf["score_tokens"] = np.zeros(0, np.int32)
         like.append(leaf)
     tree, _ = ckpt.restore_checkpoint(ckpt_dir, like, step=step)
     out = []
@@ -287,7 +296,10 @@ def restore_requests(ckpt_dir: str, step: Optional[int] = None) -> list:
             stop_tokens=e["stop_tokens"],
             features=np.asarray(leaf["features"], np.float32)
             if e["has_features"] else None,
-            deadline=e["deadline"])
+            deadline=e["deadline"],
+            method=e.get("method", "generate"),
+            score_tokens=[int(t) for t in np.asarray(leaf["score_tokens"])]
+            if e.get("has_score_tokens") else None)
         req.tokens = [int(t) for t in np.asarray(leaf["tokens"])]
         req.retries = e["retries"]
         out.append(req)

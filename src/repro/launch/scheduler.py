@@ -97,7 +97,14 @@ class Request:                        # support elementwise == in `in`/remove
     precomputed frame embeddings).  `deadline` is an absolute time in the
     serving clock's domain (same domain as `arrival_time`); past it the
     request is EXPIRED instead of (further) served -- the engine fills it
-    from its default TTL when left None (launch/resilience.py)."""
+    from its default TTL when left None (launch/resilience.py).
+
+    `method` selects the servable method (launch/methods.py):
+      generate  greedy decode of up to max_new_tokens (the default);
+      score     teacher-force `score_tokens` and report their per-token
+                logprobs (no sampling; max_new_tokens is unused);
+      embed     pooled final-hidden-state embedding of the prompt (one
+                prefill-shaped dispatch, no decode slot consumed)."""
     rid: int
     prompt: np.ndarray
     max_new_tokens: int
@@ -105,13 +112,17 @@ class Request:                        # support elementwise == in `in`/remove
     stop_tokens: Optional[Sequence[int]] = None
     features: Optional[np.ndarray] = None
     deadline: Optional[float] = None
+    method: str = "generate"
+    score_tokens: Optional[Sequence[int]] = None
     # filled in by the engine:
     tokens: List[int] = dataclasses.field(default_factory=list)
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
-    outcome: Optional[str] = None      # resilience.OK/SHED/EXPIRED/FAILED
+    outcome: Optional[str] = None      # resilience.OK/SHED/EXPIRED/...
     error: Optional[str] = None
     retries: int = 0                   # fault recoveries survived
+    logprobs: List[float] = dataclasses.field(default_factory=list)
+    embedding: Optional[np.ndarray] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -121,6 +132,19 @@ class Request:                        # support elementwise == in `in`/remove
             raise ValueError(f"request {self.rid}: max_new_tokens < 1")
         if self.stop_tokens is not None:
             self.stop_tokens = tuple(int(t) for t in self.stop_tokens)
+        if self.method not in ("generate", "score", "embed"):
+            raise ValueError(
+                f"request {self.rid}: unknown method {self.method!r} "
+                f"(want generate/score/embed)")
+        if self.method == "score":
+            if self.score_tokens is None or len(self.score_tokens) == 0:
+                raise ValueError(
+                    f"request {self.rid}: score needs score_tokens")
+            self.score_tokens = tuple(int(t) for t in self.score_tokens)
+        elif self.score_tokens is not None:
+            raise ValueError(
+                f"request {self.rid}: score_tokens only valid with "
+                f"method='score'")
 
     @property
     def prompt_len(self) -> int:
@@ -129,6 +153,16 @@ class Request:                        # support elementwise == in `in`/remove
     @property
     def total_len(self) -> int:
         return self.prompt_len + self.max_new_tokens
+
+    @property
+    def served_len(self) -> int:
+        """Cache positions the request actually needs under its method
+        (what the engine validates against max_cache_len)."""
+        if self.method == "score":
+            return self.prompt_len + len(self.score_tokens)
+        if self.method == "embed":
+            return self.prompt_len
+        return self.total_len
 
     def expired(self, now: float) -> bool:
         return self.deadline is not None and now > self.deadline
@@ -190,6 +224,14 @@ class RequestQueue:
         """Remove and return the head of the queue (drop-oldest load
         shedding); None when empty."""
         return self._pending.pop(0) if self._pending else None
+
+    def remove(self, rid: int) -> Optional[Request]:
+        """Remove and return the queued request with this rid (client
+        cancellation before admission); None if not queued."""
+        for i, r in enumerate(self._pending):
+            if r.rid == rid:
+                return self._pending.pop(i)
+        return None
 
     def pending(self) -> tuple:
         """Snapshot view of the queued requests (FIFO order)."""
@@ -260,6 +302,43 @@ def shared_prefix_traffic(seed: int, n_requests: int, rate: float,
         reqs.append(Request(rid=i, prompt=np.concatenate([pre, tail]),
                             max_new_tokens=gl, arrival_time=t,
                             deadline=deadline))
+    return reqs
+
+
+def method_traffic(seed: int, n_requests: int, rate: float,
+                   prompt_lens: Sequence[int], gen_lens: Sequence[int],
+                   vocab: int,
+                   method_mix: Optional[Sequence] = None,
+                   score_lens: Sequence[int] = (4, 8),
+                   ) -> List[Request]:
+    """Poisson open-loop traffic mixing servable methods: each request
+    draws a method from `method_mix` -- a sequence of (method, weight)
+    pairs (default: 70% generate / 20% score / 10% embed).  Score
+    requests carry a random completion of a length drawn from
+    `score_lens`.  This is the trace shape `benchmarks/serve_latency.py`
+    replays against the async front-end."""
+    if method_mix is None:
+        method_mix = (("generate", 0.7), ("score", 0.2), ("embed", 0.1))
+    names = [m for m, _ in method_mix]
+    w = np.asarray([float(p) for _, p in method_mix], np.float64)
+    w /= w.sum()
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        pl = int(rng.choice(np.asarray(prompt_lens)))
+        gl = int(rng.choice(np.asarray(gen_lens)))
+        prompt = rng.integers(0, vocab, size=pl, dtype=np.int32)
+        method = names[int(rng.choice(len(names), p=w))]
+        score_tokens = None
+        if method == "score":
+            sl = int(rng.choice(np.asarray(score_lens)))
+            score_tokens = rng.integers(0, vocab, size=sl,
+                                        dtype=np.int32).tolist()
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=gl,
+                            arrival_time=t, method=method,
+                            score_tokens=score_tokens))
     return reqs
 
 

@@ -187,8 +187,17 @@ def _attn_chunked(q, k, v, srcpos, cfg: ModelConfig, q_chunk: int):
 
 
 def attn_full(p, x, cfg: ModelConfig, positions=None, causal: bool = True,
-              return_cache: bool = False, cache_len: Optional[int] = None):
-    """Self attention over the full sequence (train / prefill)."""
+              return_cache: bool = False, cache_len: Optional[int] = None,
+              kv_lengths=None):
+    """Self attention over the full sequence (train / prefill).
+
+    kv_lengths: optional [B] int32 per-row count of REAL source positions
+    (non-causal / encoder use): keys at positions >= kv_lengths[b] are
+    masked out of row b's softmax.  Masked weights are exact float zeros,
+    so a right-padded batch attends bit-identically to an unpadded one --
+    the invariant that lets the serve engine bucket ragged encoder
+    lengths (variable-length whisper features) without perturbing any
+    real position by a single ULP."""
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
@@ -218,6 +227,9 @@ def attn_full(p, x, cfg: ModelConfig, positions=None, causal: bool = True,
     if causal:
         mask = srcpos[:, None, None, :, None] >= srcpos[:, None, None, None, :]
         scores = jnp.where(mask, scores, -1e30)
+    if kv_lengths is not None:
+        valid = jnp.arange(s)[None, :] < kv_lengths[:, None]        # [B,T]
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = qmatmul(_tp_gather_heads(_gqa_out(w, v, cfg)), p["wo"])
     if not return_cache:
@@ -288,16 +300,30 @@ def attn_decode(p, x_t, cache, pos, cfg: ModelConfig, active=None):
     return out, new_cache
 
 
-def attn_cross(p, x, memory, cfg: ModelConfig, mem_kv=None):
+def attn_cross(p, x, memory, cfg: ModelConfig, mem_kv=None, enc_lengths=None):
     """Cross attention (decoder -> encoder memory).  If mem_kv is given
-    (precomputed at prefill), memory projection is skipped."""
+    (precomputed at prefill), memory projection is skipped.
+
+    enc_lengths: optional [B] int32 count of real encoder positions per
+    row; memory positions >= enc_lengths[b] contribute exactly-zero
+    softmax weight, so a cross-KV page right-padded to a bucket width is
+    bit-identical to the unpadded computation (ragged encdec serving).
+    A `len` leaf stored in mem_kv by prefill serves as the default, so
+    the decode path picks the mask up from the slot cache for free.
+    Rows with length 0 (inactive slots) get a uniform finite softmax --
+    never NaN -- and their output is discarded by the slot mask."""
     q = _project_q(p, x, cfg)
     if mem_kv is None:
         k, v = _project_kv(p, memory, cfg)
     else:
         k, v = mem_kv["k"], mem_kv["v"]
+        if enc_lengths is None:
+            enc_lengths = mem_kv.get("len")
     scale = 1.0 / np.sqrt(cfg.head_dim)
     scores = _gqa_scores(q, k, cfg) * scale
+    if enc_lengths is not None:
+        valid = jnp.arange(k.shape[1])[None, :] < enc_lengths[:, None]
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     return qmatmul(_tp_gather_heads(_gqa_out(w, v, cfg)), p["wo"])
 

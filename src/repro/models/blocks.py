@@ -214,9 +214,12 @@ def init_enc_block(rng, cfg: ModelConfig):
             "ln2": _norm_init(cfg), "mlp": mlp.init_mlp(r[1], cfg)}
 
 
-def enc_block(p, x, cfg):
+def enc_block(p, x, cfg, lengths=None):
+    """lengths: optional [B] int32 real-frame counts -- padded source
+    positions are masked out of the bidirectional self-attention so a
+    right-padded batch encodes real positions bit-identically."""
     x = x + attn.attn_full(p["attn"], _norm(cfg, x, p["ln1"]), cfg,
-                           causal=False)
+                           causal=False, kv_lengths=lengths)
     x = x + mlp.mlp(p["mlp"], _norm(cfg, x, p["ln2"]), cfg)
     return x
 
@@ -229,12 +232,18 @@ def init_dec_block(rng, cfg: ModelConfig):
 
 
 def dec_block(p, x, cfg, *, memory=None, mode="train", cache=None,
-              pos=None, cache_len=None, active=None):
-    """cache = {self: kv-cache, cross: precomputed {k, v}} (decode).
+              pos=None, cache_len=None, active=None, enc_lengths=None,
+              enc_pad=None):
+    """cache = {self: kv-cache, cross: precomputed {k, v, len}} (decode).
 
     active: [B] bool slot mask for decode -- the self-attn KV write is
     masked; the cross KV is read-only during decode, so inactive slots
-    carry it through bit-identically for free."""
+    carry it through bit-identically for free.
+
+    enc_lengths: [B] int32 real encoder frame counts (ragged serving);
+    enc_pad: static target width -- prefill right-pads the cross K/V to
+    it (zero rows, masked by `len`) so every enc-length bucket emits a
+    slot page of one constant shape."""
     h = _norm(cfg, x, p["ln1"])
     if mode == "decode":
         a, self_c = attn.attn_decode(p["self"], h, cache["self"], pos, cfg,
@@ -244,12 +253,17 @@ def dec_block(p, x, cfg, *, memory=None, mode="train", cache=None,
         a, self_c = attn.attn_full(p["self"], h, cfg, return_cache=True,
                                    cache_len=cache_len)
         k, v = attn._project_kv(p["cross"], memory, cfg)
-        cross_kv = {"k": k, "v": v}
+        lens = (enc_lengths if enc_lengths is not None
+                else jnp.full((k.shape[0],), k.shape[1], jnp.int32))
+        if enc_pad is not None and enc_pad > k.shape[1]:
+            pad = ((0, 0), (0, enc_pad - k.shape[1]), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        cross_kv = {"k": k, "v": v, "len": lens.astype(jnp.int32)}
     else:
         a, self_c, cross_kv = attn.attn_full(p["self"], h, cfg), None, None
     x = x + a
     x = x + attn.attn_cross(p["cross"], _norm(cfg, x, p["ln2"]), memory, cfg,
-                            mem_kv=cross_kv)
+                            mem_kv=cross_kv, enc_lengths=enc_lengths)
     x = x + mlp.mlp(p["mlp"], _norm(cfg, x, p["ln3"]), cfg)
     new_cache = None if mode == "train" else {"self": self_c, "cross": cross_kv}
     return x, new_cache, jnp.float32(0.0)

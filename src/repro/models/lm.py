@@ -142,6 +142,9 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int,
                                     cfg.head_dim), jnp.dtype(cfg.dtype)),
                     "v": jnp.zeros((batch, s_enc or s_max, cfg.n_kv,
                                     cfg.head_dim), jnp.dtype(cfg.dtype)),
+                    # real encoder frames per row; attn_cross masks the
+                    # padded tail so ragged enc lengths share one page shape
+                    "len": jnp.zeros((batch,), jnp.int32),
                 },
             }
         raise ValueError(cfg.family)
@@ -154,15 +157,19 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int,
 
 
 def prefill(params, inputs, cfg: ModelConfig, cache_len: int,
-            positions=None, last_positions=None):
+            positions=None, last_positions=None, enc_lengths=None,
+            enc_pad=None):
     """Run the prompt, return (last-position logits, cache).
 
     last_positions: optional [B] int32 -- per-row index of the last REAL
     prompt token (for right-padded ragged batches; the serve engine pads
-    prompts up to a shape bucket).  Default: the final column."""
+    prompts up to a shape bucket).  Default: the final column.
+    enc_lengths / enc_pad (encdec only): per-row real encoder frame
+    counts and the static cross-KV page width to pad to."""
     if cfg.family == "encdec":
         return encdec_prefill(params, inputs, cfg, cache_len,
-                              last_positions=last_positions)
+                              last_positions=last_positions,
+                              enc_lengths=enc_lengths, enc_pad=enc_pad)
     x = _embed(params, inputs, cfg)
     if cfg.learned_pos:
         x = x + params["pos_embed"][None, :x.shape[1], :]
@@ -232,12 +239,15 @@ def decode_step(params, token_t, cache, pos, cfg: ModelConfig, active=None):
 # encoder-decoder (whisper)
 # ---------------------------------------------------------------------------
 
-def encode(params, embeds, cfg: ModelConfig):
+def encode(params, embeds, cfg: ModelConfig, lengths=None):
+    """lengths: optional [B] int32 real-frame counts; padded frames are
+    masked out of every encoder self-attention, so real positions of a
+    right-padded batch are bit-identical to an unpadded encode."""
     x = embeds.astype(jnp.dtype(cfg.dtype))
     x = x + params["enc_pos"][None, :x.shape[1], :]
 
     def body(h, layer_params):
-        return blocks.enc_block(layer_params, h, cfg), None
+        return blocks.enc_block(layer_params, h, cfg, lengths=lengths), None
 
     x, _ = jax.lax.scan(body, x, params["enc"])
     return common.norm_apply(x, params["enc_norm"], cfg.norm, cfg.norm_eps)
@@ -264,15 +274,17 @@ def encdec_forward(params, inputs, cfg: ModelConfig, *, remat: bool = True):
 
 
 def encdec_prefill(params, inputs, cfg: ModelConfig, cache_len: int,
-                   last_positions=None):
+                   last_positions=None, enc_lengths=None, enc_pad=None):
     audio, dec_tokens = inputs
-    memory = encode(params, audio, cfg)
+    memory = encode(params, audio, cfg, lengths=enc_lengths)
     x = jnp.take(params["embed"], dec_tokens, axis=0)
     x = x + params["pos_embed"][None, :x.shape[1], :]
 
     def body(h, layer_params):
         h2, cache, _ = blocks.dec_block(layer_params, h, cfg, memory=memory,
-                                        mode="prefill", cache_len=cache_len)
+                                        mode="prefill", cache_len=cache_len,
+                                        enc_lengths=enc_lengths,
+                                        enc_pad=enc_pad)
         return h2, cache
 
     x, caches = jax.lax.scan(body, x, params["dec"])
@@ -299,6 +311,70 @@ def encdec_decode_step(params, token_t, cache, pos, cfg: ModelConfig,
     x, new_caches = jax.lax.scan(body, x, (params["dec"], cache))
     x = common.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
     return _lm_head(params, x, cfg), new_caches
+
+
+# ---------------------------------------------------------------------------
+# embedding method (serve `embed`)
+# ---------------------------------------------------------------------------
+
+def embed_pool(params, inputs, cfg: ModelConfig, last_positions=None,
+               enc_lengths=None):
+    """Final-hidden-state embedding of a prompt: run the stack exactly as
+    prefill does (per-token MoE routing, SSM identity updates on padded
+    rows, masked encoder frames) and masked-mean-pool the post-final-norm
+    hidden states over the real positions, in float32.
+
+    Riding the prefill code path is what makes embeddings batch-
+    composition invariant: a request's vector is bit-identical whatever
+    its batch mates or padding, the same invariant the engine's token
+    bit-exactness tests rest on.  Returns [B, d_model] float32; no KV is
+    materialized (the caches the blocks emit are dropped, so XLA DCEs
+    the page writes)."""
+    if cfg.family == "encdec":
+        audio, dec_tokens = inputs
+        memory = encode(params, audio, cfg, lengths=enc_lengths)
+        x = jnp.take(params["embed"], dec_tokens, axis=0)
+        x = x + params["pos_embed"][None, :x.shape[1], :]
+
+        def body(h, layer_params):
+            h2, _, _ = blocks.dec_block(layer_params, h, cfg, memory=memory,
+                                        mode="prefill",
+                                        cache_len=x.shape[1],
+                                        enc_lengths=enc_lengths)
+            return h2, None
+
+        x, _ = jax.lax.scan(body, x, params["dec"])
+    else:
+        x = _embed(params, inputs, cfg)
+        if cfg.learned_pos:
+            x = x + params["pos_embed"][None, :x.shape[1], :]
+        positions = None
+        if cfg.m_rope_sections is not None:
+            b, s = x.shape[:2]
+            positions = jnp.broadcast_to(jnp.arange(s)[None, None, :],
+                                         (3, b, s))
+        if last_positions is None:
+            lengths = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+        else:
+            lengths = last_positions + 1
+        _, block_fn = BLOCK_FNS[cfg.family]
+
+        def body(h, layer_params):
+            h2, _, _ = block_fn(layer_params, h, cfg, mode="prefill",
+                                positions=positions, cache_len=x.shape[1],
+                                lengths=lengths)
+            return h2, None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = common.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    b, s = x.shape[:2]
+    if last_positions is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    else:
+        lengths = last_positions + 1
+    mask = (jnp.arange(s)[None, :] < lengths[:, None]).astype(jnp.float32)
+    xf = x.astype(jnp.float32) * mask[:, :, None]
+    return xf.sum(axis=1) / lengths[:, None].astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------

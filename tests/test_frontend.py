@@ -1,0 +1,439 @@
+"""Async streaming front-end (launch/frontend.py): streamed tokens must
+be byte-identical to the batch ServeEngine on the same trace for every
+model family, score must reproduce the decode-path logprobs exactly, and
+cancellation (explicit, client disconnect, stream backlog) must evict
+the slot while keeping the partial tokens.
+
+The engines here use the default ``chaos="env"``: under the CI chaos job
+(REPRO_CHAOS set) the SAME equality assertions also prove that streaming
+survives fault injection + bit-exact replay.  The mesh test activates
+only with >=8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8).
+
+pytest-asyncio is optional in this environment, so every async scenario
+is driven through a plain ``asyncio.run()`` inside a sync test.
+"""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.distributed import context as dctx
+from repro.launch import methods, scheduler
+from repro.launch.engine import ServeEngine
+from repro.launch.frontend import AsyncFrontend, serve_requests
+from repro.launch.mesh import make_mesh
+from repro.models import lm
+from repro.quant.qtensor import quantize_tree_for_serving
+
+FAMILY_ARCHS = {"dense": "smollm-135m", "ssm": "mamba2-2.7b",
+                "hybrid": "jamba-v0.1-52b", "encdec": "whisper-small"}
+ENC_LEN = 16
+_SETUP_CACHE: dict = {}
+
+
+def _setup(family):
+    """(cfg, params) per family, cached across tests in this module."""
+    if family not in _SETUP_CACHE:
+        cfg = configs.get_reduced_config(FAMILY_ARCHS[family])
+        params = quantize_tree_for_serving(
+            lm.init_params(jax.random.PRNGKey(0), cfg, max_seq=80), "w8a8")
+        _SETUP_CACHE[family] = (cfg, params)
+    return _SETUP_CACHE[family]
+
+
+def _make_engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_cache_len", 64)
+    kw.setdefault("segment_len", 4)
+    if cfg.family == "encdec":
+        kw.setdefault("enc_len", ENC_LEN)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _traffic(cfg, n=8, seed=0):
+    reqs = scheduler.method_traffic(
+        seed=seed, n_requests=n, rate=200.0, prompt_lens=(4, 7, 12),
+        gen_lens=(3, 6), vocab=cfg.vocab)
+    feats = None
+    if cfg.family == "encdec":
+        frng = np.random.default_rng(seed + 1)
+        # ragged encoder lengths, including one short enough (<=8) to
+        # land in a smaller enc-length bucket than ENC_LEN
+        feats = {r.rid: frng.standard_normal(
+            (int(frng.integers(3, ENC_LEN + 1)) if r.rid else 5,
+             cfg.d_model)).astype(np.float32) for r in reqs}
+    return reqs, feats
+
+
+def _batch_reference(cfg, params, reqs, feats, **engine_kw):
+    """The bit-exactness oracle: the same trace through a plain engine
+    step loop (no front-end, no streaming)."""
+    eng = _make_engine(cfg, params, **engine_kw)
+    clock = scheduler.FastForwardClock()
+    for r in reqs:
+        if feats:
+            r.features = feats.get(r.rid)
+        eng.submit(r)
+    while len(eng.results()) < len(reqs):
+        if not eng.step(clock):
+            nxt = eng.next_arrival(clock.now())
+            if nxt is not None:
+                clock.wait_until(nxt)
+    return {r.rid: eng.result(r.rid) for r in reqs}
+
+
+async def _run_frontend(eng, reqs, feats, *, overlap=True):
+    """Serve `reqs` through the front-end: every generate request is
+    STREAMED (per-token receipt), score/embed awaited.  Returns
+    ({rid: RequestResult}, {rid: streamed tokens})."""
+    fe = AsyncFrontend(eng, clock=scheduler.FastForwardClock(),
+                       overlap=overlap)
+    results, stream_toks = {}, {}
+    async with fe:
+        async def stream_one(req):
+            toks = []
+            async for t in fe.generate_stream(
+                    req.prompt, req.max_new_tokens, rid=req.rid,
+                    features=feats.get(req.rid) if feats else None):
+                toks.append(t)
+            stream_toks[req.rid] = toks
+
+        plain = []
+        coros = []
+        for r in reqs:
+            if r.method == "generate":
+                coros.append(stream_one(r))
+            else:
+                if feats:
+                    r.features = feats.get(r.rid)
+                plain.append(r)
+
+        async def call_plain():
+            results.update(await serve_requests(fe, plain))
+
+        await asyncio.gather(call_plain(), *coros)
+    for r in reqs:
+        if r.method == "generate":
+            results[r.rid] = eng.result(r.rid)
+    return results, stream_toks
+
+
+def _assert_results_equal(ref, got, stream_toks=None):
+    assert set(ref) == set(got)
+    for rid, a in ref.items():
+        b = got[rid]
+        assert a is not None and b is not None, rid
+        assert a.outcome == b.outcome == "ok", (rid, a.outcome, b.outcome)
+        assert list(a.tokens) == list(b.tokens), rid
+        if stream_toks is not None and rid in stream_toks:
+            assert stream_toks[rid] == list(a.tokens), rid
+        if a.logprobs is not None:
+            assert b.logprobs is not None and \
+                all(x == y for x, y in zip(a.logprobs, b.logprobs)), rid
+        if a.embedding is not None:
+            assert np.array_equal(a.embedding, b.embedding), rid
+
+
+# ---------------------------------------------------------------------------
+# streamed == batch, all four families (chaos rides in via chaos="env")
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_stream_matches_batch(family):
+    """Mixed generate/score/embed traffic streamed through the async
+    front-end must be bit-identical to the plain batch engine."""
+    cfg, params = _setup(family)
+    reqs, feats = _traffic(cfg)
+    ref = _batch_reference(cfg, params, *_traffic(cfg))
+    eng = _make_engine(cfg, params)
+    got, stream_toks = asyncio.run(_run_frontend(eng, reqs, feats))
+    _assert_results_equal(ref, got, stream_toks)
+    assert any(len(v) > 0 for v in stream_toks.values())
+
+
+def test_stream_matches_batch_silvia_all():
+    """The SILVIA pass pipeline under the front-end: streamed tokens
+    still equal the (equally silvia'd) batch engine."""
+    cfg, params = _setup("dense")
+    reqs, feats = _traffic(cfg, seed=23)
+    ref = _batch_reference(cfg, params, *_traffic(cfg, seed=23),
+                           silvia_passes="all")
+    eng = _make_engine(cfg, params, silvia_passes="all")
+    got, stream_toks = asyncio.run(_run_frontend(eng, reqs, feats))
+    _assert_results_equal(ref, got, stream_toks)
+
+
+def test_stream_no_overlap_matches_batch():
+    """overlap=False (sync two-stage loop) is the same bits too -- the
+    pipeline is a latency optimisation, never a semantic one."""
+    cfg, params = _setup("dense")
+    reqs, feats = _traffic(cfg, seed=3)
+    ref = _batch_reference(cfg, params, *_traffic(cfg, seed=3))
+    eng = _make_engine(cfg, params)
+    got, stream_toks = asyncio.run(
+        _run_frontend(eng, reqs, feats, overlap=False))
+    _assert_results_equal(ref, got, stream_toks)
+
+
+def test_stream_prefix_warm_matches_cold():
+    """Streaming through a WARM prefix cache (second serving of the same
+    trace on one engine) returns the same tokens as the cold pass and
+    actually hits the cache."""
+    cfg, params = _setup("dense")
+    eng = _make_engine(cfg, params, prefill_chunk=4, prefix_cache=64)
+    cold, cold_toks = asyncio.run(
+        _run_frontend(eng, _traffic(cfg, seed=5)[0], None))
+    warm_reqs = _traffic(cfg, seed=5)[0]
+    for r in warm_reqs:       # same prompts, fresh rids (one live engine)
+        r.rid += 100
+    warm, warm_toks = asyncio.run(_run_frontend(eng, warm_reqs, None))
+    assert eng.cache_info()["prefix_cache"]["hits"] > 0
+    for rid, toks in cold_toks.items():
+        assert warm_toks[rid + 100] == toks, rid
+    for rid, a in cold.items():
+        assert list(warm[rid + 100].tokens) == list(a.tokens), rid
+
+
+# ---------------------------------------------------------------------------
+# score == decode path
+# ---------------------------------------------------------------------------
+
+def test_score_matches_decode_path():
+    """Per-token completion logprobs from the serve path must equal a
+    teacher-forced prefill + decode_step replay, float-for-float."""
+    cfg, params = _setup("dense")
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(1, cfg.vocab, 9).astype(np.int32)
+    comp = rng.integers(1, cfg.vocab, 5).astype(np.int32)
+
+    async def score():
+        eng = _make_engine(cfg, params)
+        fe = AsyncFrontend(eng, clock=scheduler.FastForwardClock())
+        async with fe:
+            return await fe.score(prompt, comp)
+
+    got = asyncio.run(score())
+
+    logits, cache = lm.prefill(params, jnp.asarray(prompt[None]), cfg,
+                               cache_len=32)
+    ref = [methods.logprob_from_logits(
+        np.asarray(logits, np.float32)[0, 0], int(comp[0]))]
+    for i in range(len(comp) - 1):
+        logits, cache = lm.decode_step(
+            params, jnp.asarray([[comp[i]]], jnp.int32), cache,
+            jnp.asarray([len(prompt) + i], jnp.int32), cfg)
+        ref.append(methods.logprob_from_logits(
+            np.asarray(logits, np.float32)[0, 0], int(comp[i + 1])))
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# cancellation: explicit, disconnect, backlog
+# ---------------------------------------------------------------------------
+
+def test_cancellation_under_load():
+    """Disconnecting one stream mid-flight cancels that request (partial
+    tokens kept, slot freed) while concurrent requests still finish with
+    reference-exact tokens."""
+    cfg, params = _setup("dense")
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, cfg.vocab, 8).astype(np.int32)
+               for _ in range(3)]
+
+    async def go():
+        eng = _make_engine(cfg, params)
+        fe = AsyncFrontend(eng, clock=scheduler.FastForwardClock())
+        async with fe:
+            agen = fe.generate_stream(prompts[0], 40, rid=0)
+            partial = []
+            async for t in agen:
+                partial.append(t)
+                if len(partial) == 3:
+                    break
+            await agen.aclose()       # client disconnect -> cancel
+            survivors = await asyncio.gather(
+                fe.generate(prompts[1], 6, rid=1),
+                fe.generate(prompts[2], 6, rid=2))
+            for _ in range(400):      # let the cancel land in the loop
+                if eng.result(0) is not None:
+                    break
+                await asyncio.sleep(0.005)
+        return eng, fe, partial, survivors
+
+    eng, fe, partial, survivors = asyncio.run(go())
+    cancelled = eng.result(0)
+    assert cancelled is not None and cancelled.outcome == "cancelled"
+    assert list(cancelled.tokens)[:3] == partial
+    assert fe.stats["disconnect_cancels"] == 1
+    assert eng.cache_info()["robustness"]["cancelled_inflight"] >= 1
+    # survivors are unaffected: same bits as a solo batch run
+    for i, r in enumerate(survivors, start=1):
+        solo = _batch_reference(
+            cfg, params,
+            [methods.generate_request(0, prompts[i], 6)], None)[0]
+        assert r.outcome == "ok" and list(r.tokens) == list(solo.tokens)
+
+
+def test_stream_backlog_evicts_slow_client():
+    """A client that stops draining its bounded stream queue is shed:
+    the request is cancelled (not the server stalled)."""
+    cfg, params = _setup("dense")
+    rng = np.random.default_rng(13)
+
+    async def go():
+        eng = _make_engine(cfg, params)
+        fe = AsyncFrontend(eng, clock=scheduler.FastForwardClock(),
+                           stream_queue=2)
+        async with fe:
+            agen = fe.generate_stream(
+                rng.integers(1, cfg.vocab, 8).astype(np.int32), 40, rid=7)
+            it = agen.__aiter__()
+            await it.__anext__()      # first token, then stop draining
+            for _ in range(400):
+                if eng.result(7) is not None:
+                    break
+                await asyncio.sleep(0.005)
+            await agen.aclose()
+        return eng, fe
+
+    eng, fe = asyncio.run(go())
+    r = eng.result(7)
+    assert r is not None and r.outcome == "cancelled"
+    assert fe.stats["backlog_cancels"] >= 1
+
+
+def test_validation_error_surfaces_at_await():
+    cfg, params = _setup("dense")
+
+    async def go():
+        eng = _make_engine(cfg, params)
+        fe = AsyncFrontend(eng, clock=scheduler.FastForwardClock())
+        async with fe:
+            with pytest.raises(ValueError, match="max_cache_len"):
+                await fe.generate(np.arange(1, 200, dtype=np.int32), 5)
+
+    asyncio.run(go())
+
+
+# ---------------------------------------------------------------------------
+# ragged encoder lengths: zero-extension exactness across enc_len
+# ---------------------------------------------------------------------------
+
+def test_ragged_encdec_cross_enc_len_exact():
+    """A short encoder feature served under a LARGER enc_len capacity
+    must stream the same tokens as an engine whose capacity is the
+    snug bucket -- enc-length bucketing pads with zeros that the masked
+    cross-attention provably ignores."""
+    cfg, params = _setup("encdec")
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(1, cfg.vocab, 6).astype(np.int32)
+    feat = rng.standard_normal((5, cfg.d_model)).astype(np.float32)
+
+    def stream(enc_len):
+        async def go():
+            eng = _make_engine(cfg, params, enc_len=enc_len)
+            fe = AsyncFrontend(eng, clock=scheduler.FastForwardClock())
+            async with fe:
+                toks = []
+                async for t in fe.generate_stream(prompt, 6, rid=0,
+                                                  features=feat):
+                    toks.append(t)
+            return toks
+
+        return asyncio.run(go())
+
+    assert stream(ENC_LEN) == stream(8)
+
+
+# ---------------------------------------------------------------------------
+# sharded mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="mesh streaming needs 8 devices (XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+@pytest.mark.parametrize("mesh_shape", [(8, 1), (2, 4)])
+def test_stream_matches_batch_sharded(mesh_shape):
+    """Streaming through a sharded engine is the same bits as the
+    unsharded batch engine."""
+    cfg, params = _setup("dense")
+    reqs, feats = _traffic(cfg, n=6, seed=19)
+    ref = _batch_reference(cfg, params, *_traffic(cfg, n=6, seed=19))
+    mesh = make_mesh(mesh_shape, ("data", "model"))
+    with dctx.mesh_scope(mesh, ("data",), "model"):
+        # the slot axis shards over the dp extent, so it must divide it
+        eng = _make_engine(cfg, params, n_slots=mesh_shape[0])
+        got, stream_toks = asyncio.run(_run_frontend(eng, reqs, feats))
+    _assert_results_equal(ref, got, stream_toks)
+
+
+# ---------------------------------------------------------------------------
+# property: any traffic shape streams the batch engine's bits
+# ---------------------------------------------------------------------------
+
+def test_stream_property_random_traffic():
+    """Random method mixes x random mid-stream disconnects: surviving
+    streams byte-identical to the batch engine, disconnected ones end as
+    a strict prefix (cancelled) or the full result (finished first --
+    the disconnect raced completion)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    cfg, params = _setup("dense")
+
+    @hyp.settings(max_examples=5, deadline=None,
+                  suppress_health_check=list(hyp.HealthCheck))
+    @hyp.given(seed=st.integers(0, 10_000), n=st.integers(2, 6),
+               cut=st.integers(0, 2))
+    def prop(seed, n, cut):
+        reqs, feats = _traffic(cfg, n=n, seed=seed)
+        ref = _batch_reference(cfg, params, *_traffic(cfg, n=n, seed=seed))
+        eng = _make_engine(cfg, params)
+        gen_rids = [r.rid for r in reqs if r.method == "generate"]
+        drop = set(gen_rids[:cut])
+
+        async def go():
+            fe = AsyncFrontend(eng, clock=scheduler.FastForwardClock())
+            stream_toks = {}
+            async with fe:
+                async def stream_one(req):
+                    agen = fe.generate_stream(req.prompt,
+                                              req.max_new_tokens,
+                                              rid=req.rid)
+                    toks = []
+                    async for t in agen:
+                        toks.append(t)
+                        if req.rid in drop:
+                            break
+                    await agen.aclose()
+                    stream_toks[req.rid] = toks
+
+                plain = [r for r in reqs if r.method != "generate"]
+                await asyncio.gather(
+                    serve_requests(fe, plain),
+                    *(stream_one(r) for r in reqs
+                      if r.method == "generate"))
+                for _ in range(400):   # let raced cancels land
+                    if all(eng.result(r.rid) is not None for r in reqs):
+                        break
+                    await asyncio.sleep(0.005)
+            return stream_toks
+
+        stream_toks = asyncio.run(go())
+        for r in reqs:
+            got, want = eng.result(r.rid), ref[r.rid]
+            assert got is not None, r.rid
+            if r.rid in drop:
+                assert got.outcome in ("ok", "cancelled"), got.outcome
+                assert list(want.tokens)[:len(got.tokens)] \
+                    == list(got.tokens), r.rid
+            else:
+                assert got.outcome == "ok"
+                assert list(got.tokens) == list(want.tokens), r.rid
+                if r.method == "generate":
+                    assert stream_toks[r.rid] == list(want.tokens), r.rid
+
+    prop()
