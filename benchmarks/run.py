@@ -7,7 +7,6 @@ Prints ``name,us_per_call,derived`` CSV per table (derived = the paper's
 metric for that table: Ops/Unit + unit counts, or manual-vs-auto parity).
 """
 import argparse
-import sys
 
 
 def main() -> None:

@@ -174,7 +174,7 @@ def run_batch(params, cfg, trace, enc_feats, *, engine_kw) -> dict:
 
 def run(smoke: bool = False, silvia_passes: str = "off",
         family: str = "dense", n_requests: int | None = None,
-        rate: float | None = None) -> dict:
+        rate: float | None = None, trace_seed: int = 0) -> dict:
     arch = FAMILY_ARCHS[family]
     cfg = configs.get_reduced_config(arch)
     if smoke:
@@ -197,7 +197,8 @@ def run(smoke: bool = False, silvia_passes: str = "off",
     def trace():
         # a fresh Request list per run: engines mutate requests in place
         return scheduler.method_traffic(
-            seed=0, n_requests=n_req, rate=rate, prompt_lens=prompt_lens,
+            seed=trace_seed, n_requests=n_req, rate=rate,
+            prompt_lens=prompt_lens,
             gen_lens=gen_lens, vocab=cfg.vocab)
 
     enc_feats = None
@@ -263,10 +264,13 @@ def main():
     ap.add_argument("--n-requests", type=int, default=None)
     ap.add_argument("--rate", type=float, default=None,
                     help="Poisson arrival rate (req/s)")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="seed for the method-mix traffic trace "
+                         "(baselines use the default 0)")
     args = ap.parse_args()
     result = run(smoke=args.smoke, silvia_passes=args.silvia,
                  family=args.family, n_requests=args.n_requests,
-                 rate=args.rate)
+                 rate=args.rate, trace_seed=args.trace_seed)
     print(json.dumps(result, indent=2))
     name = f"serve_latency_{args.family}"
     common.write_bench_json(result, name)

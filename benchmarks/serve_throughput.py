@@ -269,7 +269,7 @@ def run(smoke: bool = False, silvia_passes: str = "off",
         n_requests: int | None = None, rate: float | None = None,
         family: str = "dense", mesh=None, chaos: str | None = None,
         device_loss: str | None = None, prefix_reuse: bool = False,
-        admit_budget: int | None = None) -> dict:
+        admit_budget: int | None = None, trace_seed: int = 0) -> dict:
     arch = FAMILY_ARCHS[family]
     cfg = configs.get_reduced_config(arch)
     rate_arg = rate
@@ -327,14 +327,14 @@ def run(smoke: bool = False, silvia_passes: str = "off",
     def traffic():
         if prefix_reuse:
             reqs = scheduler.shared_prefix_traffic(
-                seed=0, n_requests=n_req, rate=rate,
+                seed=trace_seed, n_requests=n_req, rate=rate,
                 n_prefixes=n_prefixes, prefix_len=prefix_len,
                 tail_lens=tail_lens, gen_lens=gen_lens, vocab=cfg.vocab,
                 zipf_a=zipf_a,
                 ttls=CHAOS_TTLS if chaos is not None else None)
         else:
             reqs = scheduler.synthetic_traffic(
-                seed=0, n_requests=n_req, rate=rate,
+                seed=trace_seed, n_requests=n_req, rate=rate,
                 prompt_lens=prompt_lens, gen_lens=gen_lens, vocab=cfg.vocab,
                 ttls=CHAOS_TTLS if chaos is not None else None)
         if family == "encdec":
@@ -467,6 +467,10 @@ def main():
     ap.add_argument("--n-requests", type=int, default=None)
     ap.add_argument("--rate", type=float, default=None,
                     help="Poisson arrival rate (req/s)")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="seed for the synthetic/shared-prefix traffic "
+                         "trace (one knob for BOTH builders; baselines "
+                         "use the default 0)")
     args = ap.parse_args()
     mesh = parse_mesh(args.mesh) if args.mesh else None
     if mesh is not None and mesh[0] * mesh[1] > jax.device_count():
@@ -481,7 +485,8 @@ def main():
                  family=args.family, mesh=mesh, chaos=args.chaos,
                  device_loss=args.device_loss,
                  prefix_reuse=args.prefix_reuse,
-                 admit_budget=args.admit_budget)
+                 admit_budget=args.admit_budget,
+                 trace_seed=args.trace_seed)
     print(json.dumps(result, indent=2))
     name = f"serve_throughput_{args.family}"
     if args.mesh:

@@ -9,6 +9,8 @@ matching `<name>.json` in --results, the comparable metrics are checked:
 * serve_throughput_*:  engine.agg_tok_s      (higher is better)
 * serve_latency_*:     overlap.stream_tok_s  (higher is better)
 * pipeline_overhead:   decode.fused_tok_s    (higher is better, if present)
+* spec_decode*:        spec_decode.tokens_per_dispatch (higher is better;
+                       deterministic for the same-config-draft smoke row)
 
 The job FAILS (exit 1) when a current metric drops more than
 `--threshold` (default 30%) below its committed baseline -- the AutoDSE
@@ -51,6 +53,16 @@ def _metric(name: str, payload: dict):
         try:
             return ("decode.fused_tok_s",
                     float(payload["decode"]["fused_tok_s"]))
+        except (KeyError, TypeError, ValueError):
+            return None
+    if name.startswith("spec_decode"):
+        # tokens emitted per target dispatch is DETERMINISTIC for the
+        # same-config-draft smoke row (acceptance is a pure function of
+        # seed/rid/prefix, never of host speed), so its baseline omits
+        # the host_class stamp and the gate arms on every runner
+        try:
+            return ("spec_decode.tokens_per_dispatch",
+                    float(payload["spec_decode"]["tokens_per_dispatch"]))
         except (KeyError, TypeError, ValueError):
             return None
     return None

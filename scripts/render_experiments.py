@@ -71,7 +71,6 @@ def roofline_table(rows):
         ("vlm", "decode"): "KV model-axis sharding + int8 KV",
     }
     fam = {r["arch"]: None for r in rows}
-    import importlib
     sys.path.insert(0, os.path.join(ROOT, "src"))
     from repro import configs
     for a in list(fam):

@@ -5,7 +5,6 @@ Use `get_config(name)` / `get_reduced_config(name)` (smoke-test scale) and
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 
 ARCHS = [

@@ -21,13 +21,11 @@ module provides what Algorithm 1 needs on that substrate:
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Any, Callable, Sequence
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 from jax.extend import core as jex_core
 
 Literal = jex_core.Literal
@@ -82,7 +80,6 @@ def alap_schedule(eqns: Sequence, outvars: Sequence) -> list:
     def_idx, _ = defs_uses(eqns, outvars)
     # consumers[i] = eqn indices that must come after eqn i
     consumers: list[set[int]] = [set() for _ in range(n)]
-    n_consumers_unplaced = [0] * n
     prev_effectful = None
     for i, eqn in enumerate(eqns):
         for v in eqn.invars:

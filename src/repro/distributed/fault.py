@@ -22,7 +22,7 @@ import dataclasses
 import hashlib
 import statistics
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 

@@ -19,7 +19,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 # Minimal TPU tile shapes per element width.
 TILE_32 = (8, 128)

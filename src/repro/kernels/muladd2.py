@@ -16,7 +16,6 @@ genuine in-lane accumulation, mirroring the paper's 7-deep DSP cascades.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ slices) -- see DESIGN.md sec. 2.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ bm=256, bn=256, bk=512 -> x 128 KiB + w 128 KiB + acc 256 KiB.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

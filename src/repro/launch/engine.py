@@ -117,6 +117,7 @@ from repro.kernels import registry
 from repro.launch import methods as smethods
 from repro.launch import prefix_cache as pfx
 from repro.launch import resilience as res
+from repro.launch import sampling
 from repro.launch import scheduler
 from repro.launch import serve
 from repro.models import lm
@@ -219,12 +220,21 @@ def _build_bundle(cfg, silvia_passes: str, census: dict,
     if passes:
         decode_fn = silvia.optimize(decode_fn, passes)
 
-    def decode_scan(params, tok, cache, pos, active, n_steps):
+    def decode_scan(params, tok, cache, pos, active, samp, n_steps):
+        key, temp, top_k, top_p, plen = samp
+
         def step(carry, _):
             tok, st, pos, bad = carry
             logits, st = decode_fn(params, tok, st, pos, active)
-            nxt = jnp.argmax(logits[:, -1, :], axis=-1)
-            nxt = nxt.astype(jnp.int32)[:, None]
+            # per-request sampling (launch/sampling.py): greedy rows take
+            # the literal argmax path the pre-sampling engine ran; sampled
+            # rows draw under the counter-based key folded with the
+            # generated-token index pos - plen + 1, so a slot's stream is
+            # a pure function of (seed, rid, logits) -- batch composition,
+            # compaction and replay cannot move its bits
+            nxt = sampling.sample(logits[:, -1, :], key, temp, top_k,
+                                  top_p, pos - plen + 1)
+            nxt = nxt[:, None]
             nxt = jnp.where(active[:, None], nxt, 0)
             # output-validation guard: flag slots whose sampled-from logits
             # row went non-finite, so the host can quarantine THAT request
@@ -284,9 +294,10 @@ def _build_bundle(cfg, silvia_passes: str, census: dict,
         return emb, bad
 
     if plan is None:
-        @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(2,))
-        def segment(params, tok, cache, pos, active, n_steps):
-            return decode_scan(params, tok, cache, pos, active, n_steps)
+        @functools.partial(jax.jit, static_argnums=(6,), donate_argnums=(2,))
+        def segment(params, tok, cache, pos, active, samp, n_steps):
+            return decode_scan(params, tok, cache, pos, active, samp,
+                               n_steps)
 
         chunk_step = jax.jit(decode_fn, donate_argnums=(2,))
         prefill = functools.partial(jax.jit,
@@ -325,21 +336,26 @@ def _shard_bundle_fns(plan: _MeshPlan, decode_scan, decode_fn, prefill_fn,
         # over params structure (plain vs QTensor leaves), like jit
         return dshard.param_pspecs(params, mesh, None)
 
-    @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(2,))
-    def segment(params, tok, cache, pos, active, n_steps):
+    @functools.partial(jax.jit, static_argnums=(6,), donate_argnums=(2,))
+    def segment(params, tok, cache, pos, active, samp, n_steps):
         pspecs = pspecs_for(params)
 
-        def body(params, tok, cache, pos, active):
+        def body(params, tok, cache, pos, active, samp):
             with tp_ctx():
                 params = dshard.gather_sharded(params, pspecs)
-                return decode_scan(params, tok, cache, pos, active, n_steps)
+                return decode_scan(params, tok, cache, pos, active, samp,
+                                   n_steps)
 
+        # the sampling page shards like every other per-slot array: slot
+        # axis over dp.  The sampler is per-row (no cross-row reduction),
+        # so sharded sampled tokens stay bit-identical to single-device
         fn = shard_map(body, mesh=mesh,
-                       in_specs=(pspecs, P(dp), sspecs, P(dp), P(dp)),
+                       in_specs=(pspecs, P(dp), sspecs, P(dp), P(dp),
+                                 (P(dp),) * 5),
                        out_specs=(P(None, dp), P(dp), sspecs, P(dp),
                                   P(dp)),
                        check_rep=False)
-        return fn(params, tok, cache, pos, active)
+        return fn(params, tok, cache, pos, active, samp)
 
     @functools.partial(jax.jit, donate_argnums=(2,))
     def chunk_step(params, tok, cache, pos, active):
@@ -402,6 +418,196 @@ def _engine_bundle(cfg, silvia_passes: str, census: dict,
         (cfg, silvia_passes, tuple(sorted(census.items())), "engine",
          None if plan is None else plan.key),
         lambda: _build_bundle(cfg, silvia_passes, census, plan))
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecDecodeConfig:
+    """Self-speculative decoding knobs (ServeEngine `spec_decode=`).
+
+    A small-config draft model of the SAME family free-runs `k` tokens
+    per slot, then the target verifies all k in one batched
+    `chunk_step`-shaped dispatch -- SILVIA's pack-then-check rewrite at
+    the serve-loop level (DESIGN.md sec. 12).  Emitted tokens are always
+    the TARGET's tokens under a teacher-forced prefix, so streams are
+    byte-identical to the non-speculative engine regardless of how often
+    the draft is right; acceptance only changes how many target
+    dispatches that takes."""
+    draft_params: object
+    draft_cfg: object
+    k: int = 3
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError("spec_decode.k must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class _SpecFns:
+    """Compiled speculative-decode callables (LRU-cached like the engine
+    bundle, under a "spec" variant key)."""
+    draft: object      # free-running sampled scan w/ const-leaf snapshots
+    verify: object     # teacher-forced verify + in-graph accept/rollback
+    rollback: object   # const-leaf snapshot-restore select
+
+
+def _build_spec_fns(cfg, silvia_passes: str, census: dict,
+                    spec: slot_state.SlotStateSpec,
+                    plan: Optional[_MeshPlan] = None) -> _SpecFns:
+    passes = serve.SILVIA_PASS_SETS[silvia_passes]
+
+    def decode_fn(p, tok, state, pos, active):
+        return lm.decode_step(p, tok, state, pos, cfg, active=active)
+
+    if passes:
+        decode_fn = silvia.optimize(decode_fn, passes)
+
+    def one_step(params, tok, st, pos, active, samp):
+        key, temp, top_k, top_p, plen = samp
+        logits, st = decode_fn(params, tok, st, pos, active)
+        last = logits[:, -1, :]
+        g = sampling.sample(last, key, temp, top_k, top_p, pos - plen + 1)
+        bad = active & ~jnp.all(jnp.isfinite(last), axis=-1)
+        return g, st, bad
+
+    def draft_scan(params, tok, cache, pos, active, samp, n_steps):
+        # free-running sampled decode (the DRAFT side of a round): the
+        # per-step snapshots of the constant-size leaves let the round
+        # roll the draft back to exactly the accepted prefix afterwards
+        # (rollback below); length-paged leaves need no snapshot --
+        # overrun rows are stale-but-masked (engine docstring)
+        def step(carry, _):
+            tok, st, pos = carry
+            g, st, _ = one_step(params, tok, st, pos, active, samp)
+            nxt = jnp.where(active[:, None], g[:, None], 0)
+            pos = jnp.where(active, pos + 1, pos)
+            return (nxt, st, pos), (g, tuple(spec.const_leaves(st)))
+
+        (_, cache, _), (seq, snaps) = jax.lax.scan(
+            step, (tok, cache, pos), None, length=n_steps)
+        return seq, cache, snaps
+
+    def verify_scan(params, cache, pos, active, samp, xs):
+        # teacher-forced verify of k drafted tokens in ONE batched
+        # dispatch: xs is [k+1, B, 1] (the pending token, then the k
+        # drafts).  The target's own token at each position rides out in
+        # g_seq -- emitted streams are the target's stream by
+        # construction -- and the accept count m plus the state rollback
+        # happen in-graph, so accept/rollback is one masked slot_state
+        # update per round
+        def step(carry, tok):
+            st, p = carry
+            g, st, bad = one_step(params, tok, st, p, active, samp)
+            return (st, jnp.where(active, p + 1, p)), \
+                (g, bad, tuple(spec.const_leaves(st)))
+
+        (cache, _), (g_seq, bad_seq, snaps) = jax.lax.scan(
+            step, (cache, pos), xs)
+        k = xs.shape[0] - 1
+        drafts = xs[1:, :, 0]
+        # m = longest accepted prefix: cumprod of the running equality
+        eq = (drafts == g_seq[:k]).astype(jnp.int32)
+        m = jnp.sum(jnp.cumprod(eq, axis=0), axis=0)
+        cache = spec.rollback_select(cache, snaps, m)
+        pos_out = jnp.where(active, pos + m + 1, pos)
+        # only steps the round actually consumed (j <= m) can poison it
+        used = jnp.arange(k + 1, dtype=jnp.int32)[:, None] <= m[None, :]
+        bad = jnp.any(bad_seq & used, axis=0)
+        return g_seq, m, cache, pos_out, bad
+
+    def rollback_fn(cache, snaps, idx):
+        return spec.rollback_select(cache, snaps, idx)
+
+    if plan is None:
+        draft = functools.partial(jax.jit, static_argnums=(6,),
+                                  donate_argnums=(2,))(draft_scan)
+        verify = functools.partial(jax.jit,
+                                   donate_argnums=(1,))(verify_scan)
+        rollback = functools.partial(jax.jit,
+                                     donate_argnums=(0,))(rollback_fn)
+    else:
+        draft, verify, rollback = _shard_spec_fns(
+            plan, spec, draft_scan, verify_scan, rollback_fn)
+
+    pin = lambda fn: serve._pin_lowerings(fn, census)
+    return _SpecFns(pin(draft), pin(verify), pin(rollback))
+
+
+def _shard_spec_fns(plan: _MeshPlan, spec: slot_state.SlotStateSpec,
+                    draft_scan, verify_scan, rollback_fn):
+    """shard_map'd speculative-decode fns over plan.mesh -- the same
+    layout rules as _shard_bundle_fns (slot axes over dp, samp page over
+    dp, weights gathered whole), so sharded spec rounds emit bitwise the
+    single-device tokens.  Snapshot stacks carry a LEADING step axis, so
+    their specs are the state specs shifted right by one."""
+    mesh, dp = plan.mesh, plan.dp
+    sspecs = plan.state_specs()
+    flat_specs = jax.tree_util.tree_leaves(
+        sspecs, is_leaf=lambda x: isinstance(x, P))
+    snap_specs = tuple(P(None, *tuple(s))
+                       for s, la in zip(flat_specs, spec.length_axes)
+                       if la is None)
+
+    def tp_ctx():
+        if plan.tp.active:
+            return dctx.tp_scope(plan.model_axis, plan.tp.size,
+                                 attn=plan.tp.attn, ssm=plan.tp.ssm)
+        return contextlib.nullcontext()
+
+    def pspecs_for(params):
+        return dshard.param_pspecs(params, mesh, None)
+
+    @functools.partial(jax.jit, static_argnums=(6,), donate_argnums=(2,))
+    def draft(params, tok, cache, pos, active, samp, n_steps):
+        pspecs = pspecs_for(params)
+
+        def body(params, tok, cache, pos, active, samp):
+            with tp_ctx():
+                params = dshard.gather_sharded(params, pspecs)
+                return draft_scan(params, tok, cache, pos, active, samp,
+                                  n_steps)
+
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(pspecs, P(dp), sspecs, P(dp), P(dp),
+                                 (P(dp),) * 5),
+                       out_specs=(P(None, dp), sspecs, snap_specs),
+                       check_rep=False)
+        return fn(params, tok, cache, pos, active, samp)
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def verify(params, cache, pos, active, samp, xs):
+        pspecs = pspecs_for(params)
+
+        def body(params, cache, pos, active, samp, xs):
+            with tp_ctx():
+                params = dshard.gather_sharded(params, pspecs)
+                return verify_scan(params, cache, pos, active, samp, xs)
+
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(pspecs, sspecs, P(dp), P(dp),
+                                 (P(dp),) * 5, P(None, dp)),
+                       out_specs=(P(None, dp), P(dp), sspecs, P(dp),
+                                  P(dp)),
+                       check_rep=False)
+        return fn(params, cache, pos, active, samp, xs)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def rollback(cache, snaps, idx):
+        fn = shard_map(rollback_fn, mesh=mesh,
+                       in_specs=(sspecs, snap_specs, P(dp)),
+                       out_specs=sspecs,
+                       check_rep=False)
+        return fn(cache, snaps, idx)
+
+    return draft, verify, rollback
+
+
+def _spec_fns(cfg, silvia_passes: str, census: dict,
+              spec: slot_state.SlotStateSpec,
+              plan: Optional[_MeshPlan] = None) -> _SpecFns:
+    return serve._DECODE_CACHE.get_or_build(
+        (cfg, silvia_passes, tuple(sorted(census.items())), "spec",
+         None if plan is None else plan.key),
+        lambda: _build_spec_fns(cfg, silvia_passes, census, spec, plan))
 
 
 @dataclasses.dataclass
@@ -474,7 +680,8 @@ class ServeEngine:
                  resilience: Optional[res.ResilienceConfig] = None,
                  chaos: object = "env",
                  prefix_cache: Optional[int] = None,
-                 admit_token_budget: Optional[int] = None):
+                 admit_token_budget: Optional[int] = None,
+                 spec_decode: Optional[SpecDecodeConfig] = None):
         if cfg.family == "encdec" and enc_len is None:
             raise ValueError("encdec serving needs enc_len (the fixed "
                              "encoder length of every request's features)")
@@ -498,6 +705,23 @@ class ServeEngine:
             # whole chunks, or the prompt tail would be silently dropped
             raise ValueError("max_cache_len must be a multiple of "
                              "prefill_chunk")
+        if spec_decode is not None:
+            if cfg.family == "encdec":
+                raise ValueError("spec_decode does not support encdec "
+                                 "serving (draft prefill has no ragged "
+                                 "feature path)")
+            if spec_decode.draft_cfg.family != cfg.family:
+                raise ValueError(
+                    f"spec_decode draft must be the SAME family as the "
+                    f"target (self-speculation): draft is "
+                    f"{spec_decode.draft_cfg.family!r}, target is "
+                    f"{cfg.family!r}")
+            if spec_decode.draft_cfg.vocab != cfg.vocab:
+                raise ValueError("spec_decode draft/target vocab mismatch")
+            if prefix_cache is not None or prefill_chunk is not None:
+                raise ValueError("spec_decode composes with full-prefill "
+                                 "engines only (prefill_chunk=None, "
+                                 "prefix_cache=None)")
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -566,6 +790,45 @@ class ServeEngine:
             self._cache = jax.device_put(
                 self._cache, dshard.to_shardings(self._plan.state_specs(),
                                                  mesh))
+        # per-slot sampling page (launch/sampling.py): host-resident like
+        # _tok/_pos, shipped [:bb] as a segment operand each dispatch;
+        # registered as a slot_state family so its layout is probed, not
+        # hand-declared, and it survives admit/evict/compaction/replay by
+        # the same bookkeeping as every other per-slot array
+        self._samp = sampling.host_page(n_slots)
+        # -- self-speculative decoding (SpecDecodeConfig) --
+        self._sd = spec_decode
+        self._spec_stats = {"rounds": 0, "drafted": 0, "accepted": 0,
+                            "emitted": 0, "target_dispatches": 0}
+        if spec_decode is not None:
+            dcfg = spec_decode.draft_cfg
+            self._draft_spec = slot_state.spec_for(dcfg)
+            self._draft_plan = _mesh_plan(dcfg, self._draft_spec, {})
+            self._draft_bundle = _engine_bundle(dcfg, silvia_passes,
+                                                self._lowerings,
+                                                self._draft_plan)
+            self._sfns = _spec_fns(cfg, silvia_passes, self._lowerings,
+                                   self._spec, self._plan)
+            self._dfns = _spec_fns(dcfg, silvia_passes, self._lowerings,
+                                   self._draft_spec, self._draft_plan)
+            # families whose draft state has constant-size leaves need the
+            # explicit snapshot-restore dispatch after each round; pure
+            # length-paged drafts roll back for free (stale rows masked)
+            self._draft_const = any(
+                la is None for la in self._draft_spec.length_axes)
+            self._draft_params = spec_decode.draft_params
+            self._draft_cache = self._draft_spec.init_state(n_slots,
+                                                            max_cache_len)
+            if self._draft_plan is not None:
+                dmesh = self._draft_plan.mesh
+                self._draft_params = jax.device_put(
+                    self._draft_params, dshard.to_shardings(
+                        dshard.param_pspecs(spec_decode.draft_params,
+                                            dmesh, dcfg), dmesh))
+                self._draft_cache = jax.device_put(
+                    self._draft_cache,
+                    dshard.to_shardings(self._draft_plan.state_specs(),
+                                        dmesh))
         self._tok = np.zeros((n_slots, 1), np.int32)
         self._pos = np.zeros((n_slots,), np.int32)
         self._active = np.zeros((n_slots,), bool)
@@ -581,7 +844,7 @@ class ServeEngine:
             else res.ResilienceConfig()
         self._chaos = res.chaos_from_env() if chaos == "env" else chaos
         self._site_counts = {"segment": 0, "prefill": 0, "chunk": 0,
-                             "embed": 0}
+                             "embed": 0, "draft": 0, "verify": 0}
         self._replay: List[List[int]] = [[] for _ in range(n_slots)]
         # score: remaining teacher-forced completion tokens per slot --
         # drained through the SAME single-token chunk path as recovery
@@ -698,6 +961,7 @@ class ServeEngine:
         self._tok[slot] = 0
         self._replay[slot] = []
         self._score[slot] = []
+        sampling.clear_row(self._samp, slot)
         if self._prefix is not None and self._slot_pins[slot]:
             self._prefix.release(self._slot_pins[slot])
         self._slot_pins[slot] = ()
@@ -727,6 +991,10 @@ class ServeEngine:
                             if not self._active[i]], np.int64)
         perm = np.concatenate([live, holes])
         self._cache = self._spec.permute_slots(self._cache, perm)
+        self._samp = sampling.permute(self._samp, perm)
+        if self._sd is not None:
+            self._draft_cache = self._draft_spec.permute_slots(
+                self._draft_cache, perm)
         self._tok = self._tok[perm]
         self._pos = self._pos[perm]
         self._active = self._active[perm]
@@ -912,6 +1180,17 @@ class ServeEngine:
             # a length axis (SSM/conv state, cross-KV) are reset wholesale
             self._cache = self._spec.admit(self._cache, rows, slots, g,
                                            t_pre=t_pre)
+            if self._sd is not None:
+                # draft prefill: same prompts, same bucket, same slots --
+                # draft and target stay position-synchronized (they share
+                # self._pos) from admission through every round/replay
+                self._graphs.add(("dprefill", bb, sb, t_pre))
+                _, _, d_rows, _ = self._guarded(
+                    "draft", self._draft_bundle.prefill,
+                    self._draft_params, inputs, jnp.asarray(lens - 1),
+                    t_pre, None)
+                self._draft_cache = self._draft_spec.admit(
+                    self._draft_cache, d_rows, slots, g, t_pre=t_pre)
             pins: List[tuple] = [()] * g
         elif self.prefill_chunk is not None:
             tok0, bad0, slots, pins, last = self._prefix_admit_chunked(
@@ -937,6 +1216,9 @@ class ServeEngine:
         an {index: row} dict); score admissions read their first logprob
         from it (score rows never take the terminal-hit shortcut, so the
         row is always present for them)."""
+        # writable copy: np.asarray over a device array is read-only, and
+        # sampled admissions override their row's tok0 below
+        tok0 = np.array(tok0)
         for i, r in enumerate(group):
             slot = int(slots[i])
             self._admitting = [x for x in self._admitting if x is not r]
@@ -959,6 +1241,17 @@ class ServeEngine:
             # pins transfer to the slot BEFORE any eviction path below,
             # so _evict is the single release point for owned pins
             self._slot_pins[slot] = tuple(pins[i])
+            if r.method == "generate" and not sampling.is_greedy(r):
+                # sampled first token, recomputed host-side from this
+                # row's final prefill logits at generated-token index 0
+                # (bitwise the in-scan sample: the sampler is per-row).
+                # Non-greedy rows never take the terminal-hit shortcut,
+                # so the row is always present; the pool keeps the GREEDY
+                # argmax token, so cached entries stay policy-free
+                tok0[i, 0] = sampling.expected_token(r, last[i], 0)
+            # the slot's sampling-page row: policy + counter key +
+            # prompt_len, consumed by every segment/spec dispatch
+            sampling.write_row(self._samp, slot, r)
             if r.method == "score":
                 # teacher-forced scoring: the prefill's last logits row is
                 # the distribution completion[0] is scored under; the rest
@@ -1070,8 +1363,11 @@ class ServeEngine:
             # score requests need the final LOGITS row, which pooled pages
             # don't carry -- they always take the prefill path (and still
             # donate their pages for later generate hits); skipping lookup
-            # keeps their traffic out of the hit/miss stats and LRU order
-            hit = self._prefix.lookup(r) if r.method != "score" else None
+            # keeps their traffic out of the hit/miss stats and LRU order.
+            # Sampled (non-greedy) requests also need the row: a pooled
+            # entry's tok0 is the GREEDY token, theirs must be re-sampled
+            hit = self._prefix.lookup(r) \
+                if r.method != "score" and sampling.is_greedy(r) else None
             if hit is None or hit.terminal is None:
                 miss_idx.append(i)
                 continue
@@ -1094,7 +1390,9 @@ class ServeEngine:
                 jnp.asarray(lens - 1), t_pre, self.enc_len)
             stok0 = np.asarray(stok0)
             sbad0 = np.asarray(sbad0)
-            need_last = any(group[i].method == "score" for i in miss_idx)
+            need_last = any(group[i].method == "score"
+                            or not sampling.is_greedy(group[i])
+                            for i in miss_idx)
             slast_np = np.asarray(slast) if need_last else None
             sub_slots = slots[np.asarray(miss_idx, np.int64)]
             self._cache = self._spec.admit(self._cache, rows, sub_slots,
@@ -1150,7 +1448,11 @@ class ServeEngine:
                 resume[i] = 0
                 continue
             hit = self._prefix.lookup(r)
-            if hit.terminal is not None:
+            if hit.terminal is not None and sampling.is_greedy(r):
+                # terminal shortcut is greedy-only: the pooled tok0 is
+                # the argmax token.  A sampled request still rides any
+                # chain hits below and re-runs its final chunk, which
+                # recovers the logits row its tok0 is sampled from
                 cache = self._spec.write_row_pages(cache, i, 0,
                                                    hit.terminal.pages)
                 term[i] = hit.terminal
@@ -1291,7 +1593,7 @@ class ServeEngine:
             "segment", self._bundle.segment,
             self.params, jnp.asarray(self._tok[:bb]), cache_in,
             jnp.asarray(self._pos[:bb]), jnp.asarray(self._active[:bb]),
-            n_steps)
+            sampling.operand(self._samp, bb), n_steps)
         if fast:
             self._cache = cache_out
         else:
@@ -1347,6 +1649,119 @@ class ServeEngine:
                 self._finish(req, now)
                 self._evict(slot)
 
+    # -- self-speculative decoding (SpecDecodeConfig) ------------------------
+
+    def _spec_round(self, clock: scheduler.Clock) -> None:
+        """One speculative round: the draft free-runs k+1 sampled steps
+        (k drafts, plus the consumption step a full acceptance needs),
+        the target verifies all k drafts in ONE batched dispatch, and
+        both states roll back to the accepted prefix in-graph -- SILVIA's
+        speculatively-pack / verify-legality / roll-back-on-conflict
+        rewrite at the serve-loop level (DESIGN.md sec. 12).
+
+        Emitted tokens are always the TARGET's g_seq tokens under a
+        teacher-forced prefix, so streams are byte-identical to the
+        non-speculative engine no matter how often the draft is right;
+        acceptance only changes how many tokens one target dispatch
+        yields (tokens-per-dispatch, benchmarks/spec_decode.py).  Both
+        models sample under the SAME per-slot counter keys, so acceptance
+        is a pure function of (seed, rid, token prefix) -- recovery
+        replay is therefore acceptance-history-exact by construction."""
+        k = self._sd.k
+        hi = int(np.max(np.nonzero(self._active)[0])) + 1
+        bb = scheduler.bucket_pow2(hi, minimum=self.min_batch_bucket,
+                                   maximum=self.n_slots)
+        t_b = None
+        if self._spec.has_length_axis:
+            # the verify scan writes rows pos..pos+k (overruns clamp into
+            # the slot's own discarded row, as in decode_scan)
+            need = int(np.max(self._pos[:bb][self._active[:bb]])) + k + 1
+            t_b = scheduler.bucket_pow2(min(need, self.max_cache_len),
+                                        minimum=self.min_len_bucket,
+                                        maximum=self.max_cache_len)
+        self._graphs.add(("draft", bb, t_b, k + 1))
+        self._graphs.add(("verify", bb, t_b, k + 1))
+        samp = sampling.operand(self._samp, bb)
+        tok = jnp.asarray(self._tok[:bb])
+        pos = jnp.asarray(self._pos[:bb])
+        active = jnp.asarray(self._active[:bb])
+        fast = bb == self.n_slots and (t_b is None
+                                       or t_b == self.max_cache_len)
+        d_in = self._draft_cache if fast else \
+            self._draft_spec.slice_live(self._draft_cache, bb, t_b)
+        d_seq, d_cache, d_snaps = self._guarded(
+            "draft", self._dfns.draft, self._draft_params, tok, d_in,
+            pos, active, samp, k + 1)
+        # the verify dispatch consumes the pending token then the k
+        # drafts, teacher-forced
+        xs = jnp.concatenate([tok[None], d_seq[:k, :, None]], axis=0)
+        c_in = self._cache if fast else \
+            self._spec.slice_live(self._cache, bb, t_b)
+        g_seq, m, c_out, pos_out, bad = self._guarded(
+            "verify", self._sfns.verify, self.params, c_in, pos, active,
+            samp, xs)
+        if self._draft_const:
+            # constant-size draft leaves restore from the per-step
+            # snapshots; pure length-paged drafts roll back for free
+            self._graphs.add(("rollback", bb, t_b, k + 1))
+            d_cache = self._dfns.rollback(d_cache, d_snaps, m)
+        if fast:
+            self._cache = c_out
+            self._draft_cache = d_cache
+        else:
+            self._cache = self._spec.merge_live(self._cache, c_out,
+                                                bb, t_b)
+            self._draft_cache = self._draft_spec.merge_live(
+                self._draft_cache, d_cache, bb, t_b)
+        self.occupancy.append(float(np.sum(self._active)) / self.n_slots)
+        self._pos[:bb] = np.asarray(pos_out)
+        self._spec_harvest(np.asarray(g_seq), np.asarray(m),
+                           np.asarray(bad), clock.now())
+
+    def _spec_harvest(self, g_seq: np.ndarray, m: np.ndarray,
+                      bad: np.ndarray, now: float) -> None:
+        """Host bookkeeping after a round: per live slot, emit the m+1
+        target tokens the round settled (the accepted drafts' positions
+        plus the first disagreeing/extending target token) -- the same
+        stop-token/remaining logic as _harvest, so streams truncate
+        identically."""
+        k1, bb = g_seq.shape
+        self._spec_stats["rounds"] += 1
+        self._spec_stats["target_dispatches"] += 1
+        for slot in range(bb):
+            req = self._slot_req[slot]
+            if req is None or not self._active[slot]:
+                continue
+            if bad[slot]:
+                self._robust["quarantined"] += 1
+                self._finish(req, now, res.FAILED,
+                             "non-finite logits during decode")
+                self._evict(slot)
+                self._scrub(slot)
+                continue
+            self._spec_stats["drafted"] += k1 - 1
+            self._spec_stats["accepted"] += int(m[slot])
+            e = int(m[slot]) + 1
+            take = int(min(self._remaining[slot], e))
+            toks = g_seq[:take, slot]
+            done = False
+            if req.stop_tokens:
+                hits = np.nonzero(np.isin(toks, req.stop_tokens))[0]
+                if hits.size:
+                    toks = toks[:int(hits[0]) + 1]
+                    done = True
+            req.tokens.extend(int(t) for t in toks)
+            self.total_generated += len(toks)
+            self._spec_stats["emitted"] += len(toks)
+            self._remaining[slot] -= len(toks)
+            if done or self._remaining[slot] == 0:
+                self._finish(req, now)
+                self._evict(slot)
+                continue
+            # the new pending token: the target's token right after the
+            # last accepted draft (pos was advanced to p+m+1 in-graph)
+            self._tok[slot] = g_seq[e - 1, slot]
+
     # -- resilience: chaos sites, expiry, replay, recovery ------------------
 
     def _guarded(self, kind: str, fn, *args):
@@ -1394,6 +1809,16 @@ class ServeEngine:
             self._cache = jax.device_put(
                 self._cache, dshard.to_shardings(self._plan.state_specs(),
                                                  self._plan.mesh))
+        if self._sd is not None:
+            # the draft saw the same poisoned row: scrub its page too
+            dz = self._draft_spec.init_state(1, self.max_cache_len)
+            self._draft_cache = self._draft_spec.admit(
+                self._draft_cache, dz, np.asarray([slot], np.int32), 1)
+            if self._draft_plan is not None:
+                self._draft_cache = jax.device_put(
+                    self._draft_cache,
+                    dshard.to_shardings(self._draft_plan.state_specs(),
+                                        self._draft_plan.mesh))
 
     def _drain_replay(self, clock: scheduler.Clock) -> None:
         """Teacher-forced replay of recovered requests' recorded tokens,
@@ -1447,12 +1872,33 @@ class ServeEngine:
         else:
             self._cache = self._spec.merge_live(self._cache, cache_out,
                                                 bb, t_b)
+        if self._sd is not None:
+            # the draft teacher-forces the same token at the same
+            # position, so draft state stays replay-synchronized and the
+            # post-recovery rounds draft from exactly the state a
+            # fault-free run would have -- acceptance-history-exact
+            self._graphs.add(("dchunk", bb, 1, t_b))
+            d_in = self._draft_cache if fast else \
+                self._draft_spec.slice_live(self._draft_cache, bb, t_b)
+            _, d_out = self._guarded(
+                "draft", self._draft_bundle.chunk_step,
+                self._draft_params, jnp.asarray(self._tok[:bb]), d_in,
+                jnp.asarray(self._pos[:bb]), jnp.asarray(replaying))
+            if fast:
+                self._draft_cache = d_out
+            else:
+                self._draft_cache = self._draft_spec.merge_live(
+                    self._draft_cache, d_out, bb, t_b)
         last = logits[:, -1, :]
         nxt = np.asarray(jnp.argmax(last, axis=-1))
         bad = np.asarray(~jnp.all(jnp.isfinite(last), axis=-1))
-        # full rows only transfer when a score slot needs its logprob
-        last_np = np.asarray(last) \
-            if any(self._score[s] for s in range(bb)) else None
+        # full rows transfer when a score slot needs its logprob, or a
+        # sampled slot needs replay verification (sampling.sample_host)
+        need_rows = any(self._score[s] for s in range(bb)) or any(
+            self._replay[s] and self._slot_req[s] is not None
+            and not sampling.is_greedy(self._slot_req[s])
+            for s in range(bb))
+        last_np = np.asarray(last) if need_rows else None
         for slot in range(bb):
             if not replaying[slot]:
                 continue
@@ -1476,9 +1922,19 @@ class ServeEngine:
                 continue
             expect = self._replay[slot].pop(0)
             self._robust["replayed_tokens"] += 1
-            # host argmax over identical logits bits == the in-scan
-            # argmax (comparison-based, no float accumulation)
-            if int(nxt[slot]) != expect:
+            req = self._slot_req[slot]
+            # greedy: host argmax over identical logits bits == the
+            # in-scan argmax (comparison-based, no float accumulation).
+            # Sampled: recompute the token through the SAME jitted
+            # sampler on this row (sampling.expected_token) -- the
+            # counter key needs only (seed, rid, t), no sampler state
+            if sampling.is_greedy(req):
+                actual = int(nxt[slot])
+            else:
+                actual = sampling.expected_token(
+                    req, last_np[slot],
+                    int(self._pos[slot]) - req.prompt_len + 1)
+            if actual != expect:
                 self._robust["replay_divergence"] += 1
             self._tok[slot] = expect       # teacher forcing
             self._pos[slot] += 1
@@ -1518,6 +1974,20 @@ class ServeEngine:
         self._bundle = _engine_bundle(self.cfg, self.silvia_passes,
                                       self._lowerings, self._plan)
         self.params = dfault.elastic_remesh(self.params, new_mesh, self.cfg)
+        if self._sd is not None:
+            dcfg = self._sd.draft_cfg
+            with dctx.mesh_scope(new_mesh, old.dp_axes, old.model_axis):
+                self._draft_plan = _mesh_plan(dcfg, self._draft_spec, {})
+            self._draft_bundle = _engine_bundle(dcfg, self.silvia_passes,
+                                                self._lowerings,
+                                                self._draft_plan)
+            self._sfns = _spec_fns(self.cfg, self.silvia_passes,
+                                   self._lowerings, self._spec, self._plan)
+            self._dfns = _spec_fns(dcfg, self.silvia_passes,
+                                   self._lowerings, self._draft_spec,
+                                   self._draft_plan)
+            self._draft_params = dfault.elastic_remesh(
+                self._draft_params, new_mesh, dcfg)
         self._graphs = set()
         self._robust["degraded"] += 1
         if self._prefix is not None:
@@ -1566,6 +2036,15 @@ class ServeEngine:
             self._cache = jax.device_put(
                 self._cache, dshard.to_shardings(self._plan.state_specs(),
                                                  self._plan.mesh))
+        if self._sd is not None:
+            self._draft_cache = self._draft_spec.init_state(
+                self.n_slots, self.max_cache_len)
+            if self._draft_plan is not None:
+                self._draft_cache = jax.device_put(
+                    self._draft_cache,
+                    dshard.to_shardings(self._draft_plan.state_specs(),
+                                        self._draft_plan.mesh))
+        self._samp = sampling.host_page(self.n_slots)
         self._tok[:] = 0
         self._pos[:] = 0
         self._active[:] = False
@@ -1635,6 +2114,12 @@ class ServeEngine:
         self._drain_replay(clock)
         if not self._active.any():
             return None, bool(admitted or expired)
+        if self._sd is not None:
+            # speculative rounds are synchronous (draft -> verify ->
+            # rollback -> harvest); there is no pending segment to
+            # double-buffer, the round IS the step
+            self._spec_round(clock)
+            return None, True
         return self._begin_segment(), True
 
     def _step_inner(self, clock: scheduler.Clock,
@@ -1795,7 +2280,14 @@ class ServeEngine:
         seg = len(self.batch_buckets) * max(1, len(self.len_buckets))
         pre = len(self.admission_batch_buckets) \
             * len(self.prompt_buckets) * enc
-        return seg + pre + seg + pre
+        bound = seg + pre + seg + pre
+        if self._sd is not None:
+            # draft/verify/rollback round grids (segments themselves
+            # never dispatch on a spec engine, but their term stays in
+            # the base bound), plus the draft prefill and draft replay
+            # chunk grids
+            bound += 3 * seg + pre + seg
+        return bound
 
     def _warmup_prefill_inputs(self, bb: int, sb: int,
                                eb: Optional[int] = None):
@@ -1823,33 +2315,84 @@ class ServeEngine:
             state0 = jax.device_put(
                 state0, dshard.to_shardings(self._plan.state_specs(),
                                             self._plan.mesh))
-        for bb in self.batch_buckets:
-            for t_b in (self.len_buckets or (None,)):
-                key = ("segment", bb, t_b, self.segment_len)
-                if key in self._graphs:
-                    continue
-                # feed the segment the same state the serve loop will:
-                # the live slot state (plan-sharded on a mesh) for the
-                # "fast" full combo, a slice_live view otherwise --
-                # compiling on a fresh unsharded init_state would leave
-                # the sharded variant to lazy-compile mid-traffic
-                fast = (bb == self.n_slots
-                        and t_b in (None, self.max_cache_len))
-                cache = state0 if fast else \
-                    self._spec.slice_live(state0, bb, t_b)
-                out = self._bundle.segment(
-                    self.params, jnp.zeros((bb, 1), jnp.int32), cache,
-                    jnp.zeros((bb,), jnp.int32), jnp.zeros((bb,), bool),
-                    self.segment_len)
-                jax.block_until_ready(out[0])
-                self._graphs.add(key)
-                n += 1
-                # also pre-compile the eager merge wrapper a non-"fast"
-                # segment step runs on the FULL slot state, with the
-                # segment's own output sub-state as the merge source --
-                # exactly the operands the serve loop hands it
-                if not fast:
-                    state0 = self._spec.merge_live(state0, out[2], bb, t_b)
+        if self._sd is None:
+            for bb in self.batch_buckets:
+                for t_b in (self.len_buckets or (None,)):
+                    key = ("segment", bb, t_b, self.segment_len)
+                    if key in self._graphs:
+                        continue
+                    # feed the segment the same state the serve loop
+                    # will: the live slot state (plan-sharded on a mesh)
+                    # for the "fast" full combo, a slice_live view
+                    # otherwise -- compiling on a fresh unsharded
+                    # init_state would leave the sharded variant to
+                    # lazy-compile mid-traffic
+                    fast = (bb == self.n_slots
+                            and t_b in (None, self.max_cache_len))
+                    cache = state0 if fast else \
+                        self._spec.slice_live(state0, bb, t_b)
+                    out = self._bundle.segment(
+                        self.params, jnp.zeros((bb, 1), jnp.int32), cache,
+                        jnp.zeros((bb,), jnp.int32),
+                        jnp.zeros((bb,), bool),
+                        sampling.null_operand(bb), self.segment_len)
+                    jax.block_until_ready(out[0])
+                    self._graphs.add(key)
+                    n += 1
+                    # also pre-compile the eager merge wrapper a
+                    # non-"fast" segment step runs on the FULL slot
+                    # state, with the segment's own output sub-state as
+                    # the merge source -- exactly the operands the serve
+                    # loop hands it
+                    if not fast:
+                        state0 = self._spec.merge_live(state0, out[2],
+                                                       bb, t_b)
+        else:
+            # a spec-decode engine never dispatches plain segments: warm
+            # the draft/verify(/rollback) round grid instead, on the same
+            # state shapes _spec_round slices
+            k = self._sd.k
+            dstate0 = self._draft_spec.init_state(self.n_slots,
+                                                  self.max_cache_len)
+            if self._draft_plan is not None:
+                dstate0 = jax.device_put(
+                    dstate0,
+                    dshard.to_shardings(self._draft_plan.state_specs(),
+                                        self._draft_plan.mesh))
+            for bb in self.batch_buckets:
+                for t_b in (self.len_buckets or (None,)):
+                    key = ("verify", bb, t_b, k + 1)
+                    if key in self._graphs:
+                        continue
+                    fast = (bb == self.n_slots
+                            and t_b in (None, self.max_cache_len))
+                    d_in = dstate0 if fast else \
+                        self._draft_spec.slice_live(dstate0, bb, t_b)
+                    c_in = state0 if fast else \
+                        self._spec.slice_live(state0, bb, t_b)
+                    samp = sampling.null_operand(bb)
+                    zt = jnp.zeros((bb, 1), jnp.int32)
+                    zp = jnp.zeros((bb,), jnp.int32)
+                    za = jnp.zeros((bb,), bool)
+                    d_seq, d_cache, d_snaps = self._dfns.draft(
+                        self._draft_params, zt, d_in, zp, za, samp, k + 1)
+                    xs = jnp.concatenate([zt[None], d_seq[:k, :, None]],
+                                         axis=0)
+                    out = self._sfns.verify(self.params, c_in, zp, za,
+                                            samp, xs)
+                    if self._draft_const:
+                        d_cache = self._dfns.rollback(d_cache, d_snaps,
+                                                      out[1])
+                        self._graphs.add(("rollback", bb, t_b, k + 1))
+                    jax.block_until_ready(out[0])
+                    self._graphs.add(("draft", bb, t_b, k + 1))
+                    self._graphs.add(key)
+                    n += 2
+                    if not fast:
+                        state0 = self._spec.merge_live(state0, out[2],
+                                                       bb, t_b)
+                        dstate0 = self._draft_spec.merge_live(
+                            dstate0, d_cache, bb, t_b)
         if self._chaos is not None or "score" in methods:
             # a chaos-armed engine WILL recover, and recovery replays
             # through single-token chunk dispatches: pre-compile that grid
@@ -1870,6 +2413,19 @@ class ServeEngine:
                     jax.block_until_ready(out[0])
                     self._graphs.add(key)
                     n += 1
+                    if self._sd is not None:
+                        # replay advances the draft through the same
+                        # single-token grid
+                        dcache = self._draft_spec.init_state(
+                            bb, t_b or self.max_cache_len)
+                        dout = self._draft_bundle.chunk_step(
+                            self._draft_params,
+                            jnp.zeros((bb, 1), jnp.int32), dcache,
+                            jnp.zeros((bb,), jnp.int32),
+                            jnp.zeros((bb,), bool))
+                        jax.block_until_ready(dout[0])
+                        self._graphs.add(("dchunk", bb, 1, t_b))
+                        n += 1
         if prompt_lens is None:
             return n
         sbs = sorted({scheduler.bucket_pow2(pl,
@@ -1905,6 +2461,16 @@ class ServeEngine:
                     jax.block_until_ready(out[0])
                     self._graphs.add(key)
                     n += 1
+                    if self._sd is not None:
+                        dkey = ("dprefill", bb, sb, t_pre)
+                        if dkey not in self._graphs:
+                            dout = self._draft_bundle.prefill(
+                                self._draft_params,
+                                self._warmup_prefill_inputs(bb, sb, eb),
+                                lens - 1, t_pre, None)
+                            jax.block_until_ready(dout[0])
+                            self._graphs.add(dkey)
+                            n += 1
         if "embed" in methods:
             for bb in self.admission_batch_buckets:
                 for sb in sbs:
@@ -2002,6 +2568,7 @@ class ServeEngine:
             "lowerings": dict(self._lowerings),
             "decode_bundle_lru": serve.decode_cache_info(),
             "robustness": dict(self._robust),
+            "dispatch_sites": dict(self._site_counts),
             "admission": {
                 "token_budget": self._admit_budget,
                 "deferrals": self._deferrals,
@@ -2022,6 +2589,17 @@ class ServeEngine:
         }
         if self._prefix is not None:
             info["prefix_cache"] = self._prefix.info()
+        if self._sd is not None:
+            s = dict(self._spec_stats)
+            s["k"] = self._sd.k
+            s["draft"] = getattr(self._sd.draft_cfg, "name",
+                                 str(self._sd.draft_cfg))
+            s["acceptance_rate"] = (s["accepted"] / s["drafted"]) \
+                if s["drafted"] else 0.0
+            s["tokens_per_dispatch"] = (
+                s["emitted"] / s["target_dispatches"]) \
+                if s["target_dispatches"] else 0.0
+            info["spec_decode"] = s
         chaos = info["resilience"]["chaos"]
         if chaos is not None and isinstance(self._chaos,
                                             delastic.DeviceLossInjector):

@@ -144,19 +144,22 @@ class AsyncFrontend:
                        rid: Optional[int] = None,
                        stop_tokens: Optional[Sequence[int]] = None,
                        features=None,
-                       deadline: Optional[float] = None
-                       ) -> res.RequestResult:
-        """Non-streaming generation; resolves to the structured result."""
+                       deadline: Optional[float] = None,
+                       sampling=None) -> res.RequestResult:
+        """Non-streaming generation; resolves to the structured result.
+        `sampling` is an optional scheduler.SamplingParams (temperature /
+        top-k / top-p / seed); None means greedy."""
         return await self._call(methods.generate_request(
             self._new_rid(rid), prompt, max_new_tokens,
             arrival_time=self.clock.now(), stop_tokens=stop_tokens,
-            features=features, deadline=deadline))
+            features=features, deadline=deadline, sampling=sampling))
 
     async def generate_stream(self, prompt, max_new_tokens: int, *,
                               rid: Optional[int] = None,
                               stop_tokens: Optional[Sequence[int]] = None,
                               features=None,
-                              deadline: Optional[float] = None):
+                              deadline: Optional[float] = None,
+                              sampling=None):
         """Async iterator of generated tokens, published per segment as
         they are harvested.  Exiting the iteration early (client
         disconnect) cancels the request: its slot frees mid-stream and

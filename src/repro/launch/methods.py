@@ -48,12 +48,17 @@ def generate_request(rid: int, prompt, max_new_tokens: int, *,
                      arrival_time: float = 0.0,
                      stop_tokens: Optional[Sequence[int]] = None,
                      features=None,
-                     deadline: Optional[float] = None) -> scheduler.Request:
+                     deadline: Optional[float] = None,
+                     sampling: Optional[scheduler.SamplingParams] = None,
+                     ) -> scheduler.Request:
+    """`sampling` carries the per-request policy (temperature / top-k /
+    top-p / seed, launch/sampling.py); None (the default) is greedy and
+    bit-identical to the pre-sampling engine."""
     return scheduler.Request(rid=rid, prompt=np.asarray(prompt, np.int32),
                              max_new_tokens=int(max_new_tokens),
                              arrival_time=arrival_time,
                              stop_tokens=stop_tokens, features=features,
-                             deadline=deadline)
+                             deadline=deadline, sampling=sampling)
 
 
 def score_request(rid: int, prompt, completion: Sequence[int], *,

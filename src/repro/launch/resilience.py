@@ -141,8 +141,10 @@ class ChaosSchedule(FailureInjector):
     seed: int = 0
     max_failures: Optional[int] = None
 
-    # the engine's guarded dispatch kinds (launch/engine.py _guarded)
-    SITE_KINDS = frozenset({"segment", "prefill", "chunk", "embed"})
+    # the engine's guarded dispatch kinds (launch/engine.py _guarded);
+    # draft/verify are the speculative-decode round's dispatches
+    SITE_KINDS = frozenset({"segment", "prefill", "chunk", "embed",
+                            "draft", "verify"})
 
     def should_fail(self, site: str) -> bool:
         if site in self.fail_at_sites:
@@ -195,7 +197,8 @@ class ChaosSchedule(FailureInjector):
                 if kind not in cls.SITE_KINDS or not idx.isdigit():
                     raise ValueError(
                         f"REPRO_CHAOS: bad site {tok!r} (want "
-                        f"segment:N, prefill:N, chunk:N or embed:N)")
+                        f"segment:N, prefill:N, chunk:N, embed:N, "
+                        f"draft:N or verify:N)")
                 sites.append(tok)
             else:
                 raise ValueError(f"REPRO_CHAOS: cannot parse token {tok!r}")
@@ -249,6 +252,16 @@ def _encode_requests(requests: Sequence[Any]) -> Tuple[list, dict]:
             "has_features": r.features is not None,
             "method": r.method,
             "has_score_tokens": r.score_tokens is not None,
+            # per-request sampling policy (launch/sampling.py): the
+            # counter-based keys need only these scalars, so a restored
+            # sampled request replays -- and then continues -- its exact
+            # stream with no sampler state in the snapshot
+            "sampling": None if r.sampling is None else {
+                "temperature": float(r.sampling.temperature),
+                "top_k": int(r.sampling.top_k),
+                "top_p": float(r.sampling.top_p),
+                "seed": int(r.sampling.seed),
+            },
         })
     return tree, {"requests": meta}
 
@@ -299,7 +312,9 @@ def restore_requests(ckpt_dir: str, step: Optional[int] = None) -> list:
             deadline=e["deadline"],
             method=e.get("method", "generate"),
             score_tokens=[int(t) for t in np.asarray(leaf["score_tokens"])]
-            if e.get("has_score_tokens") else None)
+            if e.get("has_score_tokens") else None,
+            sampling=None if e.get("sampling") is None
+            else scheduler.SamplingParams(**e["sampling"]))
         req.tokens = [int(t) for t in np.asarray(leaf["tokens"])]
         req.retries = e["retries"]
         out.append(req)

@@ -87,6 +87,37 @@ def bucket_set(minimum: int, maximum: int) -> tuple:
 # requests
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling policy (launch/sampling.py executes it).
+
+    temperature <= 0 selects greedy argmax -- bit-identical to the
+    pre-sampling engine.  With temperature > 0, logits are divided by the
+    temperature, truncated to the `top_k` highest entries (0 = disabled)
+    and to the smallest `top_p` nucleus (1.0 = disabled), and sampled via
+    Gumbel-max with a counter-based key folded from (seed, rid, token
+    index) -- so a request's stream is a pure function of (seed, rid,
+    token prefix), which is what lets chaos recovery replay and
+    prefix-cache warm runs reproduce byte-identical sampled tokens."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
 @dataclasses.dataclass(eq=False)      # identity eq: prompt arrays don't
 class Request:                        # support elementwise == in `in`/remove
     """One generation request.  `prompt` is a 1-D int token array; the
@@ -114,6 +145,9 @@ class Request:                        # support elementwise == in `in`/remove
     deadline: Optional[float] = None
     method: str = "generate"
     score_tokens: Optional[Sequence[int]] = None
+    # per-request sampling policy; None means greedy (generate only --
+    # score teacher-forces and embed never samples)
+    sampling: Optional[SamplingParams] = None
     # filled in by the engine:
     tokens: List[int] = dataclasses.field(default_factory=list)
     first_token_time: Optional[float] = None
@@ -145,6 +179,15 @@ class Request:                        # support elementwise == in `in`/remove
             raise ValueError(
                 f"request {self.rid}: score_tokens only valid with "
                 f"method='score'")
+        if self.sampling is not None:
+            if not isinstance(self.sampling, SamplingParams):
+                raise ValueError(
+                    f"request {self.rid}: sampling must be a "
+                    f"SamplingParams, got {type(self.sampling).__name__}")
+            if self.method != "generate" and not self.sampling.greedy:
+                raise ValueError(
+                    f"request {self.rid}: sampling is generate-only "
+                    f"(method {self.method!r} never samples)")
 
     @property
     def prompt_len(self) -> int:
@@ -246,11 +289,15 @@ def synthetic_traffic(seed: int, n_requests: int, rate: float,
                       prompt_lens: Sequence[int], gen_lens: Sequence[int],
                       vocab: int,
                       ttls: Optional[Sequence[Optional[float]]] = None,
+                      sampling_mix: Optional[Sequence[
+                          Optional[SamplingParams]]] = None,
                       ) -> List[Request]:
     """Poisson arrivals (exponential inter-arrival gaps at `rate` req/s)
     with prompt/gen lengths drawn uniformly from the given mixes.  With
     `ttls`, each request draws a TTL from the mix (None entries mean no
-    deadline) -- the deadline mix for resilience benchmarks/tests."""
+    deadline) -- the deadline mix for resilience benchmarks/tests.  With
+    `sampling_mix`, each request draws a SamplingParams from the mix
+    (None entries mean greedy) -- the policy mix for sampling tests."""
     rng = np.random.default_rng(seed)
     t = 0.0
     reqs = []
@@ -263,8 +310,12 @@ def synthetic_traffic(seed: int, n_requests: int, rate: float,
         if ttls is not None:
             ttl = ttls[int(rng.integers(0, len(ttls)))]
             deadline = None if ttl is None else t + float(ttl)
+        sampling = None
+        if sampling_mix is not None:
+            sampling = sampling_mix[int(rng.integers(0, len(sampling_mix)))]
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=gl,
-                            arrival_time=t, deadline=deadline))
+                            arrival_time=t, deadline=deadline,
+                            sampling=sampling))
     return reqs
 
 

@@ -70,6 +70,7 @@ from repro import configs
 from repro import core as silvia
 from repro.kernels import ops as kops
 from repro.kernels import registry
+from repro.launch import sampling as sampling_lib
 from repro.models import lm
 from repro.quant.qtensor import quantize_tree_for_serving
 
@@ -178,10 +179,30 @@ def _decode_bundle(cfg, silvia_passes: str):
                                         jnp.arange(n_steps))
             return seq, kv
 
+        # per-request sampling variant: its own jitted graph, so the
+        # greedy fused_loop above stays byte-for-byte the pre-sampling
+        # program (greedy rows INSIDE a sampled batch still take the
+        # argmax select in sampling.sample)
+        @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(2,))
+        def sampled_loop(params, tok0, cache, pos0, samp, n_steps):
+            key, temp, top_k, top_p, plen = samp
+
+            def step(carry, i):
+                tok, kv = carry
+                logits, kv = decode_fn(params, tok, kv, pos0 + i)
+                nxt = sampling_lib.sample(logits[:, -1, :], key, temp,
+                                          top_k, top_p, pos0 + i - plen + 1)
+                return (nxt[:, None], kv), nxt[:, None]
+
+            (_, kv), seq = jax.lax.scan(step, (tok0, cache),
+                                        jnp.arange(n_steps))
+            return seq, kv
+
         decode_jit = jax.jit(decode_fn, donate_argnums=(2,))
         return (_pin_lowerings(decode_fn, census),
                 _pin_lowerings(decode_jit, census),
-                _pin_lowerings(fused_loop, census))
+                _pin_lowerings(fused_loop, census),
+                _pin_lowerings(sampled_loop, census))
 
     return _DECODE_CACHE.get_or_build(
         (cfg, silvia_passes, tuple(sorted(census.items()))), build)
@@ -197,28 +218,55 @@ def get_decode_step(cfg, silvia_passes: str = "off"):
 
 
 def generate(params, prompts, cfg, *, gen: int, cache_len: int,
-             silvia_passes="off", fused: bool = True):
-    """Greedy generation: prefill + gen decode steps.
+             silvia_passes="off", fused: bool = True,
+             sampling=None, rids=None):
+    """Generation: prefill + gen decode steps (greedy by default).
 
     prompts: [B,S] int tokens; encdec families take a tuple
     (features [B,S_enc,d_model], dec_tokens [B,S]) instead.
     fused=True runs the whole decode phase as one `jax.lax.scan` dispatch
-    (state cache donated); fused=False is the per-step reference loop."""
+    (state cache donated); fused=False is the per-step reference loop.
+    `sampling` takes one scheduler.SamplingParams (or None = greedy) per
+    row, with `rids` giving each row's request id for key derivation
+    (default: the row index) -- the static reference the engine's sampled
+    streams are tested against.  All-greedy batches take the original
+    argmax graphs untouched."""
     b, s = (prompts[1] if cfg.family == "encdec" else prompts).shape
     logits, cache = lm.prefill(params, prompts, cfg, cache_len=cache_len)
-    _, decode_jit, fused_loop = _decode_bundle(cfg, silvia_passes)
+    _, decode_jit, fused_loop, sampled_loop = _decode_bundle(
+        cfg, silvia_passes)
 
-    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    samp = sampling_lib.static_operand(sampling, s, rids) \
+        if sampling is not None else None
     pos = jnp.full((b,), s, jnp.int32)
+    if samp is None:
+        tok = jnp.argmax(logits[:, -1, :],
+                         axis=-1).astype(jnp.int32)[:, None]
+        if fused:
+            seq, _ = fused_loop(params, tok, cache, pos, gen - 1)
+            # seq: [gen-1, B, 1] of generated tokens, in step order
+            return jnp.concatenate([tok, jnp.moveaxis(seq[:, :, 0], 0, 1)],
+                                   axis=1)
+        out = [tok]
+        for i in range(gen - 1):
+            logits, cache = decode_jit(params, tok, cache, pos + i)
+            tok = jnp.argmax(logits[:, -1, :],
+                             axis=-1).astype(jnp.int32)[:, None]
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)
+    key, temp, top_k, top_p, _ = samp
+    tok = sampling_lib.sample(logits[:, -1, :], key, temp, top_k, top_p,
+                              jnp.zeros((b,), jnp.int32))[:, None]
     if fused:
-        seq, _ = fused_loop(params, tok, cache, pos, gen - 1)
-        # seq: [gen-1, B, 1] of generated tokens, in step order
+        seq, _ = sampled_loop(params, tok, cache, pos, samp, gen - 1)
         return jnp.concatenate([tok, jnp.moveaxis(seq[:, :, 0], 0, 1)],
                                axis=1)
     out = [tok]
     for i in range(gen - 1):
         logits, cache = decode_jit(params, tok, cache, pos + i)
-        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        tok = sampling_lib.sample(logits[:, -1, :], key, temp, top_k,
+                                  top_p,
+                                  jnp.full((b,), i + 1, jnp.int32))[:, None]
         out.append(tok)
     return jnp.concatenate(out, axis=1)
 

@@ -22,14 +22,12 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import checkpoint, configs
 from repro.data import DataConfig, make_stream
 from repro.distributed.fault import (FailureInjector, RestartPolicy,
                                      SimulatedFailure, StragglerDetector)
-from repro.distributed.sharding import (batch_pspec, param_pspecs,
-                                        to_shardings)
+from repro.distributed.sharding import param_pspecs, to_shardings
 from repro.launch.mesh import make_mesh
 from repro.models import lm
 from repro.optim import AdamWConfig, adamw_init

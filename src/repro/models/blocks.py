@@ -15,8 +15,6 @@ O(1) in depth -- essential for the 80-layer / 480B dry-runs):
 """
 from __future__ import annotations
 
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 

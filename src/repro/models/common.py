@@ -1,9 +1,6 @@
 """Shared model components: norms, rotary embeddings, initializers."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -13,7 +13,6 @@ KV in the cache.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax

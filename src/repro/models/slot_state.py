@@ -190,6 +190,54 @@ class SlotStateSpec:
             return jnp.take(leaf, perm, axis=ba)
         return self._apply(f, state)
 
+    # -- speculative-decode rollback (launch/engine.py) ----------------------
+    #
+    # Accepting m of k drafted tokens is a masked slot_state update, the
+    # same mechanism quarantine scrubbing already uses: leaves WITH a
+    # length axis need no rollback at all -- rows written past the
+    # accepted position are stale-but-masked, the engine's exactness
+    # invariant -- while constant-size leaves (SSM recurrent state, conv
+    # windows, cross-KV) are restored from per-step snapshots, so
+    # ssm/hybrid rollback is a snapshot-restore of one page.
+
+    def const_leaves(self, state) -> tuple:
+        """The constant-size (length_axis=None) leaves of `state` in
+        tree_flatten order -- what a speculative scan snapshots per step
+        (cheap precisely because these pages are fixed-size)."""
+        leaves, td = jax.tree_util.tree_flatten(state)
+        if td != self.treedef:
+            raise ValueError(
+                f"state tree mismatch for family {self.family!r}: "
+                f"got {td}, spec has {self.treedef}")
+        return tuple(leaf for leaf, la in zip(leaves, self.length_axes)
+                     if la is None)
+
+    def rollback_select(self, state, snaps, idx):
+        """Roll `state` back to per-slot snapshot index `idx` ([n_slots]
+        int): length-axis leaves pass through unchanged, each
+        constant-size leaf i is replaced by `snaps[i][idx[slot]]` per
+        slot (snapshot leaves carry a LEADING step axis, as stacked by
+        `lax.scan` over const_leaves).  Traceable -- runs under jit and
+        shard_map with a traced idx."""
+        leaves, td = jax.tree_util.tree_flatten(state)
+        if td != self.treedef:
+            raise ValueError(
+                f"state tree mismatch for family {self.family!r}: "
+                f"got {td}, spec has {self.treedef}")
+        it = iter(snaps)
+        out = []
+        for leaf, ba, la in zip(leaves, self.batch_axes, self.length_axes):
+            if la is not None:
+                out.append(leaf)
+                continue
+            snap = next(it)
+            shape = [1] * snap.ndim
+            shape[ba + 1] = snap.shape[ba + 1]
+            sel = jnp.take_along_axis(
+                snap, jnp.reshape(idx.astype(jnp.int32), shape), axis=0)
+            out.append(jnp.squeeze(sel, axis=0))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
     # -- prefix pages (launch/prefix_cache.py) ------------------------------
     #
     # A "prefix page" is the per-slot, per-leaf slice of state that a token

@@ -5,7 +5,6 @@ clipping.  Pure pytree-functional: states shard exactly like params.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

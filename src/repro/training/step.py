@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -109,3 +109,22 @@ def test_missing_results_dir_fails(dirs, capsys, tmp_path):
     missing = tmp_path / "never-created"
     assert bench_compare.compare(base, missing, 0.30) == 1
     assert "does not exist" in capsys.readouterr().out
+
+
+def test_spec_decode_metric_gates_without_host_class(dirs, capsys):
+    """The spec_decode baseline is committed WITHOUT a host_class stamp
+    (tokens_per_dispatch is deterministic), so it must compare against a
+    stamped candidate instead of skipping."""
+    base, cur = dirs
+    _write(base, "spec_decode_dense_smoke",
+           {"spec_decode": {"tokens_per_dispatch": 10.5}})
+    _write(cur, "spec_decode_dense_smoke",
+           {"spec_decode": {"tokens_per_dispatch": 10.5},
+            "host_class": "test-host"})
+    assert bench_compare.compare(base, cur, 0.30) == 0
+    assert "OK spec_decode_dense_smoke" in capsys.readouterr().out
+    _write(cur, "spec_decode_dense_smoke",
+           {"spec_decode": {"tokens_per_dispatch": 1.0},
+            "host_class": "test-host"})
+    assert bench_compare.compare(base, cur, 0.30) == 1
+    assert "FAIL spec_decode_dense_smoke" in capsys.readouterr().out

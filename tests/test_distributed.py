@@ -6,9 +6,8 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
-from repro.distributed.sharding import (batch_pspec, cache_pspecs,
-                                        param_pspecs, sanitize_spec,
-                                        to_shardings)
+from repro.distributed.sharding import (cache_pspecs, param_pspecs,
+                                        sanitize_spec, to_shardings)
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_mesh
 from repro.models import lm
@@ -20,8 +19,6 @@ def _mesh11():
 
 
 def test_sanitize_spec_divisibility():
-    mesh = make_mesh((1, 1), ("data", "model"))
-
     class FakeMesh:
         shape = {"data": 16, "model": 16}
 
@@ -85,7 +82,7 @@ def test_quantized_param_specs():
 
 def test_sharded_train_step_runs_on_1x1():
     """End-to-end: jit with explicit shardings executes on the tiny mesh."""
-    from repro.optim import AdamWConfig, adamw_init
+    from repro.optim import adamw_init
     from repro.training import TrainConfig, make_train_step
 
     cfg = configs.get_reduced_config("smollm-135m")

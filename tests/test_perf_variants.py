@@ -5,7 +5,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.distributed import context

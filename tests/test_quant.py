@@ -4,9 +4,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
-
 from repro import quant
 from repro.quant.qtensor import (QTensor, qmatmul, quantize_tree_for_serving,
                                  quantize_weight)

@@ -1,0 +1,240 @@
+"""Per-request sampling policies (launch/sampling.py): constant-size
+slot-page registration, greedy bit-parity with the pre-sampling engine,
+sampled-stream determinism (engine == static == repeat run), chaos-replay
+byte-identity, and prefix-cache warm-run identity.
+
+The contract under test is ISSUE/DESIGN sec. 12's purity obligation:
+every sampled token is a pure function of (seed, rid, token index,
+logits row), so recovery replay and warm admissions RECOMPUTE the same
+bytes instead of restoring sampler state."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.launch import resilience as res
+from repro.launch import sampling, scheduler, serve
+from repro.launch.engine import ServeEngine
+from repro.models import lm, slot_state
+from repro.quant.qtensor import quantize_tree_for_serving
+
+SP = scheduler.SamplingParams(temperature=0.9, top_k=8, seed=11)
+SP_NUCLEUS = scheduler.SamplingParams(temperature=0.7, top_p=0.9, seed=3)
+MIX = (SP, None, SP_NUCLEUS, scheduler.GREEDY)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_reduced_config("smollm-135m")
+    params = quantize_tree_for_serving(
+        lm.init_params(jax.random.PRNGKey(0), cfg, max_seq=80), "w8a8")
+    return cfg, params
+
+
+def _requests(cfg, n=6, stagger=0.0, mix=MIX):
+    plens = (5, 12, 9, 16, 7, 11, 6, 14)[:n]
+    gens = (8, 6, 9, 5, 10, 7, 8, 6)[:n]
+    return [scheduler.Request(
+        rid=i,
+        prompt=np.asarray(jax.random.randint(
+            jax.random.PRNGKey(10 * i), (pl,), 0, cfg.vocab)),
+        max_new_tokens=g, arrival_time=stagger * i,
+        sampling=mix[i % len(mix)])
+        for i, (pl, g) in enumerate(zip(plens, gens))]
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_cache_len", 64)
+    kw.setdefault("segment_len", 4)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _assert_bit_exact(ref, out):
+    assert set(ref) == set(out)
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], out[rid])
+
+
+# ---------------------------------------------------------------------------
+# the page: a registered constant-size slot-state family
+# ---------------------------------------------------------------------------
+
+def test_sampling_page_is_constant_size_slot_family():
+    """The probed spec must show slot axis 0 and NO length axis on every
+    leaf -- the page admits/permutes/slices with the model caches but
+    never scales with cache_len (ISSUE: 'constant-size slot page')."""
+    assert "sampling" in slot_state.families()
+    spec = sampling.page_spec()
+    assert all(b == 0 for b in spec.batch_axes)
+    assert all(la is None for la in spec.length_axes)
+    page = spec.init_state(4, 1)
+    assert [leaf.shape[0] for leaf in page] == [4] * len(page)
+
+
+def test_host_page_round_trip():
+    """write/clear/permute keep the host page a faithful slot mirror."""
+    page = sampling.host_page(4)
+    req = scheduler.Request(rid=7, prompt=[1, 2, 3], max_new_tokens=2,
+                            sampling=SP)
+    sampling.write_row(page, 2, req)
+    assert page[1][2] == np.float32(SP.temperature)
+    assert page[2][2] == SP.top_k and page[4][2] == 3
+    assert tuple(page[0][2]) == sampling.base_key(SP.seed, 7)
+    perm = np.asarray([2, 0, 1, 3])
+    page = sampling.permute(page, perm)
+    assert page[2][0] == SP.top_k          # the row moved with its slot
+    sampling.clear_row(page, 0)
+    assert page[1][0] == 0.0 and page[3][0] == 1.0
+
+
+def test_sample_host_matches_batch_row():
+    """One [1,V] host evaluation must equal the same row inside a [B,V]
+    batch -- the property replay verification rests on."""
+    rows = np.asarray(jax.random.normal(jax.random.PRNGKey(5), (4, 64)),
+                      np.float32)
+    key = np.asarray([sampling.base_key(SP.seed, r) for r in range(4)],
+                     np.uint32)
+    batch = sampling.sample(
+        jnp.asarray(rows), jnp.asarray(key),
+        jnp.full((4,), SP.temperature, jnp.float32),
+        jnp.full((4,), SP.top_k, jnp.int32),
+        jnp.full((4,), SP.top_p, jnp.float32),
+        jnp.arange(4, dtype=jnp.int32))
+    for r in range(4):
+        assert int(batch[r]) == sampling.sample_host(rows[r], SP, r, r)
+
+
+# ---------------------------------------------------------------------------
+# engine streams
+# ---------------------------------------------------------------------------
+
+def test_greedy_rows_bit_identical_to_argmax_engine(setup):
+    """Greedy rows in a mixed sampled batch carry the argmax bits -- the
+    pre-sampling engine's stream, unchanged."""
+    cfg, params = setup
+    ref = _engine(cfg, params).run(
+        _requests(cfg, mix=(None,)), clock=scheduler.FastForwardClock())
+    out = _engine(cfg, params).run(
+        _requests(cfg), clock=scheduler.FastForwardClock())
+    for i, r in enumerate(_requests(cfg)):
+        if sampling.is_greedy(r):
+            np.testing.assert_array_equal(out[i], ref[i])
+
+
+def test_sampled_streams_deterministic_across_runs(setup):
+    cfg, params = setup
+    a = _engine(cfg, params).run(_requests(cfg),
+                                 clock=scheduler.FastForwardClock())
+    b = _engine(cfg, params).run(_requests(cfg),
+                                 clock=scheduler.FastForwardClock())
+    _assert_bit_exact(a, b)
+    # and the sampled rows actually differ from greedy (the policy bites)
+    g = _engine(cfg, params).run(_requests(cfg, mix=(None,)),
+                                 clock=scheduler.FastForwardClock())
+    assert any(not np.array_equal(a[i], g[i]) for i in (0, 2, 4)
+               if i in a)
+
+
+def test_engine_matches_static_sampled_path(setup):
+    """Continuous-batching sampled streams == the static serve.generate
+    sampled path with the same (seed, rid) -- batch-composition
+    invariance end to end."""
+    cfg, params = setup
+    n, s, gen = 3, 12, 8
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (n, s), 0, cfg.vocab))
+    mix = [SP, scheduler.GREEDY, SP_NUCLEUS]
+    static = np.asarray(serve.generate(
+        params, jnp.asarray(prompts), cfg, gen=gen, cache_len=32,
+        sampling=mix, rids=list(range(n))))
+    eng = _engine(cfg, params, n_slots=2)   # forces eviction/re-admission
+    out = eng.run([scheduler.Request(rid=i, prompt=prompts[i],
+                                     max_new_tokens=gen, sampling=mix[i])
+                   for i in range(n)])
+    for i in range(n):
+        np.testing.assert_array_equal(out[i], static[i])
+
+
+def test_static_sampled_unfused_matches_fused(setup):
+    cfg, params = setup
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(2), (2, 10), 0, cfg.vocab))
+    kw = dict(gen=6, cache_len=32, sampling=[SP, SP_NUCLEUS], rids=[5, 9])
+    fused = np.asarray(serve.generate(
+        params, jnp.asarray(prompts), cfg, fused=True, **kw))
+    loop = np.asarray(serve.generate(
+        params, jnp.asarray(prompts), cfg, fused=False, **kw))
+    np.testing.assert_array_equal(fused, loop)
+
+
+# ---------------------------------------------------------------------------
+# replay + prefix cache: recompute the same bytes
+# ---------------------------------------------------------------------------
+
+def test_chaos_replay_sampled_streams_bit_exact(setup):
+    """Faults mid-stream: recovery replay must reproduce sampled tokens
+    byte-identically (counter-based keys recompute, nothing restored)."""
+    cfg, params = setup
+    ref = _engine(cfg, params, chaos=None).run(
+        _requests(cfg), clock=scheduler.FastForwardClock())
+    chaos = res.ChaosSchedule(fail_at_sites=("segment:1", "segment:4"))
+    eng = _engine(cfg, params, chaos=chaos)
+    out = eng.run(_requests(cfg), clock=scheduler.FastForwardClock())
+    rb = eng.cache_info()["robustness"]
+    assert rb["faults_injected"] == 2
+    assert rb["replay_divergence"] == 0
+    _assert_bit_exact(ref, out)
+
+
+def test_chaos_rate_schedule_sampled_bit_exact(setup):
+    """The seeded-rate chaos form CI drives via $REPRO_CHAOS."""
+    cfg, params = setup
+    ref = _engine(cfg, params, chaos=None).run(
+        _requests(cfg), clock=scheduler.FastForwardClock())
+    chaos = res.ChaosSchedule(rate=0.5, seed=7, max_failures=4)
+    eng = _engine(cfg, params, chaos=chaos)
+    out = eng.run(_requests(cfg), clock=scheduler.FastForwardClock())
+    assert eng.cache_info()["robustness"]["replay_divergence"] == 0
+    _assert_bit_exact(ref, out)
+
+
+def test_prefix_cache_warm_sampled_streams_match_cold(setup):
+    """Warm admissions over a shared prefix must emit the same sampled
+    bytes as the cold run: the pool stores GREEDY argmax tok0 and
+    policy-free pages; sampled tok0 is recomputed per request from the
+    final prefill row."""
+    cfg, params = setup
+
+    def reqs():
+        base = scheduler.shared_prefix_traffic(
+            seed=4, n_requests=8, rate=1e9, n_prefixes=2, prefix_len=8,
+            tail_lens=(3, 5), gen_lens=(6, 8), vocab=cfg.vocab)
+        for i, r in enumerate(base):
+            r.sampling = MIX[i % len(MIX)]
+        return base
+
+    cold = _engine(cfg, params, prefill_chunk=4).run(
+        reqs(), clock=scheduler.FastForwardClock())
+    eng = _engine(cfg, params, prefill_chunk=4, prefix_cache=64)
+    warm = eng.run(reqs(), clock=scheduler.FastForwardClock())
+    info = eng.cache_info()["prefix_cache"]
+    assert info["hits"] > 0                 # chain sharing engaged
+    _assert_bit_exact(cold, warm)
+
+
+def test_snapshot_restore_preserves_sampling(setup, tmp_path):
+    """resilience snapshot/restore round-trips SamplingParams so a
+    restarted engine resumes the same sampled stream."""
+    cfg, params = setup
+    ref = _engine(cfg, params).run(
+        _requests(cfg), clock=scheduler.FastForwardClock())
+    eng = _engine(cfg, params)
+    for r in _requests(cfg):
+        eng.submit(r)
+    eng.snapshot(str(tmp_path), step=1)
+    eng2 = _engine(cfg, params)
+    assert eng2.restore(str(tmp_path)) == len(ref)
+    out = eng2.run(clock=scheduler.FastForwardClock())
+    _assert_bit_exact(ref, out)

@@ -1,0 +1,104 @@
+"""Hypothesis properties for per-request sampling (launch/sampling.py):
+
+* random greedy/temperature/top-p policy mixes under random seeded-rate
+  chaos fault schedules must stream BYTE-IDENTICAL tokens to the
+  fault-free run (replay recomputes sampled tokens from counter-based
+  keys -- DESIGN.md sec. 12's purity obligation); and
+* an explicit greedy SamplingParams must equal the argmax (sampling=None)
+  bits for ALL four model families -- the `jnp.where` greedy select is
+  the literal pre-sampling op, not a temperature->0 limit."""
+import numpy as np
+import jax
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch import resilience as res  # noqa: E402
+from repro.launch import scheduler  # noqa: E402
+from repro.launch.engine import ServeEngine  # noqa: E402
+from repro.models import lm  # noqa: E402
+
+FAMILY_ARCHS = {"dense": "smollm-135m", "ssm": "mamba2-2.7b",
+                "hybrid": "jamba-v0.1-52b", "encdec": "whisper-small"}
+ENC_LEN = 16
+N_REQS = 4
+_SETUP = {}
+
+
+def _setup(fam):
+    if fam not in _SETUP:
+        cfg = configs.get_reduced_config(FAMILY_ARCHS[fam])
+        _SETUP[fam] = (cfg, lm.init_params(jax.random.PRNGKey(0), cfg,
+                                           max_seq=80))
+    return _SETUP[fam]
+
+
+def _requests(cfg, mix):
+    plens = (5, 12, 9, 7)
+    gens = (6, 5, 7, 6)
+    reqs = []
+    for i in range(N_REQS):
+        kw = {}
+        if cfg.family == "encdec":
+            rng = np.random.default_rng(i)
+            kw["features"] = rng.standard_normal(
+                (ENC_LEN, cfg.d_model)).astype(np.float32)
+        reqs.append(scheduler.Request(
+            rid=i,
+            prompt=np.asarray(jax.random.randint(
+                jax.random.PRNGKey(10 * i), (plens[i],), 0, cfg.vocab)),
+            max_new_tokens=gens[i], sampling=mix[i], **kw))
+    return reqs
+
+
+def _engine(cfg, params, **kw):
+    if cfg.family == "encdec":
+        kw.setdefault("enc_len", ENC_LEN)
+    return ServeEngine(params, cfg, n_slots=2, max_cache_len=64,
+                       segment_len=4, **kw)
+
+
+# fixed menus keep jit cache reuse high across examples (policies are
+# device OPERANDS -- values, not shapes -- so any mix shares the graphs)
+policy = st.one_of(
+    st.none(),
+    st.just(scheduler.GREEDY),
+    st.builds(scheduler.SamplingParams,
+              temperature=st.sampled_from((0.3, 0.8, 1.2)),
+              top_k=st.sampled_from((0, 4, 8)),
+              top_p=st.sampled_from((0.85, 1.0)),
+              seed=st.integers(0, 3)))
+
+
+@settings(max_examples=5, deadline=None)
+@given(mix=st.lists(policy, min_size=N_REQS, max_size=N_REQS),
+       chaos_seed=st.integers(0, 100),
+       rate=st.sampled_from((0.3, 0.6)))
+def test_random_mix_survives_random_chaos_byte_identical(
+        mix, chaos_seed, rate):
+    cfg, params = _setup("dense")
+    ref = _engine(cfg, params, chaos=None).run(
+        _requests(cfg, mix), clock=scheduler.FastForwardClock())
+    chaos = res.ChaosSchedule(rate=rate, seed=chaos_seed, max_failures=3)
+    eng = _engine(cfg, params, chaos=chaos)
+    out = eng.run(_requests(cfg, mix), clock=scheduler.FastForwardClock())
+    assert eng.cache_info()["robustness"]["replay_divergence"] == 0
+    assert set(ref) == set(out)
+    for rid in ref:
+        np.testing.assert_array_equal(ref[rid], out[rid])
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_explicit_greedy_equals_argmax_bits_all_families(family):
+    cfg, params = _setup(family)
+    mix_none = [None] * N_REQS
+    mix_greedy = [scheduler.SamplingParams(temperature=0.0)] * N_REQS
+    a = _engine(cfg, params).run(_requests(cfg, mix_none),
+                                 clock=scheduler.FastForwardClock())
+    b = _engine(cfg, params).run(_requests(cfg, mix_greedy),
+                                 clock=scheduler.FastForwardClock())
+    assert set(a) == set(b)
+    for rid in a:
+        np.testing.assert_array_equal(a[rid], b[rid])

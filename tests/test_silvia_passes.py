@@ -2,12 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import core as silvia
 from repro.core import bounds, opcount
-from repro.core.prims import (silvia_packed_add_p, silvia_packed_muladd_p,
-                              silvia_packed_mul4_p)
+from repro.core.prims import silvia_packed_mul4_p
 
 
 def i8(rng, shape, lo=-128, hi=128):

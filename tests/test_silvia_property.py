@@ -87,8 +87,6 @@ def test_density_never_decreases(opcodes, seed):
     assert after.mul_ops <= before.mul_ops
     # every packed unit must carry > 1 op on average for its category
     if after.packed_units:
-        packed_ops = (after.mul_ops + after.add_ops
-                      - (before.mul_ops - after.mul_ops))
         assert after.packed_units <= before.mul_units + before.add_units
 
 

@@ -25,8 +25,11 @@ def _setup(fam):
 
 
 def test_all_registered_families_covered():
-    assert set(MASK_FAMILIES) >= set(slot_state.families()) - {"vlm"}
-    # vlm shares the dense block/cache path verbatim (BLOCK_FNS in lm.py)
+    assert set(MASK_FAMILIES) >= set(slot_state.families()) - {
+        "vlm", "sampling"}
+    # vlm shares the dense block/cache path verbatim (BLOCK_FNS in lm.py);
+    # "sampling" is engine metadata (per-slot RNG key + policy scalars,
+    # launch/sampling.py) with no decode step to mask.
 
 
 @settings(max_examples=10, deadline=None)

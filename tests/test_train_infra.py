@@ -9,7 +9,7 @@ import pytest
 
 from repro import checkpoint, configs
 from repro.data import DataConfig, make_stream
-from repro.distributed.fault import (FailureInjector, Heartbeat,
+from repro.distributed.fault import (Heartbeat,
                                      SimulatedFailure, StragglerDetector)
 from repro.models import lm
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
@@ -90,7 +90,6 @@ def test_data_deterministic_per_step():
 
 
 def test_data_host_sharding():
-    full = make_stream(DataConfig(16, 4, 100, seed=1))
     h0 = make_stream(DataConfig(16, 4, 100, seed=1, n_hosts=2, host_id=0))
     h1 = make_stream(DataConfig(16, 4, 100, seed=1, n_hosts=2, host_id=1))
     assert h0.batch_at(5).shape == (2, 17)
